@@ -1,0 +1,81 @@
+"""Benchmark: Pallas kernels vs jnp references.
+
+NOTE: on this CPU container kernels run through the Pallas INTERPRETER —
+absolute times are meaningless for TPU; we report them for regression
+tracking plus the reference path times (XLA:CPU) for the same shapes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as tree_lib
+from repro.kernels import ref as ref_lib
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gather_scores import gather_scores
+from repro.kernels.tree_logprob import tree_logprob_all
+
+
+def _time_fn(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv_rows: list):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    # flash attention, small training shape
+    b, h, s, hd = 1, 4, 256, 64
+    q = jax.random.normal(ks[0], (b, h, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, s, hd), jnp.float32)
+    f_ref = jax.jit(lambda q, k, v: ref_lib.flash_attention_ref(
+        q, k, v, causal=True))
+    csv_rows.append(("kernel/flash_attention/ref_xla",
+                     _time_fn(f_ref, q, k, v), f"B{b}H{h}S{s}D{hd}"))
+    f_pl = jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, causal=True, blk_q=64, blk_k=64, interpret=True))
+    csv_rows.append(("kernel/flash_attention/pallas_interpret",
+                     _time_fn(f_pl, q, k, v), "interpreter-on-CPU"))
+
+    # tree logprob (dense)
+    c, kdim, bt = 4096, 16, 256
+    tr = tree_lib.init_tree(ks[0], c, kdim, scale=0.1)
+    x = jax.random.normal(ks[1], (bt, kdim))
+    t_ref = jax.jit(lambda w, bb, xx: ref_lib.tree_logprob_all_ref(w, bb,
+                                                                   xx))
+    csv_rows.append(("kernel/tree_logprob/ref_xla",
+                     _time_fn(t_ref, tr.w, tr.b, x), f"C{c}k{kdim}B{bt}"))
+    t_pl = jax.jit(lambda w, bb, xx: tree_logprob_all(
+        w, bb, xx, blk_b=128, blk_c=512, interpret=True))
+    csv_rows.append(("kernel/tree_logprob/pallas_interpret",
+                     _time_fn(t_pl, tr.w, tr.b, x), "interpreter-on-CPU"))
+
+    # gather scores
+    cc, kk, tt, nn = 65_536, 128, 1024, 2
+    w = jax.random.normal(ks[0], (cc, kk))
+    bb = jnp.zeros((cc,))
+    hh = jax.random.normal(ks[1], (tt, kk))
+    ids = jax.random.randint(ks[2], (tt, nn), 0, cc)
+    g_ref = jax.jit(ref_lib.gather_scores_ref)
+    csv_rows.append(("kernel/gather_scores/ref_xla",
+                     _time_fn(g_ref, w, bb, hh, ids),
+                     f"C{cc}K{kk}T{tt}n{nn}"))
+    g_pl = jax.jit(lambda w, b2, h2, i2: gather_scores(
+        w, b2, h2, i2, blk_t=256, interpret=True))
+    csv_rows.append(("kernel/gather_scores/pallas_interpret",
+                     _time_fn(g_pl, w, bb, hh, ids), "interpreter-on-CPU"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(str(x) for x in r))

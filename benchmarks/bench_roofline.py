@@ -1,0 +1,77 @@
+"""Roofline readout: aggregates the dry-run artifacts into the §Roofline
+table (one row per arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_cells(pattern="*.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(csv_rows: list):
+    for c in load_cells():
+        tag = f"{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c.get("status") != "ok":
+            csv_rows.append((f"roofline/{tag}/status", -1.0,
+                             c.get("status", "?")))
+            continue
+        if "compute_s" not in c:
+            continue
+        for term in ("compute_s", "memory_s", "collective_s"):
+            csv_rows.append((f"roofline/{tag}/{term}", c[term] * 1e6,
+                             f"bottleneck={c['bottleneck']}"))
+        csv_rows.append((f"roofline/{tag}/mfu_bound",
+                         c["mfu_bound"] * 1e6, "value=mfu*1e6"))
+    return csv_rows
+
+
+def _variant(c) -> str:
+    tags = []
+    if c.get("head") not in (None, "adversarial_ns"):
+        tags.append(c["head"])
+    if c.get("seq_shard_attn"):
+        tags.append("seqshard")
+    if c.get("seq_parallel_residual"):
+        tags.append("spres")
+    if c.get("fsdp_gather"):
+        tags.append("fsdpgather")
+    return "+".join(tags) or "baseline"
+
+
+def markdown_table(cells=None) -> str:
+    cells = cells or load_cells()
+    lines = ["| arch | shape | mesh | variant | compute_s | memory_s |"
+             " collective_s | bottleneck | useful_flops | mfu_bound |"
+             " bytes/dev |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("status") == "skipped":
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} |  | "
+                         f"— | — | — | skipped (full attention) | — | — |"
+                         f" — |")
+            continue
+        if c.get("status") != "ok" or "compute_s" not in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} |  |"
+                         f" ERROR | | | | | | |")
+            continue
+        gb = c.get("bytes_per_device", 0) / 2**30
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {_variant(c)} "
+            f"| {c['compute_s']:.3g} | {c['memory_s']:.3g} "
+            f"| {c['collective_s']:.3g} | {c['bottleneck']} "
+            f"| {c['useful_flops_fraction']:.2f} | {c['mfu_bound']:.3f} "
+            f"| {gb:.1f} GiB |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,39 @@
+"""Benchmark: gradient SNR vs noise distribution (paper Theorem 2 / Eq. 15).
+
+Closed-form eta-bar for p_n in {uniform, marginal, mixtures, p_D}: the table
+shows eta rising monotonically toward the adversarial optimum."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import snr as snr_lib
+
+
+def run(csv_rows: list, n=16, c=32, seed=0):
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((n, c)) * 2.0
+    p_d = jnp.asarray(np.exp(logits) / np.exp(logits).sum(-1,
+                                                          keepdims=True))
+    uniform = jnp.full((n, c), 1.0 / c)
+    cases = {"uniform": uniform,
+             "marginal": jnp.tile(jnp.mean(p_d, 0, keepdims=True), (n, 1)),
+             "mix25": 0.25 * p_d + 0.75 * uniform,
+             "mix75": 0.75 * p_d + 0.25 * uniform,
+             "adversarial(p_D)": p_d}
+    for name, p_n in cases.items():
+        eta = float(snr_lib.snr_closed_form(p_d, p_n))
+        # 'signal mass' = mean_x sum_y alpha (Eq. 16); attains the Jensen
+        # bound 1/2 exactly at p_n = p_D — the clearer per-datapoint view
+        # (eta itself is dominated by the C term in Eq. 15).
+        mass = float(jnp.mean(jnp.sum(snr_lib.alpha(p_d, p_n), -1)))
+        csv_rows.append((f"snr/{name}", eta * 1e6,
+                         f"X={n},C={c},eta*1e6,signal_mass={mass:.4f}"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,60 @@
+"""Benchmark: generator-tree costs (paper §3 complexity claims).
+
+- ancestral sampling must scale O(k·log C) per sample;
+- exact log p_n(y|x) likewise;
+- greedy fitting is a sub-leading offline cost.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import tree as tree_lib
+from repro.core.tree_fit import FitConfig, fit_tree
+
+
+def _time_fn(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv_rows: list, c_values=(1024, 16384, 262144), k=16, batch=4096):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (batch, k))
+    for c in c_values:
+        tree = tree_lib.init_tree(key, c, k, scale=0.1)
+        sample = jax.jit(lambda t, xx, kk: tree_lib.sample(t, xx, kk)[0])
+        us = _time_fn(sample, tree, x, jax.random.PRNGKey(1))
+        csv_rows.append((f"tree_sample/C={c}", us,
+                         f"batch={batch},k={k},depth={tree.depth}"))
+        y = jax.random.randint(key, (batch,), 0, c)
+        lp = jax.jit(tree_lib.log_prob)
+        us = _time_fn(lp, tree, x, y)
+        csv_rows.append((f"tree_logprob/C={c}", us, f"batch={batch}"))
+
+    # Fit cost (offline, numpy): report seconds on a small clustered set.
+    rng = np.random.default_rng(0)
+    c_fit, n_fit = 1024, 20_000
+    centers = rng.standard_normal((c_fit, k)) * 2
+    y_np = rng.integers(0, c_fit, n_fit)
+    x_np = (centers[y_np] + rng.standard_normal((n_fit, k))).astype(
+        np.float32)
+    t0 = time.perf_counter()
+    fit_tree(x_np, y_np, c_fit, config=FitConfig(seed=0))
+    csv_rows.append((f"tree_fit/C={c_fit}",
+                     (time.perf_counter() - t0) * 1e6, f"N={n_fit}"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/claim.
+
+  bench_heads        — per-step gradient cost vs C     (paper §1/§2: O(KC)
+                       softmax vs O(K) negative sampling)
+  bench_tree         — generator costs                 (paper §3: O(k log C))
+  bench_convergence  — heads race, steps-to-accuracy   (paper Fig. 1)
+  bench_snr          — eta-bar vs noise distribution   (paper Thm 2 / Eq. 15)
+  bench_kernels      — Pallas kernels vs jnp refs      (interpret mode)
+  bench_roofline     — dry-run roofline readout        (§Roofline artifacts)
+
+Prints ``name,us_per_call,derived`` CSV. Select suites with
+``python -m benchmarks.run [suite ...]``; default runs everything except the
+long convergence race (add 'convergence' or 'all').
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    args = set(sys.argv[1:])
+    default = {"heads", "tree", "snr", "kernels", "roofline"}
+    wanted = default if not args else (
+        default | {"convergence"} if "all" in args else args)
+
+    rows: list = []
+    if "heads" in wanted:
+        from benchmarks import bench_heads
+        bench_heads.run(rows)
+    if "tree" in wanted:
+        from benchmarks import bench_tree
+        bench_tree.run(rows)
+    if "snr" in wanted:
+        from benchmarks import bench_snr
+        bench_snr.run(rows)
+    if "kernels" in wanted:
+        from benchmarks import bench_kernels
+        bench_kernels.run(rows)
+    if "convergence" in wanted:
+        from benchmarks import bench_convergence
+        bench_convergence.run(rows)
+    if "roofline" in wanted:
+        from benchmarks import bench_roofline
+        bench_roofline.run(rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

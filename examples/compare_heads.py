@@ -1,0 +1,87 @@
+"""Paper Figure 1 analog: all heads race on clustered extreme classification.
+
+Follows the paper's §5 protocol: each head's learning rate is tuned on a
+validation split (Adagrad, Table 1 style), then trained for an equal step
+budget; we report test accuracy + predictive log-likelihood. Expected
+ordering (the paper's result): adversarial_ns leads the sampled heads and
+approaches full softmax; NCE pays for re-learning the base distribution;
+uniform NS trails.
+
+Run:  PYTHONPATH=src python examples/compare_heads.py [--steps 300]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heads as heads_lib
+from repro.core.heads import Generator
+from repro.core.tree_fit import FitConfig, fit_tree, pca_projection
+from repro.core.xc_train import tune_and_train
+from repro.data.synthetic import ClusteredXCSpec, make_clustered_xc
+
+HEADS = ["adversarial_ns", "uniform_ns", "freq_ns", "nce",
+         "sampled_softmax", "ove", "augment_reduce", "softmax"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--labels", type=int, default=2048)
+    ap.add_argument("--heads", nargs="*", default=HEADS)
+    args = ap.parse_args()
+
+    c, kdim, k_gen = args.labels, 64, 8
+    spec = ClusteredXCSpec(num_labels=c, feature_dim=kdim, seed=0)
+    x_tr, y_tr, x_te, y_te = make_clustered_xc(spec, 42_000, 3_000)
+    x_tr, x_val = x_tr[:40_000], x_tr[40_000:]
+    y_tr, y_val = y_tr[:40_000], y_tr[40_000:]
+
+    t0 = time.time()
+    proj, mean = pca_projection(x_tr, k_gen)
+    tree = fit_tree((x_tr - mean) @ proj, y_tr, c,
+                    config=FitConfig(reg=0.1, seed=0))
+    tree_fit_s = time.time() - t0
+
+    def j(a, dt=None):
+        return jnp.asarray(a) if dt is None else jnp.asarray(a, dt)
+
+    x, y = j(x_tr), j(y_tr, jnp.int32)
+    xg = j((x_tr - mean) @ proj, jnp.float32)
+    xv, yv = j(x_val), j(y_val, jnp.int32)
+    xgv = j((x_val - mean) @ proj, jnp.float32)
+    xte, yte = j(x_te), j(y_te, jnp.int32)
+    xgte = j((x_te - mean) @ proj, jnp.float32)
+    counts = jnp.bincount(y, length=c).astype(jnp.float32)
+
+    print(f"C={c} K={kdim} N={len(y_tr)} steps={args.steps} "
+          f"(tree fit: {tree_fit_s:.1f}s; lr tuned per head, paper §5)")
+    print(f"{'head':16s} {'lr*':>6s} {'train_s':>8s} {'test acc':>9s} "
+          f"{'loglik':>8s}")
+    results = {}
+    for kind in args.heads:
+        gen = Generator()
+        if kind in ("adversarial_ns", "nce", "sampled_softmax"):
+            gen = Generator(tree=tree)
+        elif kind == "freq_ns":
+            gen = heads_lib.make_freq_generator(counts)
+        t0 = time.time()
+        cfg, params, lr = tune_and_train(
+            kind, gen, c, x, xg, y, xv, xgv, yv, steps=args.steps)
+        dt = time.time() - t0
+        acc = float(heads_lib.predictive_accuracy(cfg, params, gen, xte,
+                                                  xgte, yte))
+        ll = float(heads_lib.predictive_log_likelihood(cfg, params, gen,
+                                                       xte, xgte, yte))
+        results[kind] = acc
+        print(f"{kind:16s} {lr:6.2f} {dt:8.1f} {acc:9.3f} {ll:8.3f}")
+
+    if {"adversarial_ns", "uniform_ns"} <= results.keys():
+        assert results["adversarial_ns"] > results["uniform_ns"], \
+            "paper claim: adversarial > uniform at equal budget"
+        print("OK: adversarial negative sampling leads the sampled heads.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Quickstart: the paper, end to end, in under a minute on CPU.
+
+Reproduces the paper's pipeline (§2.2 steps 1-3) on a synthetic clustered
+extreme-classification set (the regime of §2.2's 'Boston Terrier vs French
+Bulldog' argument):
+
+  1. fit the probabilistic decision tree to the data (paper §3);
+  2. train a linear classifier with adversarial negative sampling (Eq. 6);
+  3. predict with bias removal (Eq. 5) and compare against uniform negative
+     sampling trained for the same number of steps.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import heads as heads_lib
+from repro.core.heads import Generator, HeadConfig
+from repro.core.tree_fit import FitConfig, fit_tree, pca_projection
+from repro.data.synthetic import ClusteredXCSpec, make_clustered_xc
+
+
+def train(kind, x, y, xg, gen, c, kdim, steps=400, lr=0.5, seed=0):
+    cfg = HeadConfig(num_labels=c, kind=kind, n_neg=1, reg=1e-4)
+    params = heads_lib.init_head_params(jax.random.PRNGKey(seed), c, kdim)
+
+    @jax.jit
+    def step(params, key):
+        def lf(p):
+            return heads_lib.head_loss(cfg, p, gen, x, xg, y, key)[0]
+        loss, grads = jax.value_and_grad(lf)(params)
+        return jax.tree.map(lambda p, g: p - lr * g, params, grads), loss
+
+    key = jax.random.PRNGKey(seed + 1)
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        params, loss = step(params, sub)
+    return cfg, params
+
+
+def main():
+    c, kdim, k_gen = 256, 64, 8
+    spec = ClusteredXCSpec(num_labels=c, feature_dim=kdim, seed=0)
+    x_tr, y_tr, x_te, y_te = make_clustered_xc(spec, 8000, 2000)
+
+    # -- Step 1: fit the adversarial generator tree (paper §3) --
+    t0 = time.time()
+    proj, mean = pca_projection(x_tr, k_gen)
+    xg_tr = (x_tr - mean) @ proj
+    xg_te = (x_te - mean) @ proj
+    tree = fit_tree(xg_tr, y_tr, c, config=FitConfig(reg=0.1, seed=0))
+    print(f"[1] tree fitted in {time.time() - t0:.1f}s "
+          f"(C={c}, k={k_gen}, depth={tree.depth})")
+
+    xj = jnp.asarray(x_tr)
+    yj = jnp.asarray(y_tr, jnp.int32)
+    xgj = jnp.asarray(xg_tr, jnp.float32)
+
+    # -- Step 2: adversarial negative sampling (Eq. 6) --
+    gen_tree = Generator(tree=tree)
+    cfg_adv, p_adv = train("adversarial_ns", xj, yj, xgj, gen_tree, c, kdim)
+
+    # Baseline: uniform negative sampling (Eq. 2), same budget.
+    cfg_uni, p_uni = train("uniform_ns", xj, yj, xgj, Generator(), c, kdim)
+
+    # -- Step 3: predictions with bias removal (Eq. 5) --
+    xte, yte = jnp.asarray(x_te), jnp.asarray(y_te, jnp.int32)
+    xgte = jnp.asarray(xg_te, jnp.float32)
+    for name, cfg, p, g in [("adversarial+debias", cfg_adv, p_adv, gen_tree),
+                            ("uniform", cfg_uni, p_uni, Generator())]:
+        acc = heads_lib.predictive_accuracy(cfg, p, g, xte, xgte, yte)
+        ll = heads_lib.predictive_log_likelihood(cfg, p, g, xte, xgte, yte)
+        print(f"[3] {name:20s} test acc={float(acc):.3f} "
+              f"loglik={float(ll):.3f}")
+
+    acc_adv = float(heads_lib.predictive_accuracy(
+        cfg_adv, p_adv, gen_tree, xte, xgte, yte))
+    acc_uni = float(heads_lib.predictive_accuracy(
+        cfg_uni, p_uni, Generator(), xte, xgte, yte))
+    assert acc_adv > acc_uni, "adversarial should beat uniform (paper Fig 1)"
+    print("OK: adversarial negative sampling beats uniform at equal steps.")
+
+
+if __name__ == "__main__":
+    main()

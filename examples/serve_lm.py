@@ -1,0 +1,61 @@
+"""Batched serving with the adversarial head's bias removal (Eq. 5).
+
+Prefill a batch of prompts, then greedy-decode with a KV cache; predictive
+scores are xi + log p_n (the paper's Step 3) computed by the dense
+level-recursive tree pass — the O(C·k) rider on the O(C·K) logits matmul.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm_head, transformer
+from repro.models.config import ModelConfig
+from repro.train import make_prefill, make_serve_step
+
+
+def main():
+    cfg = ModelConfig(
+        name="serve-demo", num_layers=2, d_model=128, d_ff=384,
+        vocab_size=1024, num_heads=4, num_kv_heads=2,
+        vocab_pad_multiple=128, gen_feature_dim=16, dtype="float32",
+        remat=False)
+    batch, prompt_len, gen_tokens, max_len = 8, 24, 16, 48
+
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    head_state = lm_head.default_head_state(jax.random.PRNGKey(1), cfg,
+                                            "adversarial_ns")
+    hcfg = lm_head.head_config(cfg, "adversarial_ns")
+    prefill = jax.jit(make_prefill(cfg))
+    serve_step = jax.jit(make_serve_step(cfg, hcfg))
+
+    prompts = jax.random.randint(jax.random.PRNGKey(2),
+                                 (batch, prompt_len), 0, cfg.vocab_size)
+    cache = transformer.init_cache(cfg, batch, max_len, dtype=jnp.float32)
+
+    t0 = time.time()
+    _, cache = prefill(params, prompts, cache)
+    print(f"prefill: batch={batch} len={prompt_len} "
+          f"({(time.time()-t0)*1e3:.0f} ms)")
+
+    token = prompts[:, -1:]
+    out = [token]
+    t0 = time.time()
+    for t in range(gen_tokens):
+        token, cache = serve_step(params, head_state, token, cache,
+                                  jnp.int32(prompt_len + t))
+        out.append(token)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out[1:], axis=1)
+    print(f"decoded {gen_tokens} tokens x {batch} seqs in {dt*1e3:.0f} ms "
+          f"({batch*gen_tokens/dt:.0f} tok/s, greedy, debiased scores)")
+    print("sample:", gen[0].tolist())
+    assert gen.shape == (batch, gen_tokens)
+    assert int(gen.max()) < cfg.vocab_size
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.analysis.roofline import (CostReport, Roofline, collective_bytes,
+                                     extrapolate_layers, report_from_compiled,
+                                     roofline_terms)
+
+__all__ = ["CostReport", "Roofline", "collective_bytes",
+           "extrapolate_layers", "report_from_compiled", "roofline_terms"]

@@ -1,0 +1,174 @@
+"""Roofline terms from compiled artifacts (no hardware required).
+
+  compute    = HLO_FLOPs   / (chips * peak_FLOP/s)
+  memory     = HLO_bytes   / (chips * HBM_bw)
+  collective = coll_bytes  / (chips * link_bw)
+
+``cost_analysis()`` supplies per-device FLOPs/bytes; collective bytes are
+NOT in cost_analysis, so we parse the compiled HLO and sum the operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.
+
+CAVEAT (measured, see EXPERIMENTS.md §Dry-run): XLA's cost analysis and the
+HLO text count a `while`-loop (scan) body ONCE, not per trip. The dry-run
+therefore compiles unrolled L=1 and L=2 variants and extrapolates
+``total = C(1) + (L-1)·(C(2) - C(1))`` — exact for layer-homogeneous stacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s*"
+    r"([\w\-]+)\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string, incl. tuple shapes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from compiled HLO text.
+
+    Strategy: build name -> output-shape-bytes for every instruction, then
+    for each collective instruction sum the sizes of its operands
+    (referenced by %name). '-start' variants are counted; their '-done'
+    halves are skipped to avoid double counting.
+    """
+    sizes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _shape_bytes(m.group(2))
+
+    out = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        kind = None
+        for c in COLLECTIVES:
+            if opcode == c or opcode == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        # Operands: %names inside the call parens of this line.
+        call = line[line.index(opcode + "("):]
+        ops = re.findall(r"%([\w\.\-]+)", call)
+        byte_sum = sum(sizes.get(o, 0) for o in ops)
+        if byte_sum == 0:
+            byte_sum = _shape_bytes(m.group(2))   # fallback: output size
+        out[kind] += byte_sum
+    return out
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0            # per-device program FLOPs
+    bytes_accessed: float = 0.0   # per-device HBM traffic
+    collectives: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def collective_total(self) -> int:
+        return sum(self.collectives.values())
+
+    def scale_add(self, other: "CostReport", k: float) -> "CostReport":
+        colls = {key: int(self.collectives.get(key, 0)
+                          + k * other.collectives.get(key, 0))
+                 for key in set(self.collectives) | set(other.collectives)}
+        return CostReport(flops=self.flops + k * other.flops,
+                          bytes_accessed=self.bytes_accessed
+                          + k * other.bytes_accessed,
+                          collectives=colls)
+
+
+def report_from_compiled(compiled) -> CostReport:
+    ca = compiled.cost_analysis() or {}
+    return CostReport(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        collectives=collective_bytes(compiled.as_text()))
+
+
+def extrapolate_layers(c1: CostReport, c2: CostReport, num_layers: int
+                       ) -> CostReport:
+    """total = C(1) + (L-1) * (C(2) - C(1)); exact for homogeneous stacks."""
+    delta = c2.scale_add(c1, -1.0)
+    return c1.scale_add(delta, float(num_layers - 1))
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float            # 6 * N_active * tokens
+    hlo_flops_total: float        # per-device flops * chips
+    chips: int
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-model step time: max of the three terms (perfect
+        overlap assumption — the optimistic bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        return self.model_flops / max(self.hlo_flops_total, 1.0)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        denom = self.step_time_s * self.chips
+        from repro.launch.mesh import PEAK_FLOPS_BF16
+        return self.model_flops / max(denom * PEAK_FLOPS_BF16, 1.0)
+
+
+def roofline_terms(report: CostReport, chips: int, model_flops: float,
+                   peak_flops: Optional[float] = None,
+                   hbm_bw: Optional[float] = None,
+                   link_bw: Optional[float] = None) -> Roofline:
+    from repro.launch import mesh as mesh_lib
+
+    peak = peak_flops or mesh_lib.PEAK_FLOPS_BF16
+    hbm = hbm_bw or mesh_lib.HBM_BW
+    link = link_bw or mesh_lib.ICI_BW
+    # cost_analysis is per-device: totals = per_device * chips.
+    return Roofline(
+        compute_s=report.flops / peak,
+        memory_s=report.bytes_accessed / hbm,
+        collective_s=report.collective_total / link,
+        model_flops=model_flops,
+        hlo_flops_total=report.flops * chips,
+        chips=chips)

@@ -1,0 +1,21 @@
+"""Paper core: adversarial softmax approximation (Bamler & Mandt, ICLR'20).
+
+- :mod:`repro.core.tree`      — probabilistic decision-tree generator (§3)
+- :mod:`repro.core.tree_fit`  — greedy Newton / balanced-split fitting (§3)
+- :mod:`repro.core.heads`     — adversarial NS + all baseline heads (§2, §5)
+- :mod:`repro.core.snr`       — gradient SNR, Theorem 2 validation (§4)
+"""
+from repro.core.heads import (Generator, HeadConfig, HeadParams, head_loss,
+                              init_head_params, make_freq_generator,
+                              make_tree_generator, predictive_accuracy,
+                              predictive_log_likelihood, predictive_scores)
+from repro.core.tree import Tree, init_tree, log_prob, log_prob_all, sample
+from repro.core.tree_fit import FitConfig, fit_tree, pca_projection
+
+__all__ = [
+    "Generator", "HeadConfig", "HeadParams", "head_loss", "init_head_params",
+    "make_freq_generator", "make_tree_generator", "predictive_accuracy",
+    "predictive_log_likelihood", "predictive_scores", "Tree", "init_tree",
+    "log_prob", "log_prob_all", "sample", "FitConfig", "fit_tree",
+    "pca_projection",
+]

@@ -1,0 +1,304 @@
+"""Softmax-head strategies: the paper's adversarial negative sampling and all
+baselines from §5 / appendix A.2, behind one interface.
+
+Heads score ``C`` labels from a feature ``h in R^K`` with an affine model
+``xi_y(h) = w_y . h + b_y`` (the paper's model; for LMs, ``h`` is the final
+hidden state and ``(w, b)`` the output embedding). The *generator feature*
+``x_gen in R^k`` fed to the auxiliary tree is passed separately (paper: a PCA
+projection of the input; LM: a projection of a frozen feature snapshot —
+DESIGN.md §2).
+
+Strategies (paper reference):
+  softmax         — full softmax CE, Eq. 1 (appendix A.2 baseline)
+  uniform_ns      — negative sampling, uniform noise, Eq. 2   (baseline i)
+  freq_ns         — unconditional empirical-frequency noise   (baseline ii)
+  adversarial_ns  — **the paper**: conditional tree noise, Eq. 6 objective,
+                    Eq. 5 bias removal at prediction
+  nce             — NCE with the tree as base distribution    (baseline iii)
+  sampled_softmax — Bengio & Senecal sampled softmax w/ logQ correction
+  ove             — One-vs-Each (Titsias 2016), stochastic    (baseline v)
+  augment_reduce  — A&R softmax bound, stochastic reduce step (baseline iv)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as tree_lib
+
+HEAD_KINDS = ("softmax", "uniform_ns", "freq_ns", "adversarial_ns", "nce",
+              "sampled_softmax", "ove", "augment_reduce")
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadConfig:
+    num_labels: int
+    kind: str = "adversarial_ns"
+    n_neg: int = 1          # negatives per positive (paper uses 1)
+    reg: float = 0.0        # lambda in Eq. 6
+    debias: bool = True     # apply Eq. 5 at prediction time
+    mask_accidental: bool = True  # sampled_softmax: mask negatives == target
+
+    def __post_init__(self):
+        assert self.kind in HEAD_KINDS, self.kind
+
+
+class HeadParams(NamedTuple):
+    """Trainable head parameters phi (Eq. 2)."""
+    w: jax.Array   # (C, K)
+    b: jax.Array   # (C,)
+
+
+class Generator(NamedTuple):
+    """Non-trainable noise-distribution state (kept out of the optimizer;
+    the paper keeps the generator constant while training the
+    discriminator)."""
+    tree: Optional[tree_lib.Tree] = None
+    freq_log: Optional[jax.Array] = None   # (C,) log empirical frequencies
+    freq_cdf: Optional[jax.Array] = None   # (C,) inclusive CDF
+
+
+def init_head_params(rng: jax.Array, num_labels: int, feature_dim: int,
+                     scale: float = 0.0,
+                     dtype=jnp.float32) -> HeadParams:
+    w = (scale * jax.random.normal(rng, (num_labels, feature_dim))
+         ).astype(dtype)
+    return HeadParams(w=w, b=jnp.zeros((num_labels,), dtype))
+
+
+def make_freq_generator(label_counts: jax.Array) -> Generator:
+    """Generator for `freq_ns`: empirical label frequencies (§2.2)."""
+    counts = jnp.asarray(label_counts, jnp.float32) + 1e-12
+    p = counts / counts.sum()
+    return Generator(freq_log=jnp.log(p), freq_cdf=jnp.cumsum(p))
+
+
+def make_tree_generator(tree: tree_lib.Tree) -> Generator:
+    return Generator(tree=tree)
+
+
+# ---------------------------------------------------------------------------
+# Negative sampling + noise log-probs, per strategy.
+# ---------------------------------------------------------------------------
+
+def sample_negatives(cfg: HeadConfig, gen: Generator, x_gen: jax.Array,
+                     rng: jax.Array, batch_shape: Tuple[int, ...]
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Draw (ids, log_pn) with shapes batch_shape + (n_neg,).
+
+    Costs: uniform O(1); freq O(log C) (inverse-CDF); adversarial/nce/
+    sampled_softmax O(k log C) (tree ancestral sampling, paper §3).
+    """
+    shape = batch_shape + (cfg.n_neg,)
+    c = cfg.num_labels
+    if cfg.kind in ("uniform_ns", "ove", "augment_reduce"):
+        ids = jax.random.randint(rng, shape, 0, c)
+        return ids, jnp.full(shape, -jnp.log(float(c)))
+    if cfg.kind == "freq_ns":
+        u = jax.random.uniform(rng, shape)
+        ids = jnp.searchsorted(gen.freq_cdf, u).astype(jnp.int32)
+        ids = jnp.clip(ids, 0, c - 1)
+        return ids, gen.freq_log[ids]
+    if cfg.kind in ("adversarial_ns", "nce", "sampled_softmax"):
+        xg = jnp.broadcast_to(x_gen[..., None, :],
+                              batch_shape + (cfg.n_neg, x_gen.shape[-1]))
+        ids, logp = tree_lib.sample(gen.tree, xg, rng)
+        return ids, logp
+    raise ValueError(f"{cfg.kind} draws no negatives")
+
+
+def noise_log_prob(cfg: HeadConfig, gen: Generator, x_gen: jax.Array,
+                   y: jax.Array) -> jax.Array:
+    """log p_n(y|x) for given labels under the strategy's noise dist."""
+    if cfg.kind in ("uniform_ns", "ove", "augment_reduce"):
+        return jnp.full(y.shape, -jnp.log(float(cfg.num_labels)))
+    if cfg.kind == "freq_ns":
+        return gen.freq_log[y]
+    if cfg.kind in ("adversarial_ns", "nce", "sampled_softmax"):
+        xg = jnp.broadcast_to(x_gen[..., None, :] if y.ndim == x_gen.ndim
+                              else x_gen, y.shape + (x_gen.shape[-1],))
+        return tree_lib.log_prob(gen.tree, xg, y)
+    raise ValueError(cfg.kind)
+
+
+def candidate_scores(params: HeadParams, h: jax.Array, ids: jax.Array
+                     ) -> jax.Array:
+    """xi_{ids}(h) = w_{ids} . h + b_{ids}; ids: h.shape[:-1] + (n,).
+
+    This is the O(K) gather-and-dot that replaces the O(K·C) logits matmul.
+    The vocab-sharded fast path lives in repro.parallel.collectives.
+    """
+    w = params.w[ids]                                    # (..., n, K)
+    return (jnp.einsum("...nk,...k->...n", w.astype(jnp.float32),
+                       h.astype(jnp.float32))
+            + params.b[ids].astype(jnp.float32))
+
+
+def full_logits(params: HeadParams, h: jax.Array) -> jax.Array:
+    """All-label scores, O(K·C): h @ W^T + b."""
+    return (jnp.einsum("...k,ck->...c", h.astype(jnp.float32),
+                       params.w.astype(jnp.float32))
+            + params.b.astype(jnp.float32))
+
+
+ScoreFn = Callable[[HeadParams, jax.Array, jax.Array], jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Losses.
+# ---------------------------------------------------------------------------
+
+def head_loss(cfg: HeadConfig, params: HeadParams, gen: Generator,
+              h: jax.Array, x_gen: jax.Array, y: jax.Array, rng: jax.Array,
+              score_fn: ScoreFn = candidate_scores,
+              mask: Optional[jax.Array] = None):
+    """Per-strategy training loss, mean over batch. Returns (loss, metrics).
+
+    h: (..., K); x_gen: (..., k); y: (...,) int labels; mask: (...,) in
+    {0,1} — masked-out positions (e.g. padding tokens) contribute 0.
+    """
+    batch_shape = y.shape
+    if mask is None:
+        mask = jnp.ones(batch_shape, jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+
+    def mean(v):
+        return jnp.sum(v * mask) / denom
+
+    metrics = {}
+    if cfg.kind == "softmax":
+        logits = full_logits(params, h)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        pos = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        loss = mean(logz - pos)
+        if cfg.reg:  # score regularizer (cf. Eq. 6 with log p_n absorbed)
+            loss = loss + cfg.reg * mean(jnp.mean(logits ** 2, axis=-1))
+        metrics["pos_score"] = mean(pos)
+        return loss, metrics
+
+    y = y.astype(jnp.int32)
+    pos_scores = score_fn(params, h, y[..., None])[..., 0]        # (...)
+
+    if cfg.kind in ("uniform_ns", "freq_ns", "adversarial_ns", "nce"):
+        neg_ids, neg_logp = sample_negatives(cfg, gen, x_gen, rng,
+                                             batch_shape)
+        neg_ids = jax.lax.stop_gradient(neg_ids)
+        neg_logp = jax.lax.stop_gradient(neg_logp)
+        neg_scores = score_fn(params, h, neg_ids)                 # (..., n)
+        if cfg.kind == "nce":
+            # NCE: discriminator sees xi - log(nu * p_n); learns full scores.
+            ln_nu = jnp.log(float(cfg.n_neg))
+            pos_logp = jax.lax.stop_gradient(
+                noise_log_prob(cfg, gen, x_gen, y))
+            u_pos = pos_scores - pos_logp - ln_nu
+            u_neg = neg_scores - neg_logp - ln_nu
+            loss = mean(-jax.nn.log_sigmoid(u_pos)
+                        - jnp.sum(jax.nn.log_sigmoid(-u_neg), axis=-1))
+        else:
+            # Eq. 2 (n_neg-sample generalization; paper: n_neg = 1).
+            loss = mean(-jax.nn.log_sigmoid(pos_scores)
+                        - jnp.mean(jax.nn.log_sigmoid(-neg_scores), axis=-1))
+            if cfg.reg:
+                # Eq. 6: regularize the *unbiased* scores xi + log p_n.
+                pos_logp = jax.lax.stop_gradient(
+                    noise_log_prob(cfg, gen, x_gen, y))
+                r = ((pos_scores + pos_logp) ** 2
+                     + jnp.mean((neg_scores + neg_logp) ** 2, axis=-1))
+                loss = loss + cfg.reg * mean(r)
+        metrics["pos_score"] = mean(pos_scores)
+        metrics["neg_score"] = mean(jnp.mean(neg_scores, axis=-1))
+        return loss, metrics
+
+    if cfg.kind == "sampled_softmax":
+        neg_ids, neg_logp = sample_negatives(cfg, gen, x_gen, rng,
+                                             batch_shape)
+        neg_ids = jax.lax.stop_gradient(neg_ids)
+        neg_logp = jax.lax.stop_gradient(neg_logp)
+        pos_logp = jax.lax.stop_gradient(noise_log_prob(cfg, gen, x_gen, y))
+        neg_scores = score_fn(params, h, neg_ids)
+        # logQ-corrected logits over the candidate set {y} U negatives.
+        cand = jnp.concatenate([(pos_scores - pos_logp)[..., None],
+                                neg_scores - neg_logp], axis=-1)
+        if cfg.mask_accidental:
+            hit = (neg_ids == y[..., None])
+            cand = cand.at[..., 1:].set(
+                jnp.where(hit, -jnp.inf, cand[..., 1:]))
+        loss = mean(jax.nn.logsumexp(cand, axis=-1) - cand[..., 0])
+        metrics["pos_score"] = mean(pos_scores)
+        return loss, metrics
+
+    if cfg.kind == "ove":
+        # One-vs-Each bound: -log p(y) <= sum_{y' != y} softplus(xi_y'-xi_y);
+        # stochastic estimate with n uniform negatives scaled by (C-1)/n.
+        neg_ids, _ = sample_negatives(cfg, gen, x_gen, rng, batch_shape)
+        neg_ids = jax.lax.stop_gradient(neg_ids)
+        neg_scores = score_fn(params, h, neg_ids)
+        scale = (cfg.num_labels - 1) / cfg.n_neg
+        pair = jax.nn.softplus(neg_scores - pos_scores[..., None])
+        pair = pair * (neg_ids != y[..., None])   # exclude accidental y'=y
+        loss = mean(scale * jnp.mean(pair, axis=-1))
+        metrics["pos_score"] = mean(pos_scores)
+        return loss, metrics
+
+    if cfg.kind == "augment_reduce":
+        # A&R softmax bound with a stochastic 'reduce' step: importance-
+        # sampled partition estimate log(e^{xi_y} + (C-1) mean_j e^{xi_j}).
+        neg_ids, _ = sample_negatives(cfg, gen, x_gen, rng, batch_shape)
+        neg_ids = jax.lax.stop_gradient(neg_ids)
+        neg_scores = score_fn(params, h, neg_ids)
+        ln_rest = (jax.nn.logsumexp(neg_scores, axis=-1)
+                   + jnp.log((cfg.num_labels - 1) / cfg.n_neg))
+        logz = jnp.logaddexp(pos_scores, ln_rest)
+        loss = mean(logz - pos_scores)
+        metrics["pos_score"] = mean(pos_scores)
+        return loss, metrics
+
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Prediction (bias removal, Eq. 5).
+# ---------------------------------------------------------------------------
+
+def predictive_scores(cfg: HeadConfig, params: HeadParams, gen: Generator,
+                      h: jax.Array, x_gen: jax.Array) -> jax.Array:
+    """Unbiased predictive scores over all C labels.
+
+    For `adversarial_ns` this is Theorem 1 / Eq. 5:
+        xi_softmax = xi_ns + log p_n(y|x) + const,
+    with log p_n evaluated densely for all labels in O(C·k) via the
+    level-recursive tree pass. For `freq_ns` the correction is the constant-
+    per-label log-frequency. Uniform corrections are argmax-irrelevant.
+    """
+    scores = full_logits(params, h)
+    if not cfg.debias:
+        return scores
+    if cfg.kind == "adversarial_ns":
+        return scores + tree_lib.log_prob_all(gen.tree, x_gen)
+    if cfg.kind == "freq_ns":
+        return scores + gen.freq_log
+    return scores
+
+
+def predictive_log_likelihood(cfg, params, gen, h, x_gen, y,
+                              mask: Optional[jax.Array] = None):
+    """Mean test log-likelihood log softmax(scores)[y] (paper Fig. 1)."""
+    scores = predictive_scores(cfg, params, gen, h, x_gen)
+    logp = scores - jax.nn.logsumexp(scores, axis=-1, keepdims=True)
+    pos = jnp.take_along_axis(logp, y[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    if mask is None:
+        return jnp.mean(pos)
+    return jnp.sum(pos * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def predictive_accuracy(cfg, params, gen, h, x_gen, y,
+                        mask: Optional[jax.Array] = None):
+    scores = predictive_scores(cfg, params, gen, h, x_gen)
+    correct = (jnp.argmax(scores, axis=-1) == y).astype(jnp.float32)
+    if mask is None:
+        return jnp.mean(correct)
+    return jnp.sum(correct * mask) / jnp.maximum(mask.sum(), 1.0)

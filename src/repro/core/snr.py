@@ -1,0 +1,59 @@
+"""Signal-to-noise ratio of the negative-sampling gradient (paper §4).
+
+Validates Theorem 2 on tabular problems where the nonparametric optimum is
+known in closed form (Eq. 11): xi*_{x,y} = log(p_D(y|x) / p_n(y|x)).
+
+Conventions: the data set holds N = X distinct feature vectors (one per row
+of ``p_d``), the loss is summed over the data set (Eq. A1), and the one-
+sample stochastic gradient carries the factor N (Eq. A7).
+
+  - :func:`snr_closed_form` evaluates Eq. 15 exactly:
+        1/eta = N * sum_x [ C - 2 sum_y alpha_{x,y} ],
+        alpha_{x,y} = p_n sigma(xi*) = p_n p_D / (p_n + p_D)   (Eq. 13).
+  - :func:`snr_empirical` Monte-Carlo estimates
+        1/eta = Tr[Cov[g,g] H^-1] = sum_{x,y} E[g_{x,y}^2] / alpha_{x,y}
+    from sampled stochastic gradients (Eq. A8); it must agree with the
+    closed form (tested), and is maximal at p_n = p_D (Theorem 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def alpha(p_d: jax.Array, p_n: jax.Array) -> jax.Array:
+    """alpha_{x,y} (Eq. 13) at the nonparametric optimum."""
+    return p_d * p_n / (p_d + p_n + 1e-38)
+
+
+def snr_closed_form(p_d: jax.Array, p_n: jax.Array) -> jax.Array:
+    """eta-bar (Eq. 12) via Eq. 15. p_d, p_n: (X, C) row-stochastic."""
+    n, c = p_d.shape
+    inv = n * jnp.sum(c - 2.0 * jnp.sum(alpha(p_d, p_n), axis=-1))
+    return 1.0 / inv
+
+
+def snr_empirical(p_d: jax.Array, p_n: jax.Array, rng: jax.Array,
+                  n_samples: int = 200_000) -> jax.Array:
+    """Monte-Carlo eta-bar from stochastic gradients at the optimum."""
+    n, c = p_d.shape
+    xi_star = jnp.log(p_d + 1e-38) - jnp.log(p_n + 1e-38)
+    sig_pos = jax.nn.sigmoid(-xi_star)     # positive-term factor sigma(-xi*)
+    sig_neg = jax.nn.sigmoid(xi_star)      # negative-term factor sigma(+xi*)
+
+    kx, ky, kn = jax.random.split(rng, 3)
+    xs = jax.random.randint(kx, (n_samples,), 0, n)
+    ys = jax.random.categorical(ky, jnp.log(p_d + 1e-38)[xs])
+    yns = jax.random.categorical(kn, jnp.log(p_n + 1e-38)[xs])
+
+    # g-hat (Eq. A8): -N sigma(-xi_{x,y}) at (x,y), +N sigma(xi_{x,y'}) at
+    # (x,y'); the entries coincide when y == y'.
+    g_pos = -n * sig_pos[xs, ys]
+    g_neg = n * sig_neg[xs, yns]
+    same = ys == yns
+    sq = jnp.zeros((n, c))
+    sq = sq.at[xs, ys].add(jnp.where(same, (g_pos + g_neg) ** 2, g_pos ** 2))
+    sq = sq.at[xs, yns].add(jnp.where(same, 0.0, g_neg ** 2))
+    second_moment = sq / n_samples          # E[g_{x,y}^2] over the full draw
+    inv = jnp.sum(second_moment / (alpha(p_d, p_n) + 1e-38))
+    return 1.0 / inv

@@ -1,0 +1,195 @@
+"""Probabilistic binary decision tree — the paper's adversarial generator (§3).
+
+The tree is *balanced* with ``C_pad = 2**depth`` leaves (``C_pad >= C``;
+surplus leaves are uninhabited "padding labels" whose probability is forced to
+zero, exactly as in the paper). Internal nodes are stored in **level order**
+(root = 0, children of node ``i`` are ``2i+1`` and ``2i+2``) so that all node
+parameters live in two dense arrays and every tree operation is a batched
+gather + dot — no pointer chasing, which is the TPU-native re-think of the
+paper's sequential CPU sampler.
+
+Every operation is pure ``jax`` and differentiable where meaningful:
+
+- ``log_prob(tree, x, y)``       — O(k·depth) per example  (paper req. (iii))
+- ``sample(tree, x, rng)``       — O(k·depth) ancestral sampling (req. (ii))
+- ``log_prob_all(tree, x)``      — O(k·C) level-recursive dense evaluation,
+  used for the bias-removal term ``log p_n(y|x)`` over the *full* label set at
+  prediction time (Eq. 5).
+
+Fitting (req. (i)) lives in :mod:`repro.core.tree_fit`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Decision logit magnitude used to force p(padding) = 0. sigmoid(-30) ~ 9e-14.
+PAD_LOGIT = 30.0
+
+
+class Tree(NamedTuple):
+    """Packed tree parameters (a pytree; all shapes static under jit).
+
+    Attributes:
+      w:  (n_nodes, k) per-node weight vectors; n_nodes = 2**depth - 1.
+      b:  (n_nodes,)  per-node biases.
+      label_to_leaf: (C,) int32 — leaf index (0..C_pad-1) of each real label.
+      leaf_to_label: (C_pad,) int32 — inverse map; padding leaves hold 0.
+    """
+
+    w: jax.Array
+    b: jax.Array
+    label_to_leaf: jax.Array
+    leaf_to_label: jax.Array
+
+    @property
+    def depth(self) -> int:
+        n_nodes = self.b.shape[0]
+        d = (n_nodes + 1).bit_length() - 1
+        assert (1 << d) == n_nodes + 1, f"n_nodes={n_nodes} is not 2**d - 1"
+        return d
+
+    @property
+    def num_labels(self) -> int:
+        return self.label_to_leaf.shape[0]
+
+    @property
+    def feature_dim(self) -> int:
+        return self.w.shape[-1]
+
+
+def padded_size(num_labels: int) -> int:
+    """Smallest power of two >= num_labels (>= 2 so depth >= 1)."""
+    return max(2, 1 << (num_labels - 1).bit_length())
+
+
+def init_tree(rng: jax.Array, num_labels: int, feature_dim: int,
+              scale: float = 0.01) -> Tree:
+    """Random tree over labels in natural order (fitting replaces this)."""
+    c_pad = padded_size(num_labels)
+    depth = c_pad.bit_length() - 1
+    n_nodes = c_pad - 1
+    k_w, = jax.random.split(rng, 1)
+    w = scale * jax.random.normal(k_w, (n_nodes, feature_dim), jnp.float32)
+    b = jnp.zeros((n_nodes,), jnp.float32)
+    b = _force_padding(b, num_labels, c_pad)
+    label_to_leaf = jnp.arange(num_labels, dtype=jnp.int32)
+    leaf_to_label = jnp.where(
+        jnp.arange(c_pad) < num_labels, jnp.arange(c_pad), 0
+    ).astype(jnp.int32)
+    return Tree(w=w, b=b, label_to_leaf=label_to_leaf,
+                leaf_to_label=leaf_to_label)
+
+
+def _force_padding(b: jax.Array, num_labels: int, c_pad: int) -> jax.Array:
+    """Force decisions away from padding-only subtrees (identity layout).
+
+    With labels laid out in natural leaf order, leaves [num_labels, c_pad) are
+    padding. A node whose *right* subtree is entirely padding must always go
+    left (b = -PAD_LOGIT). The override pattern depends only on static sizes,
+    so it is computed host-side and applied with a where — this keeps
+    ``init_tree`` traceable (eval_shape in the dry-run).
+    """
+    import numpy as np
+
+    depth = c_pad.bit_length() - 1
+    n_nodes = c_pad - 1
+    force_left = np.zeros((n_nodes,), bool)
+    for level in range(depth):
+        n_lvl = 1 << level
+        leaves_per_child = c_pad >> (level + 1)
+        for j in range(n_lvl):
+            node = n_lvl - 1 + j
+            right_lo = j * 2 * leaves_per_child + leaves_per_child
+            if right_lo >= num_labels:        # right subtree all padding
+                force_left[node] = True
+    return jnp.where(jnp.asarray(force_left), -PAD_LOGIT, b)
+
+
+def _node_scores(tree: Tree, x: jax.Array, idx: jax.Array) -> jax.Array:
+    """z = w[idx]·x + b[idx] for a batch of node indices idx (same shape as
+    x[..., 0])."""
+    w = tree.w[idx]                       # (..., k)
+    return jnp.sum(w * x, axis=-1) + tree.b[idx]
+
+
+def log_prob(tree: Tree, x: jax.Array, y: jax.Array) -> jax.Array:
+    """log p_n(y|x). x: (..., k), y: (...,) int. Returns (...,) float32.
+
+    Cost O(depth·k) per example: one gather + dot per tree level (Eq. 7).
+    """
+    depth = tree.depth
+    leaf = tree.label_to_leaf[y].astype(jnp.int32)
+
+    def body(level, acc):
+        # Node visited at `level` on the path to `leaf`, and the branch taken.
+        idx = (1 << level) - 1 + (leaf >> (depth - level))
+        bit = (leaf >> (depth - 1 - level)) & 1
+        z = _node_scores(tree, x, idx)
+        zeta = 2.0 * bit.astype(z.dtype) - 1.0
+        return acc + jax.nn.log_sigmoid(zeta * z)
+
+    acc0 = jnp.zeros(y.shape, jnp.float32)
+    return jax.lax.fori_loop(0, depth, body, acc0)
+
+
+def sample(tree: Tree, x: jax.Array, rng: jax.Array
+           ) -> Tuple[jax.Array, jax.Array]:
+    """Ancestral sampling y' ~ p_n(·|x). Returns (labels, log_probs).
+
+    x: (..., k). Cost O(depth·k) per sample — the paper's O(k log C) bound.
+    The log-probability of the drawn label falls out of the walk for free
+    (needed for bias removal / regularizer, Eq. 5/6).
+    """
+    depth = tree.depth
+    batch_shape = x.shape[:-1]
+    u = jax.random.uniform(rng, batch_shape + (depth,), jnp.float32)
+
+    def body(level, carry):
+        idx, acc = carry                  # idx: node index within full tree
+        z = _node_scores(tree, x, idx)
+        go_right = u[..., level] < jax.nn.sigmoid(z)
+        acc = acc + jnp.where(go_right, jax.nn.log_sigmoid(z),
+                              jax.nn.log_sigmoid(-z))
+        idx = 2 * idx + 1 + go_right.astype(jnp.int32)
+        return idx, acc
+
+    idx0 = jnp.zeros(batch_shape, jnp.int32)
+    acc0 = jnp.zeros(batch_shape, jnp.float32)
+    idx, acc = jax.lax.fori_loop(0, depth, body, (idx0, acc0))
+    leaf = idx - ((1 << depth) - 1)
+    label = tree.leaf_to_label[leaf]
+    return label, acc
+
+
+def log_prob_all(tree: Tree, x: jax.Array) -> jax.Array:
+    """log p_n(y|x) for *all* real labels. x: (..., k) → (..., C).
+
+    Level-recursive dense evaluation: level ``l`` holds 2**l partial
+    log-probs; each level costs one (B,k)x(k,2**l) matmul. Total O(C·k) —
+    MXU-shaped, vs O(C·depth·k) for per-leaf path walks. Used for full-vocab
+    bias removal at serving time (Eq. 5).
+    """
+    depth = tree.depth
+    batch_shape = x.shape[:-1]
+    logp = jnp.zeros(batch_shape + (1,), jnp.float32)
+    for level in range(depth):
+        lo = (1 << level) - 1
+        n_lvl = 1 << level
+        w_l = jax.lax.dynamic_slice_in_dim(tree.w, lo, n_lvl, 0)   # (n,k)
+        b_l = jax.lax.dynamic_slice_in_dim(tree.b, lo, n_lvl, 0)   # (n,)
+        z = jnp.einsum("...k,nk->...n", x, w_l) + b_l              # (...,n)
+        children = jnp.stack(
+            [logp + jax.nn.log_sigmoid(-z), logp + jax.nn.log_sigmoid(z)],
+            axis=-1)                                               # (...,n,2)
+        logp = children.reshape(batch_shape + (2 * n_lvl,))
+    # logp is over leaves; select the leaf of each real label.
+    return jnp.take(logp, tree.label_to_leaf, axis=-1)
+
+
+def prob_mass_real(tree: Tree, x: jax.Array) -> jax.Array:
+    """Total probability mass on real (non-padding) labels; ~1.0 by
+    construction. Test/diagnostic helper."""
+    return jnp.exp(jax.nn.logsumexp(log_prob_all(tree, x), axis=-1))

@@ -1,0 +1,6 @@
+from repro.data.pipeline import HostShardedLoader, lm_batch_fn
+from repro.data.synthetic import (ClusteredXCSpec, make_clustered_xc,
+                                  zipf_token_stream)
+
+__all__ = ["HostShardedLoader", "lm_batch_fn", "ClusteredXCSpec",
+           "make_clustered_xc", "zipf_token_stream"]

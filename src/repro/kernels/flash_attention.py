@@ -1,0 +1,121 @@
+"""Flash attention (forward) Pallas TPU kernel.
+
+Covers the backbone's needs: causal masking, sliding windows (mixtral /
+h2o-danube / gemma2 local layers / hymba), and gemma2's attention-logit
+softcap — all fused, O(Sq·hd) VMEM per block, online softmax over KV blocks.
+
+Grid: (B*H, Sq/blk_q, Skv/blk_k) with the KV dimension innermost
+('arbitrary' semantics); running (m, l, acc) state lives in VMEM scratch and
+is finalized on the last KV block. MXU alignment: blk_q/blk_k multiples of
+128 in production (tests use smaller interpreted blocks).
+
+Positions align at the end (q position i == absolute Skv - Sq + i), matching
+both training (Sq == Skv) and decode-with-cache (Sq == 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int, softcap: float,
+                 sq: int, skv: int, blk_q: int, blk_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                   # (blk_q, hd)
+    k = k_ref[0].astype(jnp.float32)                   # (blk_k, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # (blk_q, blk_k)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    q_pos = (iq * blk_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (blk_q, blk_k), 0)
+             + (skv - sq))
+    k_pos = ik * blk_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (blk_q, blk_k), 1)
+    delta = q_pos - k_pos
+    valid = jnp.ones((blk_q, blk_k), jnp.bool_)
+    if causal:
+        valid &= delta >= 0
+    if window > 0:
+        valid &= delta < window
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_scr[...]                                # (blk_q, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)                        # (blk_q, blk_k)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale=None,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False):
+    """q: (B,H,Sq,hd), k/v: (B,H,Skv,hd) -> (B,H,Sq,hd)."""
+    b, h, sq, hd = q.shape
+    skv = k.shape[2]
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, skv)
+    assert sq % blk_q == 0 and skv % blk_k == 0, (sq, skv, blk_q, blk_k)
+    scale = float(scale) if scale is not None else 1.0 / (hd ** 0.5)
+
+    qf = q.reshape(b * h, sq, hd)
+    kf = k.reshape(b * h, skv, hd)
+    vf = v.reshape(b * h, skv, hd)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=int(window),
+        softcap=float(softcap), sq=sq, skv=skv, blk_q=blk_q, blk_k=blk_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, sq // blk_q, skv // blk_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda bh, iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda bh, iq, ik: (bh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda bh, iq, ik: (bh, iq,
+                                                                   0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            # VMEM: (blk_q,1) running max + sum, (blk_q,hd) accumulator.
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, hd)

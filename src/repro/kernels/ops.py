@@ -1,0 +1,53 @@
+"""jit'd wrappers for the Pallas kernels with interpret-mode dispatch.
+
+On this CPU container kernels run with ``interpret=True`` (the Pallas
+interpreter executes the kernel body on CPU for correctness); on TPU the same
+call sites compile to Mosaic. ``use_pallas(False)`` routes everything to the
+pure-jnp references (repro.kernels.ref) for A/B testing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref as ref_lib
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gather_scores import gather_scores as _gather
+from repro.kernels.tree_logprob import tree_logprob_all as _treelp
+
+_STATE = {"use_pallas": True, "interpret": None}
+
+
+def use_pallas(on: bool):
+    _STATE["use_pallas"] = on
+
+
+def _interpret() -> bool:
+    if _STATE["interpret"] is None:
+        _STATE["interpret"] = jax.devices()[0].platform != "tpu"
+    return _STATE["interpret"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0):
+    if not _STATE["use_pallas"]:
+        return ref_lib.flash_attention_ref(q, k, v, causal=causal,
+                                           window=window, softcap=softcap)
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  interpret=_interpret())
+
+
+@jax.jit
+def tree_logprob_all(w, b, x):
+    if not _STATE["use_pallas"]:
+        return ref_lib.tree_logprob_all_ref(w, b, x)
+    return _treelp(w, b, x, interpret=_interpret())
+
+
+@jax.jit
+def gather_scores(w, b, h, ids):
+    if not _STATE["use_pallas"]:
+        return ref_lib.gather_scores_ref(w, b, h, ids)
+    return _gather(w, b, h, ids, interpret=_interpret())

@@ -1,0 +1,94 @@
+"""Dense tree log-prob Pallas TPU kernel (the Eq. 5 bias-removal hot spot).
+
+Computes log p_n(leaf | x) for ALL leaves: serving adds this (B, C) tensor to
+the logits, so at gemma2 scale it is a (B, 256k) production every decode
+step. The XLA path materializes every intermediate level in HBM
+(sum_l 2^l = C extra floats per example); this kernel keeps the whole
+recursion for a C_blk-leaf subtree in VMEM.
+
+Key structural insight (TPU adaptation of the pointer-walking CPU code):
+for an ALIGNED contiguous leaf block [c0, c0 + C_blk), the ancestry factors
+as   logp(leaf) = prefix(x, c0)  +  subtree-recursion(x, nodes of block),
+where the prefix chain has depth - log2(C_blk) nodes whose indices are
+affine in the block id (dynamic-slice loads), and the subtree nodes occupy
+one contiguous range per level (C_blk - 1 rows total). Grid: (B/blk_b,
+C/blk_c); VMEM per step ~ blk_b·blk_c + blk_c·k floats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, depth: int, blk_c: int, k: int):
+    ic = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)                 # (blk_b, k)
+    blk_b = x.shape[0]
+    sub_depth = blk_c.bit_length() - 1                 # levels inside block
+    pre_depth = depth - sub_depth                      # levels above block
+
+    # ---- prefix chain: ancestors of the whole leaf block ----
+    prefix = jnp.zeros((blk_b, 1), jnp.float32)
+    for level in range(pre_depth):
+        # Node visited at `level` on the path to leaf block `ic`:
+        # idx = 2^level - 1 + (leaf0 >> (depth - level)), leaf0 = ic*blk_c.
+        idx = (1 << level) - 1 + (ic * blk_c >> (depth - level))
+        w_row = pl.load(w_ref, (pl.dslice(idx, 1), slice(None)))   # (1,k)
+        b_val = pl.load(b_ref, (pl.dslice(idx, 1),))
+        z = (jax.lax.dot_general(
+            x, w_row.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) + b_val)           # (blk_b,1)
+        bit = (ic * blk_c >> (depth - 1 - level)) & 1
+        zeta = jnp.where(bit == 1, 1.0, -1.0)
+        prefix = prefix + jax.nn.log_sigmoid(zeta * z)
+
+    # ---- in-block recursion over sub_depth levels ----
+    logp = jnp.broadcast_to(prefix, (blk_b, 1))
+    for level in range(sub_depth):
+        n_lvl = 1 << level
+        # Within full tree: nodes [2^L - 1 + ic*blk_c/2^(sub_depth-level),
+        # + n_lvl) with L = pre_depth + level.
+        full_level = pre_depth + level
+        base = (1 << full_level) - 1 + ic * n_lvl
+        w_lvl = pl.load(w_ref, (pl.dslice(base, n_lvl), slice(None)))
+        b_lvl = pl.load(b_ref, (pl.dslice(base, n_lvl),))
+        z = (jax.lax.dot_general(
+            x, w_lvl.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) + b_lvl)   # (blk_b, n_lvl)
+        left = logp + jax.nn.log_sigmoid(-z)
+        right = logp + jax.nn.log_sigmoid(z)
+        logp = jnp.stack([left, right], axis=-1).reshape(blk_b, 2 * n_lvl)
+
+    o_ref[...] = logp
+
+
+def tree_logprob_all(w, b, x, *, blk_b: int = 128, blk_c: int = 256,
+                     interpret: bool = False):
+    """w: (n_nodes, k), b: (n_nodes,), x: (B, k) -> (B, C_pad) fp32."""
+    n_nodes = b.shape[0]
+    depth = (n_nodes + 1).bit_length() - 1
+    assert (1 << depth) == n_nodes + 1
+    c_pad = 1 << depth
+    bsz, k = x.shape
+    blk_c = min(blk_c, c_pad)
+    blk_b = min(blk_b, bsz)
+    assert c_pad % blk_c == 0 and bsz % blk_b == 0
+    assert (blk_c & (blk_c - 1)) == 0, "blk_c must be a power of two"
+
+    kernel = functools.partial(_kernel, depth=depth, blk_c=blk_c, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // blk_b, c_pad // blk_c),
+        in_specs=[
+            pl.BlockSpec((blk_b, k), lambda ib, ic: (ib, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # full node table (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((blk_b, blk_c), lambda ib, ic: (ib, ic)),
+        out_shape=jax.ShapeDtypeStruct((bsz, c_pad), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)

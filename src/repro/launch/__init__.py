@@ -1,0 +1,3 @@
+# Launch layer: meshes, dry-run, training/serving entry points.
+# NOTE: do not import repro.launch.dryrun from here — it pins XLA_FLAGS and
+# must be the first jax-touching import of its process.

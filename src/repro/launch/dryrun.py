@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); 512 placeholder host devices back the production
+meshes (16,16) and (2,16,16).
+
+Per cell:
+  1. full-depth scanned compile on the production mesh — proves the
+     sharding config is coherent, yields memory_analysis();
+  2. unrolled L=1 and L=2 compiles — cost_analysis() + HLO collective
+     bytes, extrapolated to full depth (XLA counts while bodies once;
+     see repro.analysis.roofline);
+  3. JSON artifact under benchmarks/artifacts/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k \
+      --mesh both --out benchmarks/artifacts/dryrun
+  python -m repro.launch.dryrun --all --skip-existing
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_lib
+from repro.analysis import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm_head, specs, transformer
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig
+from repro.parallel import (batch_shardings, cache_shardings, params_shardings,
+                            replicated, train_state_shardings)
+from repro.train import (init_train_state, make_serve_step, make_train_step)
+from repro.train.state import TrainState
+
+OUT_DEFAULT = "benchmarks/artifacts/dryrun"
+
+
+def _mesh(kind: str):
+    return make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def _abstract_train_state(cfg: ModelConfig, opt_cfg, head_kind: str):
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg,
+                                 head_kind))
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: return (fn, input_specs, in_shardings) for one dict arg.
+# ---------------------------------------------------------------------------
+
+def build_train_cell(cfg: ModelConfig, mesh, seq_len: int, batch: int,
+                     head_kind: str):
+    hcfg = lm_head.head_config(cfg, head_kind, n_neg=1, reg=1e-3)
+    opt_cfg = OptimizerConfig(name="adagrad", learning_rate=0.01,
+                              clip_norm=1.0)
+    train_step = make_train_step(cfg, hcfg, opt_cfg)
+
+    def step(inputs):
+        rng = jax.random.PRNGKey(inputs["seed"])
+        state, metrics = train_step(inputs["state"], inputs["batch"], rng)
+        return state, metrics
+
+    state_abs = _abstract_train_state(cfg, opt_cfg, head_kind)
+    batch_abs = specs.train_input_specs(cfg, seq_len, batch)
+    in_spec = {"state": state_abs, "batch": batch_abs,
+               "seed": jax.ShapeDtypeStruct((), jnp.uint32)}
+    in_sh = {"state": train_state_shardings(cfg, mesh, state_abs),
+             "batch": batch_shardings(cfg, mesh, batch_abs),
+             "seed": replicated(mesh, jax.ShapeDtypeStruct((), jnp.uint32))}
+    out_sh = (in_sh["state"], None)
+    return step, in_spec, in_sh, out_sh
+
+
+def build_decode_cell(cfg: ModelConfig, mesh, seq_len: int, batch: int,
+                      head_kind: str):
+    hcfg = lm_head.head_config(cfg, head_kind)
+    serve_step = make_serve_step(cfg, hcfg)
+
+    def step(inputs):
+        tok, cache = serve_step(inputs["params"], inputs["head_state"],
+                                inputs["token"], inputs["cache"],
+                                inputs["cache_pos"],
+                                positions=inputs.get("positions"))
+        return tok, cache
+
+    d_spec = specs.decode_input_specs(cfg, seq_len, batch)
+    params_abs = specs.params_specs(cfg)
+    head_abs = jax.eval_shape(
+        lambda: lm_head.default_head_state(jax.random.PRNGKey(0), cfg,
+                                           head_kind))
+    in_spec = {"params": params_abs, "head_state": head_abs, **d_spec}
+    cache_sh = cache_shardings(cfg, mesh, d_spec["cache"], batch)
+    in_sh = {"params": params_shardings(cfg, mesh, params_abs),
+             "head_state": replicated(mesh, head_abs),
+             "token": batch_shardings(cfg, mesh, d_spec["token"]),
+             "cache": cache_sh,
+             "cache_pos": replicated(mesh, d_spec["cache_pos"])}
+    if "positions" in d_spec:
+        in_sh["positions"] = batch_shardings(cfg, mesh, d_spec["positions"])
+    out_sh = (in_sh["token"], cache_sh)
+    return step, in_spec, in_sh, out_sh
+
+
+def build_prefill_cell(cfg: ModelConfig, mesh, seq_len: int, batch: int,
+                       head_kind: str):
+    hcfg = lm_head.head_config(cfg, head_kind)
+
+    def step(inputs):
+        h, cache, _ = transformer.forward(
+            inputs["params"], cfg, inputs["tokens"],
+            positions=inputs.get("positions"),
+            vision_embeds=inputs.get("vision_embeds"),
+            cache=inputs["cache"], cache_pos=jnp.int32(0))
+        scores = lm_head.lm_predictive_scores(
+            cfg, hcfg, lm_head.HeadParams(**inputs["params"]["head"]),
+            inputs["head_state"], h[:, -1])
+        token = jnp.argmax(scores, axis=-1).astype(jnp.int32)[:, None]
+        return token, cache
+
+    p_spec = specs.prefill_input_specs(cfg, seq_len, batch)
+    cache_abs = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, seq_len))
+    params_abs = specs.params_specs(cfg)
+    head_abs = jax.eval_shape(
+        lambda: lm_head.default_head_state(jax.random.PRNGKey(0), cfg,
+                                           head_kind))
+    in_spec = {"params": params_abs, "head_state": head_abs,
+               "cache": cache_abs, **p_spec}
+    in_sh = {"params": params_shardings(cfg, mesh, params_abs),
+             "head_state": replicated(mesh, head_abs),
+             "cache": cache_shardings(cfg, mesh, cache_abs, batch),
+             **{k: batch_shardings(cfg, mesh, v) for k, v in p_spec.items()}}
+    out_sh = (batch_shardings(
+        cfg, mesh, jax.ShapeDtypeStruct((batch, 1), jnp.int32)),
+        in_sh["cache"])
+    return step, in_spec, in_sh, out_sh
+
+
+BUILDERS = {"train": build_train_cell, "decode": build_decode_cell,
+            "prefill": build_prefill_cell}
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def compile_cell(cfg: ModelConfig, mesh, mode: str, seq_len: int,
+                 batch: int, head_kind: str, seq_shard_attn: bool = False,
+                 seq_parallel_residual: bool = False,
+                 fsdp_gather: bool = False):
+    import contextlib
+
+    from repro.parallel.hints import sharding_hints
+    from repro.parallel.sharding import mesh_axes
+
+    build = BUILDERS[mode]
+    step, in_spec, in_sh, out_sh = build(cfg, mesh, seq_len, batch,
+                                         head_kind)
+    jitted = jax.jit(step, in_shardings=(in_sh,), out_shardings=out_sh)
+    dp_axes, model_axis = mesh_axes(mesh)
+    any_hint = seq_shard_attn or seq_parallel_residual or fsdp_gather
+    ctx = (sharding_hints(mesh, dp_axes, model_axis,
+                          seq_shard_attention=seq_shard_attn,
+                          seq_parallel_residual=seq_parallel_residual,
+                          fsdp_gather_weights=fsdp_gather)
+           if any_hint else contextlib.nullcontext())
+    with ctx:
+        lowered = jitted.lower(in_spec)
+    compiled = lowered.compile()
+    return compiled
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, head_kind: str,
+             with_cost: bool = True,
+             cfg_override=None, seq_shard_attn: bool = False,
+             seq_parallel_residual: bool = False,
+             fsdp_gather: bool = False
+             ) -> Dict[str, Any]:
+    cfg = cfg_override or cfg_lib.get_config(arch)
+    cell = cfg_lib.shape_cells(arch)[shape]
+    if cell is None:
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": "long-context requires sub-quadratic attention"}
+    mesh = _mesh(mesh_kind)
+    mode, seq_len, batch = cell["mode"], cell["seq_len"], cell["global_batch"]
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "mode": mode,
+        "seq_len": seq_len, "global_batch": batch, "head": head_kind,
+        "chips": mesh.size, "status": "ok",
+    }
+    result["seq_shard_attn"] = seq_shard_attn
+    result["seq_parallel_residual"] = seq_parallel_residual
+    result["fsdp_gather"] = fsdp_gather
+    t0 = time.time()
+    compiled = compile_cell(cfg, mesh, mode, seq_len, batch, head_kind,
+                            seq_shard_attn=seq_shard_attn,
+                            seq_parallel_residual=seq_parallel_residual,
+                            fsdp_gather=fsdp_gather)
+    result["compile_s"] = round(time.time() - t0, 1)
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                result[k] = int(v)
+        result["bytes_per_device"] = int(
+            getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0))
+
+    if with_cost:
+        # Unrolled L=1 / L=2 for trip-count-correct cost extrapolation.
+        reports = []
+        for n_layers in (1, 2):
+            cfg_small = dataclasses.replace(cfg, num_layers=n_layers,
+                                            scan_layers=False, remat=False)
+            comp = compile_cell(
+                cfg_small, mesh, mode, seq_len, batch, head_kind,
+                seq_shard_attn=seq_shard_attn,
+                seq_parallel_residual=seq_parallel_residual,
+                fsdp_gather=fsdp_gather)
+            reports.append(rl.report_from_compiled(comp))
+        total = rl.extrapolate_layers(reports[0], reports[1],
+                                      cfg.num_layers)
+        n_active = cfg.active_param_count()
+        tokens = batch * seq_len if mode in ("train", "prefill") else batch
+        mf = (6.0 if mode == "train" else 2.0) * n_active * tokens
+        roof = rl.roofline_terms(total, mesh.size, mf)
+        result.update({
+            "hlo_flops_per_device": total.flops,
+            "hlo_bytes_per_device": total.bytes_accessed,
+            "collective_bytes_per_device": total.collective_total,
+            "collectives": total.collectives,
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "bottleneck": roof.bottleneck,
+            "model_flops": mf,
+            "useful_flops_fraction": roof.useful_flops_fraction,
+            "mfu_bound": roof.mfu_bound,
+        })
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--head", default="adversarial_ns")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip the L=1/L=2 cost compiles")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--seq-shard-attn", action="store_true",
+                    help="perf hint: sequence-shard attention for archs "
+                         "with non-TP-divisible head counts")
+    ap.add_argument("--seq-parallel-residual", action="store_true",
+                    help="perf hint: Megatron-style sequence-parallel "
+                         "residual stream")
+    ap.add_argument("--fsdp-gather", action="store_true",
+                    help="perf hint: all-gather bf16 weight copies over "
+                         "the data axes (explicit-FSDP guidance)")
+    ap.add_argument("--softmax-dtype", default=None,
+                    help="override attention softmax dtype (e.g. bfloat16)")
+    ap.add_argument("--ssm-chunk", type=int, default=None,
+                    help="override the SSD chunk length (perf knob: the "
+                         "intra-chunk decay matrix scales linearly in it)")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--out", default=OUT_DEFAULT)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(cfg_lib.ARCHS)
+    shapes = [args.shape] if args.shape else list(cfg_lib.SHAPES)
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    os.makedirs(args.out, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}_{shape}_{mesh_kind}_{args.head}{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                try:
+                    cfg_over = None
+                    over = {}
+                    if args.softmax_dtype:
+                        over["softmax_dtype"] = args.softmax_dtype
+                    if args.ssm_chunk:
+                        over["ssm_chunk"] = args.ssm_chunk
+                    if over:
+                        cfg_over = dataclasses.replace(
+                            cfg_lib.get_config(arch), **over)
+                    res = run_cell(
+                        arch, shape, mesh_kind, args.head,
+                        with_cost=not args.no_cost,
+                        cfg_override=cfg_over,
+                        seq_shard_attn=args.seq_shard_attn,
+                        seq_parallel_residual=args.seq_parallel_residual,
+                        fsdp_gather=args.fsdp_gather)
+                except Exception as e:          # noqa: BLE001
+                    res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "head": args.head, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                status = res["status"]
+                extra = ""
+                if status == "ok" and "bottleneck" in res:
+                    extra = (f" bottleneck={res['bottleneck']}"
+                             f" mfu_bound={res['mfu_bound']:.3f}")
+                print(f"[{status}] {tag}{extra}", flush=True)
+    print(f"done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

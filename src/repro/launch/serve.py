@@ -1,0 +1,80 @@
+"""Serving launcher: prefill + batched greedy decode on a mesh, with the
+paper's Eq. 5 bias removal in the sampling path.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduced \
+      --batch 4 --prompt-len 16 --gen 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_lib
+from repro.models import lm_head, transformer
+from repro.parallel import (batch_shardings, cache_shardings,
+                            params_shardings, replicated)
+from repro.train import make_prefill, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b",
+                    choices=list(cfg_lib.ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--head", default="adversarial_ns")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(model_axis=args.model_axis)
+    cfg = (cfg_lib.reduced_config(args.arch) if args.reduced
+           else cfg_lib.get_config(args.arch))
+    max_len = args.prompt_len + args.gen
+
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.device_put(params, params_shardings(
+        cfg, mesh, jax.eval_shape(lambda: params)))
+    head_state = lm_head.default_head_state(jax.random.PRNGKey(1), cfg,
+                                            args.head)
+    hcfg = lm_head.head_config(cfg, args.head)
+
+    cache = transformer.init_cache(cfg, args.batch, max_len)
+    cache_sh = cache_shardings(cfg, mesh, jax.eval_shape(lambda: cache),
+                               args.batch)
+    cache = jax.device_put(cache, cache_sh)
+
+    prefill = jax.jit(make_prefill(cfg))
+    serve_step = jax.jit(make_serve_step(cfg, hcfg))
+
+    prompts = jax.random.randint(jax.random.PRNGKey(2),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    _, cache = prefill(params, prompts, cache)
+    jax.block_until_ready(jax.tree.leaves(cache)[0])
+    print(f"prefill {args.batch}x{args.prompt_len}: "
+          f"{(time.time()-t0)*1e3:.0f} ms")
+
+    token = prompts[:, -1:]
+    toks = []
+    t0 = time.time()
+    for t in range(args.gen):
+        token, cache = serve_step(params, head_state, token, cache,
+                                  jnp.int32(args.prompt_len + t))
+        toks.append(token)
+    jax.block_until_ready(token)
+    dt = time.time() - t0
+    print(f"decode {args.gen} steps: {dt*1e3:.0f} ms "
+          f"({args.batch*args.gen/dt:.1f} tok/s) [debiased scores]")
+    print("sample:", jnp.concatenate(toks, 1)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

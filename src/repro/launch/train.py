@@ -1,0 +1,102 @@
+"""Training launcher: pjit the train step onto a mesh and run the
+fault-tolerant loop.
+
+On a TPU cluster this is the per-host entry point (jax.distributed +
+make_production_mesh); on this CPU container it runs reduced configs on a
+host mesh (set XLA_FLAGS=--xla_force_host_platform_device_count=8 to
+exercise real multi-device sharding).
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b --reduced \
+      --steps 20 --head adversarial_ns --ckpt /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_lib
+from repro.data import lm_batch_fn
+from repro.models import lm_head
+from repro.optim import OptimizerConfig
+from repro.parallel import batch_shardings, train_state_shardings
+from repro.train import (LoopConfig, init_train_state, make_train_step,
+                         run_loop)
+from repro.train.generator_fit import fit_lm_generator
+
+
+def build(args):
+    cfg = (cfg_lib.reduced_config(args.arch) if args.reduced
+           else cfg_lib.get_config(args.arch))
+    hcfg = lm_head.head_config(cfg, args.head, n_neg=args.n_neg,
+                               reg=args.reg)
+    opt = OptimizerConfig(name=args.optimizer, learning_rate=args.lr,
+                          clip_norm=1.0)
+    return cfg, hcfg, opt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b",
+                    choices=list(cfg_lib.ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--head", default="adversarial_ns")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--reg", type=float, default=1e-4)
+    ap.add_argument("--n-neg", type=int, default=1)
+    ap.add_argument("--optimizer", default="adagrad")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--gen-warmup", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(model_axis=args.model_axis)
+    print(f"mesh: {dict(mesh.shape)} on {jax.device_count()} devices")
+
+    cfg, hcfg, opt = build(args)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt, args.head)
+    state_sh = train_state_shardings(cfg, mesh, jax.eval_shape(lambda:
+                                                               state))
+    state = jax.device_put(state, state_sh)
+
+    make = lm_batch_fn(cfg.vocab_size, args.batch, args.seq, seed=0)
+    batch_abs = jax.eval_shape(lambda: {k: jnp.asarray(v)
+                                        for k, v in make(0).items()})
+    batch_sh = batch_shardings(cfg, mesh, batch_abs)
+    train_step = jax.jit(make_train_step(cfg, hcfg, opt),
+                         in_shardings=(state_sh, batch_sh, None),
+                         out_shardings=(state_sh, None))
+
+    def batch_fn(step):
+        return jax.device_put({k: jnp.asarray(v)
+                               for k, v in make(step).items()}, batch_sh)
+
+    gen_cb = None
+    if args.gen_warmup and args.head in ("adversarial_ns", "nce",
+                                         "sampled_softmax", "freq_ns"):
+        gen_cb = lambda st: fit_lm_generator(          # noqa: E731
+            st.params, cfg, (make(10_000 + i) for i in range(8)),
+            kind=args.head, max_tokens=8192)
+
+    loop = LoopConfig(total_steps=args.steps,
+                      checkpoint_every=max(args.steps // 2, 1),
+                      checkpoint_dir=args.ckpt,
+                      gen_warmup_steps=args.gen_warmup)
+    state, hist = run_loop(
+        state, train_step, batch_fn, loop, jax.random.PRNGKey(1),
+        gen_fit_fn=gen_cb,
+        on_step=lambda s, m: print(
+            f"step {s:4d} loss={m['loss']:.4f} "
+            f"{m['step_time']*1e3:.0f}ms", flush=True))
+    print(f"final loss {hist['loss'][-1]:.4f}; "
+          f"stragglers={hist['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

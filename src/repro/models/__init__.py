@@ -1,0 +1,5 @@
+"""Model zoo: composable decoder blocks for all assigned arch families."""
+from repro.models.config import ModelConfig
+from repro.models.transformer import (forward, init_cache, init_params)
+
+__all__ = ["ModelConfig", "forward", "init_cache", "init_params"]

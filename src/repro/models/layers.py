@@ -1,0 +1,227 @@
+"""Core layers: RMSNorm, (M-)RoPE, GQA attention (SWA / softcap), SwiGLU.
+
+Pure-jax parameter-dict style (no flax): each layer is an ``init_*`` returning
+a param pytree plus an ``apply``-style function. All attention math runs in
+fp32; bulk matmuls honour ``cfg.dtype``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def normal_init(rng, shape, fan_in, dtype=jnp.float32):
+    return (jax.random.normal(rng, shape) / jnp.sqrt(float(max(fan_in, 1)))
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}    # (1 + scale) * x-hat
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE sections, qwen2-vl style)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               sections: Tuple[int, ...] = ()) -> jax.Array:
+    """x: (B, S, H, hd). positions: (B, S) or (n_sections, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the rotary half-dims are split into `sections`
+    (temporal/height/width), each rotated by its own position stream. With
+    identical streams this reduces exactly to standard RoPE.
+    """
+    b, s, h, hd = x.shape
+    half = hd // 2
+    inv_freq = rope_frequencies(hd, theta)                    # (half,)
+    if positions.ndim == 2:
+        pos = positions[None]                                 # (1, B, S)
+        sections = (half,)
+    else:
+        pos = positions
+        if not sections:
+            sections = (half,)
+    assert sum(sections) == half, (sections, half)
+    # Build per-dim position source by section.
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=half)
+    pos_per_dim = pos[sec_id, :, :]                           # (half, B, S)
+    angles = jnp.einsum("fbs,f->bsf", pos_per_dim.astype(jnp.float32),
+                        inv_freq)                             # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]                      # (B,S,1,half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig):
+    d, h, kv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": normal_init(ks[0], (d, h, hd), d),
+        "wk": normal_init(ks[1], (d, kv, hd), d),
+        "wv": normal_init(ks[2], (d, kv, hd), d),
+        "wo": normal_init(ks[3], (h, hd, d), h * hd),
+    }
+
+
+def _softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+def _expand_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, KV*groups, hd) via broadcast (GQA)."""
+    b, s, kv, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd))
+    return k.reshape(b, s, kv * groups, hd)
+
+
+def causal_window_mask(seq_len: int, window: int) -> jax.Array:
+    """(S, S) bool validity mask: causal, optionally sliding-window."""
+    pos = jnp.arange(seq_len)
+    delta = pos[:, None] - pos[None, :]
+    valid = delta >= 0
+    if window > 0:
+        valid &= delta < window
+    return valid
+
+
+def attention(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+              window: jax.Array,
+              kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_pos: Optional[jax.Array] = None,
+              mask: Optional[jax.Array] = None):
+    """GQA attention with causal + per-layer sliding-window mask + softcap.
+
+    Training/prefill: ``kv_cache is None`` → self-attention over x and the
+    freshly written cache (k, v) is returned for serving prefill.
+    Decode: ``kv_cache=(k, v)`` of shape (B, S_max, KV, hd), ``cache_pos``
+    scalar index of the current token; x has S=1.
+
+    ``window`` is a traced int32 scalar (0 = full attention) so that
+    heterogeneous layers (gemma2 local/global) share one scanned body.
+    ``mask`` (..., Sq, Skv), if given, OVERRIDES the position-derived mask —
+    the training path hoists one (S, S) mask out of the layer scan instead
+    of materializing (B, S, S) index arithmetic per layer (§Perf C1).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    groups = h // kv
+    cdt = _dtype(cfg)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cdt))
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    # Perf hint (no-op without an installed hint context): sequence-shard q
+    # over 'model' when the head count is not TP-divisible — otherwise the
+    # whole attention replicates per model shard (EXPERIMENTS.md §Perf).
+    from repro.parallel.hints import hint_attn_out, hint_attn_q
+    q = hint_attn_q(q, h)
+
+    if kv_cache is None:
+        k_all, v_all = k, v
+        k_pos = positions if positions.ndim == 2 else positions[0]
+        q_pos = k_pos
+        new_cache = (k, v)
+    else:
+        ck, cv = kv_cache
+        k_all = jax.lax.dynamic_update_slice_in_dim(
+            ck, k.astype(ck.dtype), cache_pos, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(
+            cv, v.astype(cv.dtype), cache_pos, axis=1)
+        s_max = ck.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(s_max)[None], (b, s_max))
+        q_pos = positions if positions.ndim == 2 else positions[0]
+        new_cache = (k_all, v_all)
+
+    kx = _expand_kv(k_all, groups)
+    vx = _expand_kv(v_all, groups)
+    sm_dt = jnp.dtype(cfg.softmax_dtype)
+    # Fold the 1/sqrt(hd) scale into q: one (B,S,H,hd) multiply instead of
+    # an (B,H,Sq,Skv) one (§Perf C3).
+    q = q * (1.0 / jnp.sqrt(float(hd))).astype(q.dtype)
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, kx,
+                        preferred_element_type=sm_dt)
+    logits = _softcap(logits, cfg.attn_logit_softcap)
+    # Under a logit softcap the logits are bounded (|z| <= cap), so the
+    # max-subtraction in softmax is unnecessary: exp(cap) is far from f32
+    # overflow. Masked entries use -1e4 (exp -> 0 exactly, no overflow).
+    # Saves the (B,H,Sq,Skv) max-reduce + subtract passes (§Perf C3).
+    capped = cfg.attn_logit_softcap > 0.0
+    neg_inf = jnp.asarray(-1e4 if capped else jnp.finfo(sm_dt).min / 2,
+                          sm_dt)
+    if mask is not None:
+        # Precomputed (Sq, Skv) mask: batch- and head-free broadcast.
+        logits = jnp.where(mask[None, None], logits, neg_inf)
+    else:
+        # causal + sliding-window: 0 <= q_pos - k_pos (< window if set)
+        delta = q_pos[:, :, None] - k_pos[:, None, :]    # (B, q, kv_len)
+        valid = delta >= 0
+        valid = valid & jnp.where(window > 0, delta < window, True)
+        logits = jnp.where(valid[:, None, :, :], logits, neg_inf)
+    if capped:
+        ex = jnp.exp(logits)
+        probs = (ex / jnp.sum(ex, axis=-1, keepdims=True)).astype(cdt)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1).astype(cdt)
+    out = jnp.einsum("bhqs,bshk->bqhk", probs, vx)
+    out = jnp.einsum("bqhk,hkd->bqd", out, params["wo"].astype(cdt))
+    out = hint_attn_out(out)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d: int, d_ff: int):
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": normal_init(ks[0], (d, d_ff), d),
+        "w_up": normal_init(ks[1], (d, d_ff), d),
+        "w_down": normal_init(ks[2], (d_ff, d), d_ff),
+    }
+
+
+def mlp(params, x: jax.Array, dtype) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      params["w_down"].astype(dtype))

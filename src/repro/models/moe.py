@@ -1,0 +1,185 @@
+"""Mixture-of-Experts FFN: shared + fine-grained routed experts.
+
+Dispatch is **group-local capacity-gather** (GShard-style groups = batch
+rows): routing, sort and capacity assignment happen independently per
+sequence, so under pjit with batch sharded over the data axes every sort
+and scatter is shard-local — no distributed sort. (The first version
+sorted the *global* flattened token axis; XLA lowered that to a
+distributed sort costing TiB/step of all-reduce + all-to-all on
+mixtral-8x22b — see EXPERIMENTS.md §Perf iteration B1.)
+
+The one-hot GShard dispatch einsum is avoided too: its (T, E, C_cap)
+tensor is O(T²·cf) memory, while the gather path materializes only the
+expanded tokens (E, C_cap, d) ≈ top_k·cf·T rows. Tokens beyond per-group
+expert capacity are dropped (standard), counted in metrics.
+
+Covers deepseek-moe (64 routed top-6 + 2 shared, softmax→topk) and mixtral
+(8 routed top-2, topk→softmax).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import normal_init
+
+
+def init_moe(rng, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 5)
+    params = {
+        "router": normal_init(ks[0], (d, e), d),
+        "w_gate": normal_init(ks[1], (e, d, f), d),
+        "w_up": normal_init(ks[2], (e, d, f), d),
+        "w_down": normal_init(ks[3], (e, f, d), f),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        params["shared"] = {
+            "w_gate": normal_init(kg, (d, fs), d),
+            "w_up": normal_init(ku, (d, fs), d),
+            "w_down": normal_init(kd, (fs, d), fs),
+        }
+    return params
+
+
+def _capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    cap = int(group_tokens * cfg.top_k * cfg.capacity_factor
+              / cfg.n_experts)
+    return max(8, -(-cap // 8) * 8)   # round up to 8
+
+
+def _route(cfg: ModelConfig, params, xt):
+    """xt: (G, S, d) -> (gate_vals, top_idx) each (G, S, k), + raw logits."""
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    if cfg.router_norm == "softmax_topk":          # deepseek-moe
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, top_idx = jax.lax.top_k(probs, cfg.top_k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    else:                                          # mixtral: topk -> softmax
+        top_logits, top_idx = jax.lax.top_k(logits, cfg.top_k)
+        gate_vals = jax.nn.softmax(top_logits, axis=-1)
+    return gate_vals, top_idx, logits
+
+
+def moe_ffn(params, cfg: ModelConfig, x: jax.Array):
+    """x: (B, S, d) -> (B, S, d), plus aux metrics dict.
+
+    Groups = batch rows: all sorts/scatters are along the last axis of
+    (B, ...) arrays, i.e. local to whichever shard owns the row.
+    """
+    bsz, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cdt = jnp.dtype(cfg.dtype)
+    cap = _capacity(cfg, s)
+
+    gate_vals, top_idx, logits = _route(cfg, params, x)
+
+    sk = s * k
+    flat_expert = top_idx.reshape(bsz, sk)                  # (B, S*k)
+    # token of assignment j is j // k:
+    flat_token = jnp.broadcast_to(
+        (jnp.arange(sk) // k)[None], (bsz, sk)).astype(jnp.int32)
+    flat_gate = gate_vals.reshape(bsz, sk)
+
+    order = jnp.argsort(flat_expert, axis=-1)               # per-row sort
+    se = jnp.take_along_axis(flat_expert, order, -1)
+    stok = jnp.take_along_axis(flat_token, order, -1)
+    sgate = jnp.take_along_axis(flat_gate, order, -1)
+    # Position of each assignment within its expert (per row).
+    start = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)
+    pos_in_e = jnp.arange(sk)[None] - jnp.take_along_axis(start, se, -1)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)    # overflow slot
+
+    rows = jnp.arange(bsz)[:, None]
+    slot_token = jnp.zeros((bsz, e * cap + 1), jnp.int32).at[
+        rows, slot].set(stok, mode="drop")
+    slot_gate = jnp.zeros((bsz, e * cap + 1), jnp.float32).at[
+        rows, slot].set(jnp.where(keep, sgate, 0.0), mode="drop")
+    slot_token = slot_token[:, :-1].reshape(bsz, e, cap)
+    slot_gate = slot_gate[:, :-1].reshape(bsz, e, cap)
+
+    xe = jnp.take_along_axis(
+        x, slot_token.reshape(bsz, e * cap)[..., None], axis=1)
+    xe = xe.reshape(bsz, e, cap, d) * (slot_gate[..., None] != 0.0)
+
+    # Fold (B, cap) into one token dim so the expert matmuls are plain 3-D
+    # batched GEMMs: GSPMD partitions the 4-D two-batch-dim einsum's
+    # BACKWARD badly (it all-reduces a (E, f, B_full, cap) intermediate —
+    # 20 GiB/layer on mixtral — instead of the (E,d,f) dW; see
+    # EXPERIMENTS.md §Perf iteration B2).
+    xt_e = xe.transpose(1, 0, 2, 3).reshape(e, bsz * cap, d)
+    # FSDP hint: gather bf16 expert weights over the data axes up front,
+    # keeping TP on the expert dim (deepseek-moe) or the d_ff dim (mixtral).
+    # No-op without an installed hint context — §Perf B3.
+    from repro.parallel import hints
+    w_g = hints.hint_gathered_weight(params["w_gate"].astype(cdt), (0, 2))
+    w_u = hints.hint_gathered_weight(params["w_up"].astype(cdt), (0, 2))
+    w_d = hints.hint_gathered_weight(params["w_down"].astype(cdt), (0, 1))
+    # Keep the expert activations token-sharded (else GSPMD replicates the
+    # compute once the weights look replicated) — §Perf B4.
+    g = hints.hint_expert_act(
+        jnp.einsum("etd,edf->etf", xt_e.astype(cdt), w_g), 1, (0, 2))
+    u = hints.hint_expert_act(
+        jnp.einsum("etd,edf->etf", xt_e.astype(cdt), w_u), 1, (0, 2))
+    yt = hints.hint_expert_act(
+        jnp.einsum("etf,efd->etd", jax.nn.silu(g) * u, w_d), 1, (0,))
+    ye = yt.reshape(e, bsz, cap, d).transpose(1, 0, 2, 3)
+
+    weighted = ye.astype(jnp.float32) * slot_gate[..., None]
+    out = jnp.zeros((bsz, s, d), jnp.float32).at[
+        rows, slot_token.reshape(bsz, e * cap)].add(
+        weighted.reshape(bsz, e * cap, d))
+
+    metrics = {
+        "moe_dropped_frac":
+            1.0 - jnp.sum(keep.astype(jnp.float32)) / (bsz * sk),
+        "moe_router_entropy": -jnp.mean(jnp.sum(
+            jax.nn.softmax(logits, -1) * jax.nn.log_softmax(logits, -1),
+            -1)),
+    }
+
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        sg = jnp.einsum("gsd,df->gsf", x.astype(cdt),
+                        sp["w_gate"].astype(cdt))
+        su = jnp.einsum("gsd,df->gsf", x.astype(cdt),
+                        sp["w_up"].astype(cdt))
+        out = out + jnp.einsum("gsf,fd->gsd", jax.nn.silu(sg) * su,
+                               sp["w_down"].astype(cdt)).astype(jnp.float32)
+
+    return out.astype(x.dtype), metrics
+
+
+def moe_ffn_dense_oracle(params, cfg: ModelConfig, x: jax.Array):
+    """O(T·E) reference: every token through every expert, gated. Used by
+    tests to validate the capacity-gather dispatch (with cf large enough
+    that nothing drops)."""
+    bsz, s, d = x.shape
+    t = bsz * s
+    xt = x.reshape(t, d).astype(jnp.float32)
+    logits = xt @ params["router"].astype(jnp.float32)
+    if cfg.router_norm == "softmax_topk":
+        probs = jax.nn.softmax(logits, -1)
+        gate_vals, top_idx = jax.lax.top_k(probs, cfg.top_k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    else:
+        top_logits, top_idx = jax.lax.top_k(logits, cfg.top_k)
+        gate_vals = jax.nn.softmax(top_logits, -1)
+    gates = jnp.zeros((t, cfg.n_experts)).at[
+        jnp.arange(t)[:, None], top_idx].set(gate_vals)
+    g = jnp.einsum("td,edf->tef", xt, params["w_gate"].astype(jnp.float32))
+    u = jnp.einsum("td,edf->tef", xt, params["w_up"].astype(jnp.float32))
+    ye = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u,
+                    params["w_down"].astype(jnp.float32))
+    out = jnp.einsum("te,ted->td", gates, ye)
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        sg = xt @ sp["w_gate"].astype(jnp.float32)
+        su = xt @ sp["w_up"].astype(jnp.float32)
+        out = out + (jax.nn.silu(sg) * su) @ sp["w_down"].astype(jnp.float32)
+    return out.reshape(bsz, s, d).astype(x.dtype)

@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct input stand-ins for every model entry point.
+
+``input_specs(cfg, shape)`` builds the exact abstract inputs for
+train/prefill/decode so the dry-run can ``jit(...).lower(**specs)`` without
+allocating anything. For [audio]/[vlm] archs the frontend is a stub: specs
+provide token ids over the codec vocab / precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: ModelConfig, seq_len: int, batch: int
+                      ) -> Dict[str, Any]:
+    """Inputs of train_step: token ids + labels (next tokens) + rng."""
+    specs = {
+        "tokens": sds((batch, seq_len), jnp.int32),
+        "labels": sds((batch, seq_len), jnp.int32),
+        "mask": sds((batch, seq_len), jnp.float32),
+    }
+    if cfg.modality == "vision":
+        nv = cfg.num_vision_tokens
+        assert nv < seq_len
+        specs["tokens"] = sds((batch, seq_len - nv), jnp.int32)
+        specs["vision_embeds"] = sds((batch, nv, cfg.d_model), jnp.bfloat16)
+        specs["positions"] = sds((3, batch, seq_len), jnp.int32)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, seq_len: int, batch: int
+                        ) -> Dict[str, Any]:
+    specs = {"tokens": sds((batch, seq_len), jnp.int32)}
+    if cfg.modality == "vision":
+        nv = cfg.num_vision_tokens
+        specs["tokens"] = sds((batch, seq_len - nv), jnp.int32)
+        specs["vision_embeds"] = sds((batch, nv, cfg.d_model), jnp.bfloat16)
+        specs["positions"] = sds((3, batch, seq_len), jnp.int32)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, seq_len: int, batch: int
+                       ) -> Dict[str, Any]:
+    """serve_step: one new token against a cache of length seq_len."""
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, seq_len))
+    specs = {
+        "token": sds((batch, 1), jnp.int32),
+        "cache": cache,
+        "cache_pos": sds((), jnp.int32),
+    }
+    if cfg.mrope_sections:
+        specs["positions"] = sds((3, batch, 1), jnp.int32)
+    return specs
+
+
+def params_specs(cfg: ModelConfig):
+    """Abstract parameter tree (no allocation) via eval_shape."""
+    return jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,10 @@
+from repro.optim.compression import (EFState, compress_with_error_feedback,
+                                     decompress, init_ef_state)
+from repro.optim.optimizers import (OptimizerConfig, OptState, apply_updates,
+                                    clip_by_global_norm, global_norm,
+                                    init_opt_state, schedule)
+
+__all__ = ["EFState", "compress_with_error_feedback", "decompress",
+           "init_ef_state", "OptimizerConfig", "OptState", "apply_updates",
+           "clip_by_global_norm", "global_norm", "init_opt_state",
+           "schedule"]

@@ -1,0 +1,61 @@
+"""int8 gradient compression with error feedback, for the DP all-reduce.
+
+At 1000+ nodes the gradient all-reduce is the dominant inter-pod collective;
+8-bit quantization cuts its bytes 4x (fp32) / 2x (bf16). Error feedback
+(Seide et al. 2014; Karimireddy et al. 2019 "EF-SGD") accumulates the
+quantization residual locally and re-injects it next step, preserving
+convergence (tested in tests/test_compression.py).
+
+`compress -> (psum over data axes) -> decompress` is linear, so quantized
+all-reduce == all-reduce of quantized values; the shard_map wiring lives in
+repro.parallel.collectives.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    error: Any      # residual pytree, same structure as grads
+
+
+def init_ef_state(grads_like: Any) -> EFState:
+    return EFState(error=jax.tree.map(
+        lambda g: jnp.zeros_like(g, jnp.float32), grads_like))
+
+
+def _quantize_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_error_feedback(grads: Any, ef: EFState
+                                 ) -> Tuple[Any, Any, EFState]:
+    """Returns (q_tree int8, scale_tree, new_ef). The caller all-reduces the
+    int8 payload (plus the tiny scale scalars) and divides by the replica
+    count after decompression."""
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, ef.error)
+    qs = jax.tree.map(_quantize_leaf, corrected)
+    q_tree = jax.tree.map(lambda t: t[0], qs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    s_tree = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_error = jax.tree.map(
+        lambda c, q, s: c - _dequantize_leaf(q, s), corrected, q_tree,
+        s_tree)
+    return q_tree, s_tree, EFState(error=new_error)
+
+
+def decompress(q_tree: Any, s_tree: Any) -> Any:
+    return jax.tree.map(_dequantize_leaf, q_tree, s_tree)

@@ -1,0 +1,123 @@
+"""Optimizers (pure-jax, optax-free): Adagrad (paper §5), AdamW, global-norm
+clipping, LR schedules. State is a pytree mirroring params, so it inherits
+param sharding under pjit (ZeRO-style optimizer-state sharding for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Grads = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adagrad"           # adagrad | adamw | sgd
+    learning_rate: float = 0.01
+    weight_decay: float = 0.0
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    adagrad_init: float = 0.0       # initial accumulator (paper uses 0)
+    clip_norm: float = 0.0          # 0 = off
+    warmup_steps: int = 0
+    decay_steps: int = 0            # cosine decay horizon; 0 = constant
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # 1st moment (adamw) or None
+    nu: Any          # 2nd moment / adagrad accumulator
+
+
+def init_opt_state(cfg: OptimizerConfig, params: Params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+    if cfg.name == "adamw":
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=jax.tree.map(zeros, params))
+    if cfg.name == "adagrad":
+        return OptState(step=jnp.zeros((), jnp.int32), mu=None,
+                        nu=jax.tree.map(
+                            lambda p: jnp.full_like(
+                                p, cfg.adagrad_init, jnp.float32), params))
+    if cfg.name == "sgd":
+        return OptState(step=jnp.zeros((), jnp.int32), mu=None, nu=None)
+    raise ValueError(cfg.name)
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    lr = jnp.asarray(cfg.learning_rate, jnp.float32)
+    s = step.astype(jnp.float32)
+    if cfg.warmup_steps:
+        lr = lr * jnp.minimum(1.0, (s + 1.0) / cfg.warmup_steps)
+    if cfg.decay_steps:
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(1, cfg.decay_steps - cfg.warmup_steps), 0, 1)
+        lr = lr * (0.5 * (1.0 + jnp.cos(jnp.pi * frac)))
+    return lr
+
+
+def global_norm(grads: Grads) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Grads, max_norm: float
+                        ) -> Tuple[Grads, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(cfg: OptimizerConfig, params: Params, grads: Grads,
+                  state: OptState) -> Tuple[Params, OptState, dict]:
+    """One optimizer step. Returns (params, state, metrics)."""
+    metrics = {}
+    if cfg.clip_norm:
+        grads, norm = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = norm
+    lr = schedule(cfg, state.step)
+    metrics["lr"] = lr
+
+    if cfg.name == "adagrad":
+        nu = jax.tree.map(
+            lambda n, g: n + jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        updates = jax.tree.map(
+            lambda g, n: -lr * g.astype(jnp.float32)
+            / (jnp.sqrt(n) + cfg.eps), grads, nu)
+        new_state = OptState(step=state.step + 1, mu=None, nu=nu)
+    elif cfg.name == "adamw":
+        t = (state.step + 1).astype(jnp.float32)
+        mu = jax.tree.map(
+            lambda m, g: cfg.beta1 * m
+            + (1 - cfg.beta1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(
+            lambda n, g: cfg.beta2 * n
+            + (1 - cfg.beta2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1.0 - cfg.beta1 ** t
+        bc2 = 1.0 - cfg.beta2 ** t
+        updates = jax.tree.map(
+            lambda m, n, p: -lr * ((m / bc1)
+                                   / (jnp.sqrt(n / bc2) + cfg.eps)
+                                   + cfg.weight_decay
+                                   * p.astype(jnp.float32)),
+            mu, nu, params)
+        new_state = OptState(step=state.step + 1, mu=mu, nu=nu)
+    elif cfg.name == "sgd":
+        updates = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        new_state = OptState(step=state.step + 1, mu=None, nu=None)
+    else:
+        raise ValueError(cfg.name)
+
+    new_params = jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+    return new_params, new_state, metrics

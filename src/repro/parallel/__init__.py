@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (batch_shardings, cache_shardings,
+                                     mesh_axes, param_spec, params_shardings,
+                                     replicated, train_state_shardings)
+
+__all__ = ["batch_shardings", "cache_shardings", "mesh_axes", "param_spec",
+           "params_shardings", "replicated", "train_state_shardings"]

@@ -1,0 +1,151 @@
+"""Activation-sharding hints (perf iteration knobs).
+
+Model code is mesh-agnostic; the launcher/dry-run installs a hint context
+(mesh + axis roles) and layers call ``shard_hint`` at documented points.
+With no context installed every hint is a no-op, so single-device tests and
+CPU examples are untouched.
+
+Current hints (see EXPERIMENTS.md §Perf for their measured effect):
+  attn_q:   sequence-shard q (and thus the (B,H,Sq,Skv) logits) over the
+            'model' axis when the head count is NOT divisible by TP — the
+            fallback otherwise replicates all attention compute per model
+            shard (musicgen 24H, hymba 25H, qwen2-vl 28H on TP=16).
+  attn_out: restore the standard layout after the output projection.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_hints", default=None)
+
+
+class HintContext:
+    def __init__(self, mesh: Mesh, dp_axes: Tuple[str, ...],
+                 model_axis: str = "model",
+                 seq_shard_attention: bool = True,
+                 seq_parallel_residual: bool = False,
+                 fsdp_gather_weights: bool = False):
+        self.mesh = mesh
+        self.dp_axes = dp_axes
+        self.model_axis = model_axis
+        self.seq_shard_attention = seq_shard_attention
+        self.seq_parallel_residual = seq_parallel_residual
+        self.fsdp_gather_weights = fsdp_gather_weights
+
+
+@contextlib.contextmanager
+def sharding_hints(mesh: Mesh, dp_axes: Tuple[str, ...],
+                   model_axis: str = "model",
+                   seq_shard_attention: bool = True,
+                   seq_parallel_residual: bool = False,
+                   fsdp_gather_weights: bool = False):
+    tok = _CTX.set(HintContext(mesh, dp_axes, model_axis,
+                               seq_shard_attention,
+                               seq_parallel_residual,
+                               fsdp_gather_weights))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def _constrain(x, spec: P):
+    ctx = _CTX.get()
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def hint_attn_q(q, num_heads: int):
+    """q: (B, S, H, hd). Returns q possibly sequence-sharded over 'model'."""
+    ctx = _CTX.get()
+    if ctx is None or not ctx.seq_shard_attention:
+        return q
+    tp = ctx.mesh.shape[ctx.model_axis]
+    b, s, h, _ = q.shape
+    if num_heads % tp == 0 or s % tp != 0:
+        return q        # head-sharding already covers it / S not divisible
+    batch_ax = ctx.dp_axes if b % _dp(ctx) == 0 else None
+    return _constrain(q, P(batch_ax, ctx.model_axis, None, None))
+
+
+def hint_attn_out(out):
+    """out: (B, S, d) back to the standard replicated-d layout."""
+    ctx = _CTX.get()
+    if ctx is None or not ctx.seq_shard_attention:
+        return out
+    b = out.shape[0]
+    batch_ax = ctx.dp_axes if b % _dp(ctx) == 0 else None
+    return _constrain(out, P(batch_ax, None, None))
+
+
+def hint_gathered_weight(w, model_dims: Tuple[int, ...] = ()):
+    """Constrain a (bf16-cast) weight copy to be replicated over the data
+    axes while keeping its 'model' sharding (on the first divisible dim in
+    ``model_dims``). Guides GSPMD to (a) all-gather the *bf16* copy instead
+    of the fp32 master (half the FSDP bytes) and (b) contract dW fully
+    BEFORE the data-axis collective — the transpose of the gather is a
+    reduce-scatter of the small (weight-shaped) grad, instead of the
+    mis-placed all-reduce of a huge backward intermediate observed on
+    mixtral (§Perf B2/B3)."""
+    ctx = _CTX.get()
+    if ctx is None or not ctx.fsdp_gather_weights:
+        return w
+    tp = ctx.mesh.shape[ctx.model_axis]
+    spec = [None] * w.ndim
+    for dim in model_dims:
+        if w.shape[dim] % tp == 0:
+            spec[dim] = ctx.model_axis
+            break
+    return _constrain(w, P(*spec))
+
+
+def hint_expert_act(x, token_dim: int = 1,
+                    model_dims: Tuple[int, ...] = ()):
+    """Pin an expert-matmul activation (E, tokens, …) to stay token-sharded
+    over the data axes (TP kept on the first divisible dim of
+    ``model_dims``). Needed alongside ``hint_gathered_weight``: with the
+    weight copy replicated over 'data', GSPMD is otherwise free to
+    *replicate the whole expert computation* per data shard (§Perf B3/B4)."""
+    ctx = _CTX.get()
+    if ctx is None or not ctx.fsdp_gather_weights:
+        return x
+    tp = ctx.mesh.shape[ctx.model_axis]
+    spec = [None] * x.ndim
+    if x.shape[token_dim] % _dp(ctx) == 0:
+        spec[token_dim] = ctx.dp_axes
+    for dim in model_dims:
+        if dim != token_dim and x.shape[dim] % tp == 0:
+            spec[dim] = ctx.model_axis
+            break
+    return _constrain(x, P(*spec))
+
+
+def hint_residual(h):
+    """h: (B, S, d) residual stream at layer boundaries. Megatron-style
+    sequence parallelism: keep the stream S-sharded over 'model' so norms,
+    residual adds and other elementwise work are not replicated per model
+    shard; GSPMD inserts the all-gather before each matmul consumer and the
+    reduce-scatter after each row-parallel projection."""
+    ctx = _CTX.get()
+    if ctx is None or not ctx.seq_parallel_residual:
+        return h
+    b, s, _ = h.shape
+    tp = ctx.mesh.shape[ctx.model_axis]
+    if s % tp != 0:
+        return h
+    batch_ax = ctx.dp_axes if b % _dp(ctx) == 0 else None
+    return _constrain(h, P(batch_ax, ctx.model_axis, None))
+
+
+def _dp(ctx: HintContext) -> int:
+    n = 1
+    for a in ctx.dp_axes:
+        n *= ctx.mesh.shape[a]
+    return n

@@ -1,0 +1,70 @@
+"""Fitting the adversarial generator for an LM (DESIGN.md §2 adaptation).
+
+The paper fits the tree on fixed input features. An LM's features evolve, so
+we fit the generator on a *frozen snapshot*: run the current model over a few
+batches, collect (hidden state, next token) pairs, PCA-project the hiddens to
+k dims (paper §3 'Technical Details'), and run the paper's greedy
+Newton/balanced-split fit. The resulting (proj, tree) pair replaces
+``LMHeadState``; the discriminator trains against it until the next refresh.
+Overhead is sub-leading, as the paper requires: a handful of forward passes
+plus an O(N·k·log C) tree fit.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import heads as heads_lib
+from repro.core.heads import Generator
+from repro.core.tree_fit import FitConfig, fit_tree, pca_projection
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.lm_head import LMHeadState
+
+
+def collect_features(params, cfg: ModelConfig, batches: Iterable[dict],
+                     max_tokens: int = 200_000):
+    """Run the model; return (hiddens (N, d) fp32, labels (N,))."""
+    hs, ys = [], []
+    total = 0
+    fwd = jax.jit(lambda p, t: transformer.forward(p, cfg, t)[0])
+    for batch in batches:
+        h = fwd(params, jnp.asarray(batch["tokens"]))
+        h = np.asarray(h, np.float32).reshape(-1, cfg.d_model)
+        y = np.asarray(batch["labels"]).reshape(-1)
+        hs.append(h)
+        ys.append(y)
+        total += len(y)
+        if total >= max_tokens:
+            break
+    return np.concatenate(hs)[:max_tokens], np.concatenate(ys)[:max_tokens]
+
+
+def fit_lm_generator(params, cfg: ModelConfig, batches: Iterable[dict],
+                     kind: str = "adversarial_ns",
+                     fit_config: Optional[FitConfig] = None,
+                     max_tokens: int = 200_000) -> LMHeadState:
+    """Snapshot-fit the generator; returns a fresh LMHeadState."""
+    feats, labels = collect_features(params, cfg, batches, max_tokens)
+    if kind == "freq_ns":
+        counts = np.bincount(labels, minlength=cfg.vocab_size).astype(
+            np.float32)
+        gen = heads_lib.make_freq_generator(jnp.asarray(counts))
+        proj = jnp.zeros((cfg.d_model, cfg.gen_feature_dim), jnp.float32)
+        return LMHeadState(gen=gen, proj=proj)
+    proj_np, mean = pca_projection(feats, cfg.gen_feature_dim)
+    x_gen = (feats - mean) @ proj_np
+    tree = fit_tree(x_gen, labels, cfg.vocab_size,
+                    config=fit_config or FitConfig(reg=0.1))
+    # The tree was fitted on centered features (h - mean) @ proj, but at
+    # train time we compute h @ proj. Fold the centering into the node
+    # biases: z = w.((h - mean) @ proj) + b = w.(h @ proj) + (b - w.(mean @
+    # proj)). Padding-forcing nodes have w = 0, so their +/-PAD_LOGIT biases
+    # are untouched.
+    offset = jnp.asarray(-(mean @ proj_np), jnp.float32)
+    shifted = tree._replace(b=tree.b + tree.w @ offset)
+    return LMHeadState(gen=Generator(tree=shifted),
+                       proj=jnp.asarray(proj_np))

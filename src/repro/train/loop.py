@@ -1,0 +1,154 @@
+"""Fault-tolerant training loop.
+
+Production behaviours, all exercised by tests:
+  * periodic atomic checkpoints + auto-resume (bit-exact restart);
+  * preemption handling: SIGTERM (or an injected callback) triggers an
+    immediate checkpoint and a clean exit — the restart continues from the
+    exact step (simulated preemption in tests/test_train_loop.py);
+  * straggler monitor: per-step wall-time EWMA; steps slower than
+    ``straggler_factor`` x EWMA are counted and logged — at fleet scale this
+    signal feeds the controller that re-schedules slow hosts;
+  * deterministic data: the loader is stateless in (seed, step), so restart
+    only needs the step counter;
+  * generator refresh: the adversarial tree is (re)fitted from a model
+    snapshot every ``gen_refresh_steps`` (0 = fit once at
+    ``gen_warmup_steps``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.state import TrainState
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.1
+    gen_warmup_steps: int = 0       # fit generator after this many steps
+    gen_refresh_steps: int = 0      # 0 = never refresh after warmup
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker; flags outlier steps (straggler proxy)."""
+
+    def __init__(self, factor: float, alpha: float):
+        self.factor, self.alpha = factor, alpha
+        self.ewma: Optional[float] = None
+        self.flagged = 0
+        self.history: List[float] = []
+
+    def observe(self, dt: float) -> bool:
+        self.history.append(dt)
+        slow = self.ewma is not None and dt > self.factor * self.ewma
+        if slow:
+            self.flagged += 1
+            # Do not fold outliers into the EWMA — keeps the baseline clean.
+            return True
+        self.ewma = dt if self.ewma is None else (
+            (1 - self.alpha) * self.ewma + self.alpha * dt)
+        return False
+
+
+class Preemption:
+    """SIGTERM-or-callback preemption flag (GCE/Borg-style eviction)."""
+
+    def __init__(self, install_signal: bool = False):
+        self._flag = False
+        if install_signal:
+            signal.signal(signal.SIGTERM, self._handler)
+
+    def _handler(self, *_):
+        self._flag = True
+
+    def trigger(self):
+        self._flag = True
+
+    @property
+    def requested(self) -> bool:
+        return self._flag
+
+
+def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
+             cfg: LoopConfig, rng: jax.Array,
+             preemption: Optional[Preemption] = None,
+             gen_fit_fn: Optional[Callable[[TrainState], Any]] = None,
+             on_step: Optional[Callable[[int, Dict], None]] = None):
+    """Run (or resume) training. Returns (state, history dict).
+
+    ``batch_fn(step) -> batch`` must be deterministic in step.
+    ``gen_fit_fn(state) -> LMHeadState`` refits the adversarial generator.
+    """
+    preemption = preemption or Preemption()
+    monitor = StragglerMonitor(cfg.straggler_factor, cfg.ewma_alpha)
+    history: Dict[str, list] = {"loss": [], "step": []}
+
+    # ---- auto-resume ----------------------------------------------------
+    start_step = int(state.step)
+    if cfg.checkpoint_dir:
+        ck = latest_step(cfg.checkpoint_dir)
+        if ck is not None and ck > start_step:
+            state, _ = restore_checkpoint(cfg.checkpoint_dir,
+                                          state.as_pytree(), step=ck)
+            state = TrainState(**state)
+            start_step = int(jax.device_get(state.step))
+
+    def maybe_checkpoint(step, force=False):
+        if not cfg.checkpoint_dir:
+            return
+        if force or (cfg.checkpoint_every
+                     and step % cfg.checkpoint_every == 0 and step > 0):
+            save_checkpoint(cfg.checkpoint_dir, step, state.as_pytree(),
+                            keep=cfg.keep_checkpoints)
+
+    for step in range(start_step, cfg.total_steps):
+        # -- generator warmup / refresh (the paper's Step 1) --
+        if gen_fit_fn is not None:
+            due = (step == cfg.gen_warmup_steps
+                   or (cfg.gen_refresh_steps
+                       and step > cfg.gen_warmup_steps
+                       and (step - cfg.gen_warmup_steps)
+                       % cfg.gen_refresh_steps == 0))
+            if due:
+                state = state._replace(head_state=gen_fit_fn(state))
+
+        t0 = time.perf_counter()
+        batch = batch_fn(step)
+        # Step-indexed rng (not sequential splitting): restart from a
+        # checkpoint replays the exact rng stream — bit-exact recovery.
+        sub = jax.random.fold_in(rng, step)
+        state, metrics = train_step(state, batch, sub)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        slow = monitor.observe(dt)
+
+        loss = float(jax.device_get(metrics["loss"]))
+        if not np.isfinite(loss):
+            raise FloatingPointError(f"non-finite loss at step {step}")
+        history["loss"].append(loss)
+        history["step"].append(step)
+        if on_step is not None:
+            on_step(step, {**{k: float(jax.device_get(v))
+                              for k, v in metrics.items()},
+                           "step_time": dt, "straggler": slow})
+
+        maybe_checkpoint(step + 1)
+        if preemption.requested:
+            maybe_checkpoint(step + 1, force=True)
+            history["preempted_at"] = step + 1
+            break
+
+    history["stragglers"] = monitor.flagged
+    return state, history

@@ -1,0 +1,20 @@
+"""TrainState: trainable params + optimizer state + non-trainable head state
+(the paper's generator is deliberately NOT optimized — §2.2 'we can keep
+[the generator] constant while training the discriminator')."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+from repro.models.lm_head import LMHeadState
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt_state: Any
+    head_state: LMHeadState
+
+    def as_pytree(self):
+        return self._asdict()

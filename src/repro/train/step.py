@@ -1,0 +1,124 @@
+"""train_step / eval_step / serve_step builders.
+
+These close over static configs and take pure pytrees, so the same function
+jits on one CPU device and pjits on the 512-chip production mesh (the launch
+layer supplies in/out shardings). The head strategy — including the paper's
+adversarial sampling — is a config knob; `serve_step` applies Eq. 5 bias
+removal over the full vocabulary.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.heads import HeadConfig, HeadParams
+from repro.models import lm_head, transformer
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig, apply_updates, init_opt_state
+from repro.train.state import TrainState
+
+
+def loss_fn(params, cfg: ModelConfig, hcfg: HeadConfig, head_state,
+            batch: Dict[str, jax.Array], rng: jax.Array):
+    h, _, fwd_metrics = transformer.forward(
+        params, cfg, batch["tokens"],
+        positions=batch.get("positions"),
+        vision_embeds=batch.get("vision_embeds"))
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if cfg.modality == "vision" and labels.shape[1] != h.shape[1]:
+        # Vision prefix carries no next-token loss.
+        nv = h.shape[1] - labels.shape[1]
+        h = h[:, nv:]
+    loss, head_metrics = lm_head.lm_head_loss(
+        cfg, hcfg, HeadParams(**params["head"]), head_state, h, labels,
+        rng, mask=mask)
+    metrics = {"loss": loss, **fwd_metrics, **head_metrics}
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
+                    opt_cfg: OptimizerConfig):
+    """Returns train_step(state, batch, rng) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch, rng):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (loss, metrics), grads = grad_fn(state.params, cfg, hcfg,
+                                         state.head_state, batch, rng)
+        new_params, new_opt, opt_metrics = apply_updates(
+            opt_cfg, state.params, grads, state.opt_state)
+        metrics.update(opt_metrics)
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt_state=new_opt,
+                          head_state=state.head_state), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, hcfg: HeadConfig):
+    """Debiased predictive log-likelihood + accuracy (paper Fig. 1 axes)."""
+
+    def eval_step(state: TrainState, batch):
+        h, _, _ = transformer.forward(
+            state.params, cfg, batch["tokens"],
+            positions=batch.get("positions"),
+            vision_embeds=batch.get("vision_embeds"))
+        scores = lm_head.lm_predictive_scores(
+            cfg, hcfg, HeadParams(**state.params["head"]),
+            state.head_state, h)
+        labels = batch["labels"].astype(jnp.int32)
+        mask = batch.get("mask", jnp.ones(labels.shape, jnp.float32))
+        logp = scores - jax.nn.logsumexp(scores, axis=-1, keepdims=True)
+        pos = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+        acc = (jnp.argmax(scores, -1) == labels).astype(jnp.float32)
+        denom = jnp.maximum(mask.sum(), 1.0)
+        return {"eval_loglik": jnp.sum(pos * mask) / denom,
+                "eval_acc": jnp.sum(acc * mask) / denom}
+
+    return eval_step
+
+
+def make_serve_step(cfg: ModelConfig, hcfg: HeadConfig):
+    """Greedy decode step: one token in, one token out, cache updated.
+
+    The predictive scores use the paper's bias removal (Eq. 5): the O(C·k)
+    dense tree pass rides on top of the O(C·K) logits matmul.
+    """
+
+    def serve_step(params, head_state, token, cache, cache_pos,
+                   positions=None):
+        h, new_cache, _ = transformer.forward(
+            params, cfg, token, positions=positions, cache=cache,
+            cache_pos=cache_pos)
+        scores = lm_head.lm_predictive_scores(
+            cfg, hcfg, HeadParams(**params["head"]), head_state,
+            h[:, -1])
+        next_token = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+        return next_token[:, None], new_cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params, tokens, cache, vision_embeds=None, positions=None):
+        h, new_cache, _ = transformer.forward(
+            params, cfg, tokens, positions=positions,
+            vision_embeds=vision_embeds, cache=cache,
+            cache_pos=jnp.int32(0))
+        return h, new_cache
+
+    return prefill
+
+
+def init_train_state(rng, cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                     head_kind: str) -> TrainState:
+    k_p, k_h = jax.random.split(rng)
+    params = transformer.init_params(k_p, cfg)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        opt_state=init_opt_state(opt_cfg, params),
+        head_state=lm_head.default_head_state(k_h, cfg, head_kind))

@@ -1,0 +1,140 @@
+"""Per-arch smoke tests (reduced configs): one forward + one train step on
+CPU, asserting shapes and finiteness; decode-vs-forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_lib
+from repro.models import lm_head, specs, transformer
+from repro.models.config import ModelConfig
+
+ARCHS = cfg_lib.ARCHS
+
+
+def _data(cfg: ModelConfig, batch=2, seq=16, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    kt, kl, kv = jax.random.split(rng, 3)
+    out = {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(kl, (batch, seq), 0, cfg.vocab_size),
+        "mask": jnp.ones((batch, seq), jnp.float32),
+    }
+    if cfg.modality == "vision":
+        nv = cfg.num_vision_tokens
+        out["tokens"] = out["tokens"][:, : seq - nv]
+        out["vision_embeds"] = 0.02 * jax.random.normal(
+            kv, (batch, nv, cfg.d_model), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(seq)[None, None],
+                               (3, batch, seq)).astype(jnp.int32)
+        out["positions"] = pos
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = cfg_lib.reduced_config(arch)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch, seq = 2, 16
+    data = _data(cfg, batch, seq)
+
+    h, _, metrics = transformer.forward(
+        params, cfg, data["tokens"],
+        positions=data.get("positions"),
+        vision_embeds=data.get("vision_embeds"))
+    assert h.shape == (batch, seq, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+
+    # One adversarial-NS train step: loss finite, grads finite.
+    hcfg = lm_head.head_config(cfg, "adversarial_ns", reg=1e-4)
+    state = lm_head.default_head_state(jax.random.PRNGKey(1), cfg,
+                                       "adversarial_ns")
+
+    def loss_fn(p):
+        hh, _, _ = transformer.forward(
+            p, cfg, data["tokens"], positions=data.get("positions"),
+            vision_embeds=data.get("vision_embeds"))
+        loss, _ = lm_head.lm_head_loss(
+            cfg, hcfg, lm_head.HeadParams(**p["head"]), state, hh,
+            data["labels"], jax.random.PRNGKey(2), mask=data["mask"])
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.all(jnp.isfinite(g.astype(jnp.float32))), grads))
+    assert all(bool(x) for x in leaves)
+    # Head + embedding gradients must be nonzero (technique is wired in).
+    assert float(jnp.abs(grads["head"]["w"]).sum()) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Prefill + stepwise decode == full forward on the same tokens."""
+    # fp32 (no bf16 roundoff); generous MoE capacity (capacity dropping is
+    # batch-size dependent, which would make decode != forward by design).
+    cfg = dataclasses.replace(cfg_lib.reduced_config(arch),
+                              modality="text", num_vision_tokens=0,
+                              mrope_sections=(), dtype="float32",
+                              capacity_factor=8.0)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch, seq, prompt = 2, 12, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (batch, seq), 0,
+                                cfg.vocab_size)
+
+    h_full, _, _ = transformer.forward(params, cfg, tokens)
+
+    cache = transformer.init_cache(cfg, batch, max_len=seq,
+                                   dtype=jnp.float32)
+    h_pre, cache, _ = transformer.forward(params, cfg, tokens[:, :prompt],
+                                          cache=cache,
+                                          cache_pos=jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(h_pre, np.float32),
+                               np.asarray(h_full[:, :prompt], np.float32),
+                               rtol=2e-2, atol=2e-2)
+    hs = []
+    for t in range(prompt, seq):
+        h_t, cache, _ = transformer.forward(
+            params, cfg, tokens[:, t:t + 1], cache=cache,
+            cache_pos=jnp.int32(t))
+        hs.append(h_t)
+    h_dec = jnp.concatenate(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_dec, np.float32),
+                               np.asarray(h_full[:, prompt:], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_full_config_shapes_without_allocation():
+    """Full (non-reduced) configs build abstract params + specs only."""
+    for arch in ARCHS:
+        cfg = cfg_lib.get_config(arch)
+        p = specs.params_specs(cfg)
+        n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(p))
+        assert n_params > 0
+        for shape, cell in cfg_lib.shape_cells(arch).items():
+            if cell is None:
+                continue
+            if cell["mode"] == "train":
+                s = specs.train_input_specs(cfg, cell["seq_len"],
+                                            cell["global_batch"])
+            elif cell["mode"] == "prefill":
+                s = specs.prefill_input_specs(cfg, cell["seq_len"],
+                                              cell["global_batch"])
+            else:
+                s = specs.decode_input_specs(cfg, cell["seq_len"],
+                                             cell["global_batch"])
+            assert s
+
+
+def test_param_count_sane():
+    """param_count() lands within a factor ~2 of the nameplate sizes."""
+    expected = {
+        "mamba2-370m": 0.37e9, "stablelm-3b": 3e9, "deepseek-7b": 7e9,
+        "gemma2-27b": 27e9, "mixtral-8x22b": 141e9,
+        "deepseek-moe-16b": 16e9, "hymba-1.5b": 1.5e9,
+    }
+    for arch, target in expected.items():
+        n = cfg_lib.get_config(arch).param_count()
+        assert 0.4 * target < n < 2.5 * target, (arch, n, target)

@@ -1,0 +1,170 @@
+"""Substrate tests: checkpoint atomicity/restore/reshard, optimizers,
+gradient compression + error feedback, data pipeline determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import HostShardedLoader, lm_batch_fn, make_clustered_xc
+from repro.data.synthetic import ClusteredXCSpec
+from repro.optim import (OptimizerConfig, apply_updates,
+                         compress_with_error_feedback, decompress,
+                         init_ef_state, init_opt_state)
+
+
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        k = jax.random.PRNGKey(seed)
+        return {"a": jax.random.normal(k, (8, 4)),
+                "b": {"c": jnp.arange(5), "d": jnp.float32(3.5)}}
+
+    def test_roundtrip_bit_exact(self, tmp_path):
+        t = self._tree()
+        save_checkpoint(str(tmp_path), 7, t)
+        restored, step = restore_checkpoint(str(tmp_path), t)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_pointer_and_gc(self, tmp_path):
+        t = self._tree()
+        for s in (1, 2, 3, 4, 5):
+            save_checkpoint(str(tmp_path), s, t, keep=2)
+        assert latest_step(str(tmp_path)) == 5
+        dirs = sorted(d for d in os.listdir(tmp_path)
+                      if d.startswith("step_"))
+        assert dirs == ["step_00000004", "step_00000005"]
+
+    def test_no_partial_checkpoint_visible(self, tmp_path):
+        """A crash mid-save must not be restorable: simulate by writing a
+        stray temp dir and confirming LATEST ignores it."""
+        t = self._tree()
+        save_checkpoint(str(tmp_path), 1, t)
+        os.makedirs(tmp_path / ".tmp_ckpt_dead", exist_ok=True)
+        (tmp_path / ".tmp_ckpt_dead" / "arr_00000.npy").write_bytes(b"junk")
+        assert latest_step(str(tmp_path)) == 1
+        restored, _ = restore_checkpoint(str(tmp_path), t)
+        assert len(jax.tree.leaves(restored)) == 3
+
+    def test_restore_with_different_sharding(self, tmp_path):
+        """Elastic restart path: restore with explicit shardings."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        t = self._tree()
+        save_checkpoint(str(tmp_path), 2, t)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+        restored, _ = restore_checkpoint(str(tmp_path), t, shardings=sh)
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("name", ["adagrad", "adamw", "sgd"])
+    def test_quadratic_converges(self, name):
+        cfg = OptimizerConfig(name=name, learning_rate=0.3, clip_norm=10.0)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = init_opt_state(cfg, params)
+        for _ in range(300):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = apply_updates(cfg, params, grads, state)
+        # Adagrad's 1/sqrt(sum g^2) step decay gives sublinear convergence.
+        tol = 0.1 if name == "adagrad" else 0.05
+        assert float(jnp.abs(params["w"]).max()) < tol, name
+
+    def test_clip_norm_applied(self):
+        cfg = OptimizerConfig(name="sgd", learning_rate=1.0, clip_norm=1.0)
+        params = {"w": jnp.zeros(4)}
+        state = init_opt_state(cfg, params)
+        new, _, m = apply_updates(cfg, params, {"w": jnp.full(4, 100.0)},
+                                  state)
+        np.testing.assert_allclose(float(jnp.linalg.norm(new["w"])), 1.0,
+                                   rtol=1e-4)
+
+    def test_warmup_schedule(self):
+        from repro.optim import schedule
+        cfg = OptimizerConfig(learning_rate=1.0, warmup_steps=10)
+        assert float(schedule(cfg, jnp.int32(0))) == pytest.approx(0.1)
+        assert float(schedule(cfg, jnp.int32(9))) == pytest.approx(1.0)
+
+
+class TestCompression:
+    def test_quantize_roundtrip_small_error(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (256,))}
+        ef = init_ef_state(g)
+        q, s, ef = compress_with_error_feedback(g, ef)
+        deq = decompress(q, s)
+        err = float(jnp.abs(deq["w"] - g["w"]).max())
+        assert err <= float(s["w"]) * 0.5 + 1e-6
+
+    def test_error_feedback_preserves_mean_signal(self):
+        """Sum over steps of dequantized grads ~ sum of true grads:
+        residuals cannot accumulate unboundedly with error feedback."""
+        key = jax.random.PRNGKey(1)
+        g_true, g_sent = jnp.zeros(64), jnp.zeros(64)
+        ef = init_ef_state({"w": jnp.zeros(64)})
+        for i in range(50):
+            key, sub = jax.random.split(key)
+            g = {"w": 0.01 * jax.random.normal(sub, (64,))}
+            q, s, ef = compress_with_error_feedback(g, ef)
+            g_true = g_true + g["w"]
+            g_sent = g_sent + decompress(q, s)["w"]
+        # Residual is bounded by one quantization step, not O(n_steps).
+        resid = float(jnp.abs(g_true - g_sent).max())
+        assert resid < 5e-4
+
+    def test_ef_sgd_converges_like_sgd(self):
+        """EF-quantized SGD reaches the same optimum on a quadratic."""
+        w = jnp.array([4.0, -2.0, 1.0])
+        ef = init_ef_state({"w": w})
+        for _ in range(400):
+            g = {"w": 2 * w}
+            q, s, ef = compress_with_error_feedback(g, ef)
+            w = w - 0.1 * decompress(q, s)["w"]
+        assert float(jnp.abs(w).max()) < 1e-2
+
+
+class TestData:
+    def test_clustered_xc_shapes_and_determinism(self):
+        spec = ClusteredXCSpec(num_labels=64, feature_dim=16, seed=3)
+        x1, y1, xt, yt = make_clustered_xc(spec, 500, 100)
+        x2, y2, _, _ = make_clustered_xc(spec, 500, 100)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+        assert x1.shape == (500, 16) and y1.max() < 64
+
+    def test_cluster_structure_is_learnable(self):
+        """Nearest-centroid on train centers beats chance on test."""
+        spec = ClusteredXCSpec(num_labels=32, feature_dim=16, seed=1,
+                               noise=0.2)
+        x, y, xt, yt = make_clustered_xc(spec, 4000, 500)
+        centers = np.zeros((32, 16))
+        for c in range(32):
+            m = y == c
+            if m.any():
+                centers[c] = x[m].mean(0)
+        pred = np.argmin(
+            ((xt[:, None, :] - centers[None]) ** 2).sum(-1), axis=1)
+        assert (pred == yt).mean() > 0.5
+
+    def test_host_sharded_loader_slices_and_seeks(self):
+        fn = lm_batch_fn(vocab_size=101, global_batch=8, seq_len=16, seed=0)
+        loaders = [HostShardedLoader(fn, 8, num_hosts=2, host_id=h,
+                                     prefetch=0) for h in (0, 1)]
+        its = [iter(ld) for ld in loaders]
+        s0, b0 = next(its[0])
+        s1, b1 = next(its[1])
+        assert s0 == s1 == 0
+        assert b0["tokens"].shape == (4, 16)
+        full = fn(0)["tokens"]
+        np.testing.assert_array_equal(
+            np.concatenate([b0["tokens"], b1["tokens"]]), full)
+        # seek = deterministic restart
+        loaders[0].seek(5)
+        s, b = next(iter(loaders[0]))
+        assert s == 5
+        np.testing.assert_array_equal(b["tokens"], fn(5)["tokens"][:4])
+        for ld in loaders:
+            ld.close()

@@ -1,0 +1,100 @@
+"""Training-loop fault tolerance: loss decreases, preemption + restart is
+bit-exact, straggler monitor flags outliers, generator refresh works."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfg_lib
+from repro.core.heads import HeadConfig
+from repro.data import lm_batch_fn
+from repro.models import lm_head
+from repro.optim import OptimizerConfig
+from repro.train import (LoopConfig, Preemption, StragglerMonitor,
+                         init_train_state, make_train_step, run_loop)
+from repro.train.generator_fit import fit_lm_generator
+
+
+def _setup(head_kind="adversarial_ns", seed=0):
+    cfg = dataclasses.replace(cfg_lib.reduced_config("stablelm-3b"),
+                              num_layers=1, dtype="float32")
+    hcfg = lm_head.head_config(cfg, head_kind, reg=1e-4)
+    opt = OptimizerConfig(name="adagrad", learning_rate=0.05, clip_norm=1.0)
+    state = init_train_state(jax.random.PRNGKey(seed), cfg, opt, head_kind)
+    step_fn = jax.jit(make_train_step(cfg, hcfg, opt))
+    make = lm_batch_fn(cfg.vocab_size, global_batch=4, seq_len=16, seed=1)
+    batch_fn = lambda s: {k: jnp.asarray(v)                 # noqa: E731
+                          for k, v in make(s).items()}
+    return cfg, state, step_fn, batch_fn
+
+
+def test_loss_decreases():
+    cfg, state, step_fn, batch_fn = _setup()
+    loop = LoopConfig(total_steps=40, checkpoint_dir=None, log_every=100)
+    state, hist = run_loop(state, step_fn, batch_fn, loop,
+                           jax.random.PRNGKey(2))
+    assert np.mean(hist["loss"][-5:]) < np.mean(hist["loss"][:5])
+
+
+def test_preemption_restart_bit_exact(tmp_path):
+    """Train 20 steps straight vs train-10 / preempt / restart / train-10:
+    final parameters must be bit-identical (deterministic data + rng)."""
+    loop_full = LoopConfig(total_steps=20, checkpoint_every=5,
+                           checkpoint_dir=str(tmp_path / "a"))
+    cfg, state_a, step_fn, batch_fn = _setup(seed=3)
+    state_a, _ = run_loop(state_a, step_fn, batch_fn, loop_full,
+                          jax.random.PRNGKey(7))
+
+    # Interrupted run into a separate dir: preempt at step 10...
+    loop_b = LoopConfig(total_steps=20, checkpoint_every=5,
+                        checkpoint_dir=str(tmp_path / "b"))
+    _, state_b, _, _ = _setup(seed=3)
+    pre = Preemption()
+
+    def on_step(step, metrics):
+        if step == 9:
+            pre.trigger()
+
+    state_b1, hist_b = run_loop(state_b, step_fn, batch_fn, loop_b,
+                                jax.random.PRNGKey(7), preemption=pre,
+                                on_step=on_step)
+    assert hist_b["preempted_at"] == 10
+
+    # ...then a fresh process restarts from the checkpoint and finishes.
+    _, state_b2, _, _ = _setup(seed=3)   # fresh init, will be overwritten
+    state_b2, _ = run_loop(state_b2, step_fn, batch_fn, loop_b,
+                           jax.random.PRNGKey(7))
+    # NOTE rng: run_loop folds the SAME base rng per step index, and data is
+    # step-indexed, so the restarted run replays steps 10..19 identically.
+    for a, b in zip(jax.tree.leaves(state_a.params),
+                    jax.tree.leaves(state_b2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(factor=3.0, alpha=0.5)
+    for _ in range(10):
+        assert not m.observe(0.1)
+    assert m.observe(1.0)          # 10x the EWMA -> flagged
+    assert m.flagged == 1
+    assert not m.observe(0.1)      # baseline not polluted by the outlier
+
+
+def test_generator_refresh_changes_head_state():
+    cfg, state, step_fn, batch_fn = _setup()
+    make = lm_batch_fn(cfg.vocab_size, global_batch=4, seq_len=16, seed=9)
+
+    def gen_fit(st):
+        return fit_lm_generator(st.params, cfg,
+                                (make(i) for i in range(2)),
+                                max_tokens=128)
+
+    loop = LoopConfig(total_steps=6, gen_warmup_steps=2)
+    before = state.head_state.gen.tree.w
+    state, _ = run_loop(state, step_fn, batch_fn, loop,
+                        jax.random.PRNGKey(0), gen_fit_fn=gen_fit)
+    after = state.head_state.gen.tree.w
+    assert before.shape == after.shape
+    assert not np.allclose(np.asarray(before), np.asarray(after))
