@@ -1,0 +1,23 @@
+# Tier-1 verification and benchmarks, one command each.
+#
+#   make test        - full suite (what the roadmap calls tier-1 verify)
+#   make test-fast   - skip @pytest.mark.slow (subprocess launcher tests)
+#   make bench-serve - dense vs beam serving latency sweep over C
+#   make bench       - the full benchmark harness CSV
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench-serve bench
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
+bench-serve:
+	$(PYTHON) -m benchmarks.bench_serve
+
+bench:
+	$(PYTHON) -m benchmarks.run

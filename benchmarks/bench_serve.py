@@ -1,0 +1,95 @@
+"""Benchmark: per-token serving cost, dense Eq. 5 scoring vs tree-guided
+beam search, swept over the number of labels C.
+
+The paper's pitch is cost logarithmic in C — but only for *training* unless
+prediction is also sublinear. This sweep times the two serving paths of the
+adversarial head on the same (params, tree):
+
+- dense:  full_logits (O(C·K)) + dense tree pass (O(C·k)) + argmax, i.e.
+  ``predictive_scores`` — exact, linear in C;
+- beam:   ``predictive_topk`` — beam search over the generator tree
+  (O(beam·k·log C)) + candidate re-scoring (O(beam·K)) — per-token cost is
+  a function of beam and log C only.
+
+Expected shape: dense us/token grows ~linearly across C = 1k → 32k → 256k
+(256x), beam us/token grows only with log C (~1.8x), with the crossover
+well below 32k labels. Also reports top-1 agreement of the beam path with
+the exact dense argmax on the random-tree setup.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_serve
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heads as heads_lib
+from repro.core import tree as tree_lib
+from repro.core.heads import HeadConfig
+
+
+def _time_fn(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6      # us
+
+
+def run(csv_rows: list, c_values=(1024, 32768, 262144), batch=8, kdim=64,
+        k_gen=16, beam=32, topk=4):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    h = jax.random.normal(ks[0], (batch, kdim))
+    xg = jax.random.normal(ks[1], (batch, k_gen))
+
+    dense_us, beam_us = {}, {}
+    for c in c_values:
+        params = heads_lib.init_head_params(ks[2], c, kdim, scale=0.3)
+        tree = tree_lib.init_tree(ks[3], c, k_gen, scale=0.7)
+        gen = heads_lib.make_tree_generator(tree)
+        cfg = HeadConfig(num_labels=c, kind="adversarial_ns")
+
+        @jax.jit
+        def dense_top1(hh, xx, params=params, gen=gen, cfg=cfg):
+            scores = heads_lib.predictive_scores(cfg, params, gen, hh, xx)
+            return jnp.argmax(scores, axis=-1)
+
+        beam_topk = jax.jit(functools.partial(
+            heads_lib.predictive_topk, cfg, params, gen,
+            topk=topk, beam=beam))
+
+        us_d = _time_fn(dense_top1, h, xg)
+        us_b = _time_fn(beam_topk, h, xg)
+        dense_us[c], beam_us[c] = us_d / batch, us_b / batch
+
+        _, labels = beam_topk(h, xg)
+        agree = float(jnp.mean(
+            (labels[..., 0] == dense_top1(h, xg)).astype(jnp.float32)))
+        csv_rows.append((f"serve_dense/C={c}", us_d / batch,
+                         f"batch={batch},K={kdim}"))
+        csv_rows.append((f"serve_beam/C={c}", us_b / batch,
+                         f"beam={beam},topk={topk},top1_agree={agree:.2f}"))
+
+    lo, hi = min(c_values), max(c_values)
+    csv_rows.append((
+        "serve_growth", 0.0,
+        f"C x{hi // lo}: dense x{dense_us[hi] / dense_us[lo]:.1f} "
+        f"beam x{beam_us[hi] / beam_us[lo]:.1f}"))
+
+
+def main():
+    rows: list = []
+    run(rows)
+    print("name,us_per_token,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@
   bench_convergence  — heads race, steps-to-accuracy   (paper Fig. 1)
   bench_snr          — eta-bar vs noise distribution   (paper Thm 2 / Eq. 15)
   bench_kernels      — Pallas kernels vs jnp refs      (interpret mode)
+  bench_serve        — per-token serving cost vs C     (dense vs beam path)
   bench_roofline     — dry-run roofline readout        (§Roofline artifacts)
 
 Prints ``name,us_per_call,derived`` CSV. Select suites with
@@ -19,7 +20,7 @@ import sys
 
 def main() -> None:
     args = set(sys.argv[1:])
-    default = {"heads", "tree", "snr", "kernels", "roofline"}
+    default = {"heads", "tree", "snr", "kernels", "serve", "roofline"}
     wanted = default if not args else (
         default | {"convergence"} if "all" in args else args)
 
@@ -36,6 +37,9 @@ def main() -> None:
     if "kernels" in wanted:
         from benchmarks import bench_kernels
         bench_kernels.run(rows)
+    if "serve" in wanted:
+        from benchmarks import bench_serve
+        bench_serve.run(rows)
     if "convergence" in wanted:
         from benchmarks import bench_convergence
         bench_convergence.run(rows)

@@ -8,14 +8,16 @@
 from repro.core.heads import (Generator, HeadConfig, HeadParams, head_loss,
                               init_head_params, make_freq_generator,
                               make_tree_generator, predictive_accuracy,
-                              predictive_log_likelihood, predictive_scores)
-from repro.core.tree import Tree, init_tree, log_prob, log_prob_all, sample
+                              predictive_log_likelihood, predictive_scores,
+                              predictive_topk)
+from repro.core.tree import (Tree, beam_search, init_tree, log_prob,
+                             log_prob_all, sample)
 from repro.core.tree_fit import FitConfig, fit_tree, pca_projection
 
 __all__ = [
     "Generator", "HeadConfig", "HeadParams", "head_loss", "init_head_params",
     "make_freq_generator", "make_tree_generator", "predictive_accuracy",
-    "predictive_log_likelihood", "predictive_scores", "Tree", "init_tree",
-    "log_prob", "log_prob_all", "sample", "FitConfig", "fit_tree",
-    "pca_projection",
+    "predictive_log_likelihood", "predictive_scores", "predictive_topk",
+    "Tree", "beam_search", "init_tree", "log_prob", "log_prob_all", "sample",
+    "FitConfig", "fit_tree", "pca_projection",
 ]

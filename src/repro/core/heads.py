@@ -147,6 +147,27 @@ def full_logits(params: HeadParams, h: jax.Array) -> jax.Array:
 ScoreFn = Callable[[HeadParams, jax.Array, jax.Array], jax.Array]
 
 
+def kernel_score_fn() -> ScoreFn:
+    """Candidate scoring through the `gather_scores` Pallas kernel.
+
+    Same contract as :func:`candidate_scores` (arbitrary batch dims) — the
+    kernel wants flat (T, K)/(T, n) operands, so batch dims are collapsed
+    around the call. On TPU each touched row streams HBM→VMEM exactly once;
+    elsewhere the kernel runs in interpret mode (see repro.kernels.ops).
+    """
+    from repro.kernels import ops
+
+    def fn(params: HeadParams, h: jax.Array, ids: jax.Array) -> jax.Array:
+        batch_shape = ids.shape[:-1]
+        n = ids.shape[-1]
+        flat = ops.gather_scores(params.w, params.b,
+                                 h.reshape((-1, h.shape[-1])),
+                                 ids.reshape((-1, n)))
+        return flat.reshape(batch_shape + (n,))
+
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # Losses.
 # ---------------------------------------------------------------------------
@@ -276,11 +297,52 @@ def predictive_scores(cfg: HeadConfig, params: HeadParams, gen: Generator,
     scores = full_logits(params, h)
     if not cfg.debias:
         return scores
-    if cfg.kind == "adversarial_ns":
+    if cfg.kind == "adversarial_ns" and gen.tree is not None:
         return scores + tree_lib.log_prob_all(gen.tree, x_gen)
     if cfg.kind == "freq_ns":
         return scores + gen.freq_log
     return scores
+
+
+def predictive_topk(cfg: HeadConfig, params: HeadParams, gen: Generator,
+                    h: jax.Array, x_gen: jax.Array, topk: int,
+                    beam: Optional[int] = None,
+                    score_fn: ScoreFn = candidate_scores
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Top-``topk`` unbiased predictive (scores, labels) without any O(C) pass.
+
+    For `adversarial_ns`, beam search over the generator tree proposes
+    ``beam`` candidates ranked by log p_n(y|x) in O(beam·k·log C); only those
+    are scored (`score_fn`, an O(beam·K) gather-and-dot or the gather_scores
+    Pallas kernel) and Eq. 5 debiasing is applied on the candidate set:
+    final score xi_y + log p_n(y|x). The generator is trained toward p_D
+    (Theorem 2), so its high-probability set is exactly the candidate set
+    the debiased argmax lives in; with ``beam >= C_pad`` the result equals
+    the dense :func:`predictive_scores` top-k exactly.
+
+    Other head kinds have no conditional candidate structure and fall back
+    to dense scoring + top_k. Returns (scores, labels), each (..., topk);
+    slots beyond the number of live candidates carry score -inf, label -1.
+    """
+    if cfg.kind != "adversarial_ns" or gen.tree is None:
+        scores = predictive_scores(cfg, params, gen, h, x_gen)
+        top, labels = jax.lax.top_k(scores, topk)
+        return top, labels.astype(jnp.int32)
+    if beam is None:
+        beam = max(4 * topk, 16)
+    beam = min(beam, tree_lib.padded_size(cfg.num_labels))
+    cand, log_pn = tree_lib.beam_search(gen.tree, x_gen, beam, beam)
+    valid = cand >= 0
+    xi = score_fn(params, h, jnp.maximum(cand, 0))
+    scores = xi + log_pn if cfg.debias else xi
+    scores = jnp.where(valid, scores, -jnp.inf)
+    top, sel = jax.lax.top_k(scores, min(topk, beam))
+    labels = jnp.take_along_axis(cand, sel, axis=-1)
+    if topk > beam:    # keep the documented (..., topk) output shape
+        pad = [(0, 0)] * (labels.ndim - 1) + [(0, topk - beam)]
+        top = jnp.pad(top, pad, constant_values=-jnp.inf)
+        labels = jnp.pad(labels, pad, constant_values=-1)
+    return top, labels
 
 
 def predictive_log_likelihood(cfg, params, gen, h, x_gen, y,

@@ -15,6 +15,9 @@ Every operation is pure ``jax`` and differentiable where meaningful:
 - ``log_prob_all(tree, x)``      — O(k·C) level-recursive dense evaluation,
   used for the bias-removal term ``log p_n(y|x)`` over the *full* label set at
   prediction time (Eq. 5).
+- ``beam_search(tree, x, beam, topk)`` — O(beam·k·depth) batched beam descent
+  returning the top-``topk`` labels by ``log p_n(y|x)``, the sublinear
+  candidate generator behind :func:`repro.core.heads.predictive_topk`.
 
 Fitting (req. (i)) lives in :mod:`repro.core.tree_fit`.
 """
@@ -187,6 +190,75 @@ def log_prob_all(tree: Tree, x: jax.Array) -> jax.Array:
         logp = children.reshape(batch_shape + (2 * n_lvl,))
     # logp is over leaves; select the leaf of each real label.
     return jnp.take(logp, tree.label_to_leaf, axis=-1)
+
+
+def beam_search(tree: Tree, x: jax.Array, beam: int, topk: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Top-``topk`` labels by log p_n(y|x) via batched beam descent.
+
+    x: (..., k) → (labels, log_probs), each (..., topk). Cost
+    O(beam·k·depth) = O(beam·k·log C) per example — sublinear in C, vs the
+    O(C·k) dense pass of :func:`log_prob_all`. With ``beam >= C_pad`` the
+    search is exhaustive and exact.
+
+    The beam state is a set of ``beam`` frontier nodes per example; each
+    level expands every node into its two children (one gather + dot per
+    node) and keeps the ``beam`` highest partial log-probs via ``top_k``.
+    Because sibling subtree masses sum to the parent's, a leaf can only be
+    missed if its whole prefix path fell out of the beam — rare for the
+    peaked conditionals the generator is fitted to produce.
+
+    Inactive beam slots carry -inf and duplicate node 0; real paths always
+    have finite log-prob (padding forcing uses finite PAD_LOGIT), so -inf
+    uniquely marks dead slots. Padding leaves are masked out of the result:
+    their slots return label -1 with log-prob -inf, and never a real label.
+
+    ``beam`` and ``topk`` must be static under jit (they shape the state).
+    """
+    depth = tree.depth
+    c_pad = 1 << depth
+    if beam < 1 or topk < 1:
+        raise ValueError(
+            f"beam and topk must be >= 1, got beam={beam}, topk={topk}")
+    beam = min(beam, c_pad)
+    n_out = topk
+    topk = min(topk, beam)
+    batch_shape = x.shape[:-1]
+
+    nodes0 = jnp.zeros(batch_shape + (beam,), jnp.int32)
+    logp0 = jnp.full(batch_shape + (beam,), -jnp.inf, jnp.float32)
+    logp0 = logp0.at[..., 0].set(0.0)
+
+    def body(level, carry):
+        del level
+        nodes, logp = carry
+        z = _node_scores(tree, x[..., None, :], nodes)            # (..., beam)
+        cand_logp = jnp.concatenate(
+            [logp + jax.nn.log_sigmoid(-z), logp + jax.nn.log_sigmoid(z)],
+            axis=-1)                                              # (..., 2·beam)
+        cand_nodes = jnp.concatenate([2 * nodes + 1, 2 * nodes + 2], axis=-1)
+        logp, sel = jax.lax.top_k(cand_logp, beam)
+        nodes = jnp.take_along_axis(cand_nodes, sel, axis=-1)
+        return nodes, logp
+
+    nodes, logp = jax.lax.fori_loop(0, depth, body, (nodes0, logp0))
+
+    leaf = nodes - (c_pad - 1)
+    label = tree.leaf_to_label[leaf]
+    # A leaf is real iff the label<->leaf maps round-trip (padding leaves
+    # all alias label 0); dead beam slots are caught by the -inf check.
+    is_real = (tree.label_to_leaf[label] == leaf) & jnp.isfinite(logp)
+    logp = jnp.where(is_real, logp, -jnp.inf)
+    label = jnp.where(is_real, label, -1)
+    top_logp, sel = jax.lax.top_k(logp, topk)
+    top_label = jnp.take_along_axis(label, sel, axis=-1)
+    if n_out > topk:   # keep the documented (..., topk) output shape
+        pad = (0, n_out - topk)
+        top_logp = jnp.pad(top_logp, [(0, 0)] * len(batch_shape) + [pad],
+                           constant_values=-jnp.inf)
+        top_label = jnp.pad(top_label, [(0, 0)] * len(batch_shape) + [pad],
+                            constant_values=-1)
+    return top_label, top_logp
 
 
 def prob_mass_real(tree: Tree, x: jax.Array) -> jax.Array:

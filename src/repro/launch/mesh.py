@@ -7,22 +7,22 @@ the host-device count before first jax init.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.parallel.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(model_axis: int = 1):
     """Small mesh over whatever devices exist (tests / CPU runs)."""
     n = jax.device_count()
     assert n % model_axis == 0
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n // model_axis, model_axis), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 # Hardware constants (TPU v5e), used by the roofline analysis.

@@ -3,6 +3,20 @@ paper's Eq. 5 bias removal in the sampling path.
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduced \
       --batch 4 --prompt-len 16 --gen 8
+
+Two decode paths, selected by ``--topk-beam``:
+
+- dense (default, ``--topk-beam 0``): every step computes all-C logits
+  (O(C·K) matmul) plus the dense tree pass for log p_n (O(C·k)). Exact
+  argmax; per-token cost grows linearly in the vocabulary. Right for eval
+  and small C.
+- beam (``--topk-beam B``, B > 0): beam search descends the adversarial
+  generator tree to propose B candidates in O(B·k·log C), scores only those
+  (gather-and-dot / gather_scores kernel), and applies Eq. 5 debiasing on
+  the candidate set. Per-token cost is logarithmic in C — the serving path
+  for extreme vocabularies — at the price of missing the exact argmax when
+  the true top label falls outside the generator's beam (rare once the tree
+  is fitted; `benchmarks/bench_serve.py` measures both cost and agreement).
 """
 from __future__ import annotations
 
@@ -30,6 +44,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--topk-beam", type=int, default=0,
+                    help="0 = dense O(C) scoring; B > 0 = tree-guided beam "
+                         "search over B candidates, O(B k log C) per token")
     args = ap.parse_args()
 
     from repro.launch.mesh import make_host_mesh
@@ -51,7 +68,8 @@ def main():
     cache = jax.device_put(cache, cache_sh)
 
     prefill = jax.jit(make_prefill(cfg))
-    serve_step = jax.jit(make_serve_step(cfg, hcfg))
+    serve_step = jax.jit(make_serve_step(cfg, hcfg,
+                                         topk_beam=args.topk_beam))
 
     prompts = jax.random.randint(jax.random.PRNGKey(2),
                                  (args.batch, args.prompt_len), 0,
@@ -71,8 +89,10 @@ def main():
         toks.append(token)
     jax.block_until_ready(token)
     dt = time.time() - t0
+    path = (f"beam={args.topk_beam}" if args.topk_beam
+            else "dense debiased scores")
     print(f"decode {args.gen} steps: {dt*1e3:.0f} ms "
-          f"({args.batch*args.gen/dt:.1f} tok/s) [debiased scores]")
+          f"({args.batch*args.gen/dt:.1f} tok/s) [{path}]")
     print("sample:", jnp.concatenate(toks, 1)[0].tolist())
 
 

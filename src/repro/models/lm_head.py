@@ -53,9 +53,9 @@ def gen_features(state: LMHeadState, h: jax.Array) -> jax.Array:
     return h @ state.proj
 
 
-def _softcap_score_fn(cap: float):
+def _softcap_score_fn(cap: float, base=heads_lib.candidate_scores):
     def fn(params: HeadParams, h, ids):
-        s = heads_lib.candidate_scores(params, h, ids)
+        s = base(params, h, ids)
         return cap * jnp.tanh(s / cap) if cap else s
     return fn
 
@@ -99,6 +99,33 @@ def lm_head_loss(cfg: ModelConfig, hcfg: HeadConfig, params: HeadParams,
                                rng, score_fn=score_fn, mask=mask)
 
 
+def lm_predictive_topk(cfg: ModelConfig, hcfg: HeadConfig,
+                       params: HeadParams, state: LMHeadState, h: jax.Array,
+                       topk: int, beam: Optional[int] = None,
+                       use_kernel: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Top-``topk`` debiased (scores, labels) without the O(C) logits matmul.
+
+    Adversarial head: beam search over the generator tree proposes ``beam``
+    candidates, only those are scored (softcap applied per candidate, padded
+    vocab rows unreachable since candidates are real labels), Eq. 5 debias
+    on the candidate set. ``use_kernel`` routes candidate scoring through
+    the gather_scores Pallas kernel. Other heads fall back to the dense
+    path + top_k.
+    """
+    if hcfg.kind == "adversarial_ns" and state.gen.tree is not None:
+        x_gen = gen_features(state, h)
+        base = (heads_lib.kernel_score_fn() if use_kernel
+                else heads_lib.candidate_scores)
+        score_fn = (_softcap_score_fn(cfg.final_logit_softcap, base)
+                    if cfg.final_logit_softcap else base)
+        return heads_lib.predictive_topk(hcfg, params, state.gen, h, x_gen,
+                                         topk, beam=beam, score_fn=score_fn)
+    scores = lm_predictive_scores(cfg, hcfg, params, state, h)
+    top, labels = jax.lax.top_k(scores, topk)
+    return top, labels.astype(jnp.int32)
+
+
 def lm_predictive_scores(cfg: ModelConfig, hcfg: HeadConfig,
                          params: HeadParams, state: LMHeadState,
                          h: jax.Array) -> jax.Array:
@@ -106,7 +133,7 @@ def lm_predictive_scores(cfg: ModelConfig, hcfg: HeadConfig,
     scores = masked_full_logits(cfg, params, h)
     if not hcfg.debias:
         return scores
-    if hcfg.kind == "adversarial_ns":
+    if hcfg.kind == "adversarial_ns" and state.gen.tree is not None:
         x_gen = gen_features(state, h)
         log_pn = tree_lib.log_prob_all(state.gen.tree, x_gen)
         zeros = jnp.zeros(scores.shape[:-1] + (cfg.padded_vocab

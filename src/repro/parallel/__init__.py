@@ -1,6 +1,9 @@
+from repro.parallel.compat import (AxisType, ensure_partitionable_rng,
+                                   make_mesh)
 from repro.parallel.sharding import (batch_shardings, cache_shardings,
                                      mesh_axes, param_spec, params_shardings,
                                      replicated, train_state_shardings)
 
-__all__ = ["batch_shardings", "cache_shardings", "mesh_axes", "param_spec",
+__all__ = ["AxisType", "ensure_partitionable_rng", "make_mesh",
+           "batch_shardings", "cache_shardings", "mesh_axes", "param_spec",
            "params_shardings", "replicated", "train_state_shardings"]

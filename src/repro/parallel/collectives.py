@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.compat import shard_map
 from repro.parallel.sharding import mesh_axes
 
 
@@ -47,7 +48,7 @@ def sharded_candidate_scores(mesh: Mesh, w, b, h, ids):
         scores = jnp.where(mine, scores, 0.0)
         return jax.lax.psum(scores, model)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(model, None), P(model), P(*([None] * h.ndim)),
                   P(*([None] * ids.ndim))),
@@ -99,7 +100,7 @@ def compressed_grad_allreduce(mesh: Mesh, grads_stacked: Any, ef_stacked):
         lambda g: P(dp_axes, *([None] * (g.ndim - 1))), grads_stacked)
     mean_spec = jax.tree.map(
         lambda g: P(*([None] * (g.ndim - 1))), grads_stacked)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(stack_spec, stack_spec),
         out_specs=(mean_spec, stack_spec))(grads_stacked, ef_stacked)

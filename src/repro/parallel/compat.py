@@ -1,0 +1,63 @@
+"""Version-compat shims over ``jax.sharding`` APIs that moved across jax
+releases.
+
+``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+``jax.make_mesh``) only exist in newer jax. All repo code and the subprocess
+test snippets build meshes through :func:`make_mesh` below, which forwards
+``axis_types`` when the installed jax understands it and silently drops it
+otherwise (older jax treats every axis as Auto anyway, so behaviour is
+unchanged). ``shard_map`` is re-exported from wherever the installed jax
+keeps it (top-level vs ``jax.experimental``).
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:
+    from jax.sharding import AxisType  # jax >= 0.4.38
+    HAS_AXIS_TYPE = True
+except ImportError:
+    HAS_AXIS_TYPE = False
+
+    class AxisType:  # type: ignore[no-redef]
+        """Stand-in with the real enum's member names."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+try:
+    shard_map = jax.shard_map  # graduated to the top level in newer jax
+except AttributeError:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that tolerates jax versions without ``axis_types``."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _MAKE_MESH_TAKES_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def ensure_partitionable_rng() -> None:
+    """Align older jax to the new-jax default of partitionable threefry.
+
+    Newer jax defaults ``jax_threefry_partitionable`` to True, making
+    ``jax.random`` draws independent of how operands are sharded. Older jax
+    defaults it to False, where the same program samples *different* values
+    on a mesh than on one device — which breaks sharded == single-device
+    equivalence checks (and reproducibility of sampled negatives across
+    mesh shapes). Call once before building meshes when that equivalence
+    matters.
+    """
+    if not jax.config.jax_threefry_partitionable:
+        jax.config.update("jax_threefry_partitionable", True)

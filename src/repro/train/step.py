@@ -81,11 +81,18 @@ def make_eval_step(cfg: ModelConfig, hcfg: HeadConfig):
     return eval_step
 
 
-def make_serve_step(cfg: ModelConfig, hcfg: HeadConfig):
+def make_serve_step(cfg: ModelConfig, hcfg: HeadConfig,
+                    topk_beam: int = 0, use_kernel: bool = False):
     """Greedy decode step: one token in, one token out, cache updated.
 
-    The predictive scores use the paper's bias removal (Eq. 5): the O(C·k)
-    dense tree pass rides on top of the O(C·K) logits matmul.
+    With ``topk_beam == 0`` (default) the predictive scores are dense: the
+    paper's bias removal (Eq. 5) as an O(C·k) tree pass riding on top of the
+    O(C·K) logits matmul. With ``topk_beam > 0`` the decode never touches
+    O(C): beam search over the generator tree proposes ``topk_beam``
+    candidates in O(beam·k·log C) and only those are scored + debiased
+    (``use_kernel`` routes the scoring through the gather_scores Pallas
+    kernel). Both paths pick the same argmax whenever the true top-1 label
+    survives the beam.
     """
 
     def serve_step(params, head_state, token, cache, cache_pos,
@@ -93,10 +100,16 @@ def make_serve_step(cfg: ModelConfig, hcfg: HeadConfig):
         h, new_cache, _ = transformer.forward(
             params, cfg, token, positions=positions, cache=cache,
             cache_pos=cache_pos)
-        scores = lm_head.lm_predictive_scores(
-            cfg, hcfg, HeadParams(**params["head"]), head_state,
-            h[:, -1])
-        next_token = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+        head_params = HeadParams(**params["head"])
+        if topk_beam:
+            _, labels = lm_head.lm_predictive_topk(
+                cfg, hcfg, head_params, head_state, h[:, -1], topk=1,
+                beam=topk_beam, use_kernel=use_kernel)
+            next_token = labels[..., 0].astype(jnp.int32)
+        else:
+            scores = lm_head.lm_predictive_scores(
+                cfg, hcfg, head_params, head_state, h[:, -1])
+            next_token = jnp.argmax(scores, axis=-1).astype(jnp.int32)
         return next_token[:, None], new_cache
 
     return serve_step

@@ -1,0 +1,76 @@
+"""Fallback for `hypothesis` so the suite collects where the dep is absent.
+
+The real hypothesis is used whenever it is importable (pin it via
+``requirements-test.txt`` for full shrinking/coverage). Otherwise a tiny
+deterministic stand-in reruns each ``@given`` test body over
+``max_examples`` pseudo-random draws from a fixed seed — no shrinking, no
+database, but the same property gets exercised and the suite collects
+everywhere.
+
+Only the surface this repo uses is implemented: ``given`` (kwargs form),
+``settings(max_examples=, deadline=)``, and ``strategies.integers/floats/
+sampled_from``.
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_MAX_EXAMPLES = 20
+    _SEED = 0xC0FFEE
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class strategies:  # noqa: N801  (module-like namespace)
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        del deadline  # no deadline enforcement in the fallback
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_max_examples",
+                            getattr(fn, "_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                rng = random.Random(_SEED)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # Hide the drawn parameters from pytest's fixture resolution:
+            # drop the wraps-installed __wrapped__ (pytest follows it to the
+            # original signature) and advertise only `self`, if present.
+            del runner.__wrapped__
+            keep = [p for p in inspect.signature(fn).parameters.values()
+                    if p.name == "self"]
+            runner.__signature__ = inspect.Signature(keep)
+            return runner
+
+        return deco

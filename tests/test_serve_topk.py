@@ -1,0 +1,239 @@
+"""Sublinear top-k serving: beam search over the generator tree + candidate
+re-scoring with Eq. 5 debiasing (the --topk-beam decode path)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import heads as heads_lib
+from repro.core import tree as tree_lib
+from repro.models import lm_head, transformer
+from repro.models.config import ModelConfig
+from repro.train import make_prefill, make_serve_step
+
+CS = [7, 64, 1000]
+
+
+def _tree(seed, c, k, scale=0.7):
+    return tree_lib.init_tree(jax.random.PRNGKey(seed), c, k, scale=scale)
+
+
+class TestBeamSearch:
+    @pytest.mark.parametrize("c", CS)
+    @pytest.mark.parametrize("beam", [4, 32, None])
+    def test_top1_matches_dense_argmax(self, c, beam):
+        """Beam top-1 == argmax(log_prob_all); None means exhaustive beam."""
+        k = 6
+        if beam is None:
+            beam = tree_lib.padded_size(c)
+        t = _tree(c, c, k)
+        x = jax.random.normal(jax.random.PRNGKey(c + 1), (8, k))
+        labels, logp = jax.jit(functools.partial(
+            tree_lib.beam_search, beam=beam, topk=1))(t, x)
+        dense = tree_lib.log_prob_all(t, x)
+        np.testing.assert_array_equal(np.asarray(labels[:, 0]),
+                                      np.asarray(jnp.argmax(dense, -1)))
+        np.testing.assert_allclose(np.asarray(logp[:, 0]),
+                                   np.asarray(jnp.max(dense, -1)),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("c", CS)
+    def test_full_beam_topk_is_exact(self, c):
+        """Exhaustive beam == dense sort, values and labels."""
+        k, topk = 5, min(5, c)
+        t = _tree(c + 10, c, k, scale=1.2)
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, k))
+        labels, logp = tree_lib.beam_search(t, x, tree_lib.padded_size(c),
+                                            topk)
+        dense = tree_lib.log_prob_all(t, x)
+        ref_v, ref_l = jax.lax.top_k(dense, topk)
+        np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref_l))
+        np.testing.assert_allclose(np.asarray(logp), np.asarray(ref_v),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("c", [5, 7, 13, 1000])
+    @pytest.mark.parametrize("beam", [8, 64])
+    def test_no_padding_labels_in_candidates(self, c, beam):
+        """Padded leaves (c < C_pad) must never surface as candidates."""
+        k = 4
+        t = _tree(3 * c, c, k, scale=2.0)
+        x = jax.random.normal(jax.random.PRNGKey(3), (16, k))
+        labels, logp = tree_lib.beam_search(t, x, beam, min(beam, c))
+        labels = np.asarray(labels)
+        logp = np.asarray(logp)
+        live = np.isfinite(logp)
+        assert (labels[live] >= 0).all() and (labels[live] < c).all()
+        # Dead slots are explicitly label -1, never an aliased real label.
+        assert (labels[~live] == -1).all()
+
+    def test_beam_logp_consistent_with_log_prob(self):
+        """Returned log-probs equal log_prob() of the returned labels."""
+        c, k = 64, 6
+        t = _tree(5, c, k)
+        x = jax.random.normal(jax.random.PRNGKey(6), (8, k))
+        labels, logp = tree_lib.beam_search(t, x, 16, 4)
+        xb = jnp.broadcast_to(x[:, None, :], labels.shape + (k,))
+        ref = tree_lib.log_prob(t, xb, labels)
+        np.testing.assert_allclose(np.asarray(logp), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_batched_shapes(self):
+        """Arbitrary leading batch dims flow through."""
+        c, k = 64, 4
+        t = _tree(7, c, k)
+        x = jax.random.normal(jax.random.PRNGKey(8), (2, 3, k))
+        labels, logp = tree_lib.beam_search(t, x, 8, 4)
+        assert labels.shape == (2, 3, 4)
+        assert logp.shape == (2, 3, 4)
+
+
+class TestPredictiveTopk:
+    def _setup(self, c, seed=0, kk=6, dim=12, debias=True):
+        t = _tree(seed, c, kk, scale=0.8)
+        cfg = heads_lib.HeadConfig(num_labels=c, kind="adversarial_ns",
+                                   debias=debias)
+        gen = heads_lib.make_tree_generator(t)
+        ks = jax.random.split(jax.random.PRNGKey(seed + 1), 3)
+        params = heads_lib.init_head_params(ks[0], c, dim, scale=0.5)
+        h = jax.random.normal(ks[1], (9, dim))
+        x_gen = jax.random.normal(ks[2], (9, kk))
+        return cfg, params, gen, h, x_gen
+
+    @pytest.mark.parametrize("c", CS)
+    @pytest.mark.parametrize("debias", [True, False])
+    def test_full_beam_matches_dense_topk(self, c, debias):
+        cfg, params, gen, h, x_gen = self._setup(c, seed=c, debias=debias)
+        topk = min(5, c)
+        dense = heads_lib.predictive_scores(cfg, params, gen, h, x_gen)
+        ref_v, ref_l = jax.lax.top_k(dense, topk)
+        top, labels = heads_lib.predictive_topk(
+            cfg, params, gen, h, x_gen, topk, beam=tree_lib.padded_size(c))
+        np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref_l))
+        np.testing.assert_allclose(np.asarray(top), np.asarray(ref_v),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("beam", [8, 32])
+    def test_candidates_are_real_labels(self, beam):
+        c = 1000
+        cfg, params, gen, h, x_gen = self._setup(c, seed=11)
+        top, labels = heads_lib.predictive_topk(cfg, params, gen, h, x_gen,
+                                                topk=4, beam=beam)
+        labels = np.asarray(labels)
+        assert (labels >= 0).all() and (labels < c).all()
+        assert np.isfinite(np.asarray(top)).all()
+
+    def test_kernel_score_path_matches(self):
+        """gather_scores Pallas kernel path == plain candidate_scores path."""
+        cfg, params, gen, h, x_gen = self._setup(64, seed=13)
+        ref_v, ref_l = heads_lib.predictive_topk(cfg, params, gen, h, x_gen,
+                                                 topk=4, beam=16)
+        ker_v, ker_l = heads_lib.predictive_topk(
+            cfg, params, gen, h, x_gen, topk=4, beam=16,
+            score_fn=heads_lib.kernel_score_fn())
+        np.testing.assert_array_equal(np.asarray(ker_l), np.asarray(ref_l))
+        np.testing.assert_allclose(np.asarray(ker_v), np.asarray(ref_v),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_topk_wider_than_beam_pads_to_contract(self):
+        """topk > beam: output keeps (..., topk) shape, -inf/-1 padding."""
+        c = 64
+        cfg, params, gen, h, x_gen = self._setup(c, seed=19)
+        top, labels = heads_lib.predictive_topk(cfg, params, gen, h, x_gen,
+                                                topk=16, beam=8)
+        assert top.shape == (9, 16) and labels.shape == (9, 16)
+        assert np.isfinite(np.asarray(top[:, :8])).all()
+        assert (np.asarray(top[:, 8:]) == -np.inf).all()
+        assert (np.asarray(labels[:, 8:]) == -1).all()
+        t_labels, t_logp = tree_lib.beam_search(gen.tree, x_gen, 8, 16)
+        assert t_labels.shape == (9, 16) and t_logp.shape == (9, 16)
+        assert (np.asarray(t_labels[:, 8:]) == -1).all()
+
+    def test_treeless_adversarial_falls_back_to_raw_scores(self):
+        """adversarial_ns with no fitted tree serves undebiased dense topk."""
+        c = 32
+        cfg = heads_lib.HeadConfig(num_labels=c, kind="adversarial_ns")
+        gen = heads_lib.Generator()
+        ks = jax.random.split(jax.random.PRNGKey(23), 2)
+        params = heads_lib.init_head_params(ks[0], c, 8, scale=0.5)
+        h = jax.random.normal(ks[1], (5, 8))
+        x_gen = jnp.zeros((5, 4))
+        ref_v, ref_l = jax.lax.top_k(heads_lib.full_logits(params, h), 3)
+        top, labels = heads_lib.predictive_topk(cfg, params, gen, h, x_gen, 3)
+        np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref_l))
+        np.testing.assert_allclose(np.asarray(top), np.asarray(ref_v),
+                                   rtol=1e-6)
+
+    def test_non_adversarial_fallback(self):
+        """Non-tree heads fall back to dense scoring + top_k."""
+        c = 64
+        cfg = heads_lib.HeadConfig(num_labels=c, kind="freq_ns")
+        gen = heads_lib.make_freq_generator(
+            jnp.arange(1, c + 1, dtype=jnp.float32))
+        ks = jax.random.split(jax.random.PRNGKey(17), 2)
+        params = heads_lib.init_head_params(ks[0], c, 8, scale=0.5)
+        h = jax.random.normal(ks[1], (5, 8))
+        x_gen = jnp.zeros((5, 4))
+        dense = heads_lib.predictive_scores(cfg, params, gen, h, x_gen)
+        ref_v, ref_l = jax.lax.top_k(dense, 3)
+        top, labels = heads_lib.predictive_topk(cfg, params, gen, h, x_gen, 3)
+        np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref_l))
+        np.testing.assert_allclose(np.asarray(top), np.asarray(ref_v),
+                                   rtol=1e-6)
+
+
+class TestServeStepBeam:
+    def _cfg(self):
+        return ModelConfig(
+            name="topk-test", num_layers=1, d_model=32, d_ff=64,
+            vocab_size=100, num_heads=2, num_kv_heads=2,
+            vocab_pad_multiple=128, gen_feature_dim=8, dtype="float32",
+            remat=False)
+
+    def test_exhaustive_beam_decode_equals_dense_decode(self):
+        """make_serve_step(topk_beam=C_pad) reproduces the dense decode."""
+        cfg = self._cfg()
+        hcfg = lm_head.head_config(cfg, "adversarial_ns")
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        head_state = lm_head.default_head_state(jax.random.PRNGKey(1), cfg,
+                                                "adversarial_ns")
+        batch, prompt_len, gen_tokens = 2, 4, 4
+        prompts = jax.random.randint(jax.random.PRNGKey(2),
+                                     (batch, prompt_len), 0, cfg.vocab_size)
+        prefill = jax.jit(make_prefill(cfg))
+        outs = {}
+        for name, beam in (("dense", 0), ("beam", 128)):
+            step = jax.jit(make_serve_step(cfg, hcfg, topk_beam=beam))
+            cache = transformer.init_cache(cfg, batch,
+                                           prompt_len + gen_tokens,
+                                           dtype=jnp.float32)
+            _, cache = prefill(params, prompts, cache)
+            token, toks = prompts[:, -1:], []
+            for t in range(gen_tokens):
+                token, cache = step(params, head_state, token, cache,
+                                    jnp.int32(prompt_len + t))
+                toks.append(token)
+            outs[name] = np.asarray(jnp.concatenate(toks, 1))
+        np.testing.assert_array_equal(outs["dense"], outs["beam"])
+        assert (outs["beam"] >= 0).all()
+        assert (outs["beam"] < cfg.vocab_size).all()
+
+    def test_narrow_beam_decode_stays_in_vocab(self):
+        """Even a narrow beam only ever emits real (non-padding) tokens."""
+        cfg = self._cfg()
+        hcfg = lm_head.head_config(cfg, "adversarial_ns")
+        params = transformer.init_params(jax.random.PRNGKey(3), cfg)
+        head_state = lm_head.default_head_state(jax.random.PRNGKey(4), cfg,
+                                                "adversarial_ns")
+        step = jax.jit(make_serve_step(cfg, hcfg, topk_beam=4))
+        cache = transformer.init_cache(cfg, 2, 6, dtype=jnp.float32)
+        prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 2), 0,
+                                     cfg.vocab_size)
+        _, cache = jax.jit(make_prefill(cfg))(params, prompts, cache)
+        token = prompts[:, -1:]
+        for t in range(4):
+            token, cache = step(params, head_state, token, cache,
+                                jnp.int32(2 + t))
+            assert int(token.min()) >= 0
+            assert int(token.max()) < cfg.vocab_size
