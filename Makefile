@@ -1,14 +1,16 @@
 # Tier-1 verification and benchmarks, one command each.
 #
-#   make test        - full suite (what the roadmap calls tier-1 verify)
-#   make test-fast   - skip @pytest.mark.slow (subprocess launcher tests)
-#   make bench-serve - dense vs beam serving latency sweep over C
-#   make bench       - the full benchmark harness CSV
+#   make test         - full suite (what the roadmap calls tier-1 verify)
+#   make test-fast    - skip @pytest.mark.slow (subprocess launcher tests)
+#   make bench-serve  - dense vs beam serving latency sweep over C
+#   make bench-engine - continuous-batching engine under Poisson traffic
+#                       (writes BENCH_engine.json: throughput, p50/p99)
+#   make bench        - the full benchmark harness CSV
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-serve bench
+.PHONY: test test-fast bench-serve bench-engine bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -18,6 +20,9 @@ test-fast:
 
 bench-serve:
 	$(PYTHON) -m benchmarks.bench_serve
+
+bench-engine:
+	$(PYTHON) -m benchmarks.bench_engine
 
 bench:
 	$(PYTHON) -m benchmarks.run

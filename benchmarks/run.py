@@ -7,11 +7,16 @@
   bench_snr          — eta-bar vs noise distribution   (paper Thm 2 / Eq. 15)
   bench_kernels      — Pallas kernels vs jnp refs      (interpret mode)
   bench_serve        — per-token serving cost vs C     (dense vs beam path)
+                       + fitted-vs-random generator beam/dense agreement
+  bench_engine       — continuous-batching engine under Poisson traffic
+                       (throughput + p50/p99; writes BENCH_engine.json)
   bench_roofline     — dry-run roofline readout        (§Roofline artifacts)
 
 Prints ``name,us_per_call,derived`` CSV. Select suites with
 ``python -m benchmarks.run [suite ...]``; default runs everything except the
-long convergence race (add 'convergence' or 'all').
+long convergence race (add 'convergence' or 'all'). The ``engine`` suite
+runs its quick sweep here; ``python -m benchmarks.bench_engine`` for the
+full C = 256k traffic run.
 """
 from __future__ import annotations
 
@@ -20,7 +25,8 @@ import sys
 
 def main() -> None:
     args = set(sys.argv[1:])
-    default = {"heads", "tree", "snr", "kernels", "serve", "roofline"}
+    default = {"heads", "tree", "snr", "kernels", "serve", "engine",
+               "roofline"}
     wanted = default if not args else (
         default | {"convergence"} if "all" in args else args)
 
@@ -40,6 +46,13 @@ def main() -> None:
     if "serve" in wanted:
         from benchmarks import bench_serve
         bench_serve.run(rows)
+        bench_serve.run_agreement(rows)
+    if "engine" in wanted:
+        from benchmarks import bench_engine
+        # Reduced sweep; no JSON so the tracked full-sweep BENCH_engine.json
+        # (from `make bench-engine`) is not clobbered.
+        bench_engine.run(rows, c_values=(1024, 32768), n_requests=16,
+                         write_json=False)
     if "convergence" in wanted:
         from benchmarks import bench_convergence
         bench_convergence.run(rows)

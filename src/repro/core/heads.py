@@ -304,6 +304,26 @@ def predictive_scores(cfg: HeadConfig, params: HeadParams, gen: Generator,
     return scores
 
 
+def rescore_candidates(cfg: HeadConfig, params: HeadParams, h: jax.Array,
+                       cand: jax.Array, log_pn: jax.Array, topk: int,
+                       score_fn: ScoreFn = candidate_scores
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Score + Eq. 5 debias a proposed candidate set, keep the top ``topk``.
+
+    The re-scoring tail shared by :func:`predictive_topk` and the serving
+    engine's candidate-cache path (repro.serve.engine) — one implementation
+    so the two stay byte-identical. ``cand`` entries < 0 are dead slots and
+    come back as label -1 with score -inf.
+    """
+    valid = cand >= 0
+    xi = score_fn(params, h, jnp.maximum(cand, 0))
+    scores = xi + log_pn if cfg.debias else xi
+    scores = jnp.where(valid, scores, -jnp.inf)
+    top, sel = jax.lax.top_k(scores, topk)
+    labels = jnp.take_along_axis(cand, sel, axis=-1)
+    return top, labels
+
+
 def predictive_topk(cfg: HeadConfig, params: HeadParams, gen: Generator,
                     h: jax.Array, x_gen: jax.Array, topk: int,
                     beam: Optional[int] = None,
@@ -332,12 +352,8 @@ def predictive_topk(cfg: HeadConfig, params: HeadParams, gen: Generator,
         beam = max(4 * topk, 16)
     beam = min(beam, tree_lib.padded_size(cfg.num_labels))
     cand, log_pn = tree_lib.beam_search(gen.tree, x_gen, beam, beam)
-    valid = cand >= 0
-    xi = score_fn(params, h, jnp.maximum(cand, 0))
-    scores = xi + log_pn if cfg.debias else xi
-    scores = jnp.where(valid, scores, -jnp.inf)
-    top, sel = jax.lax.top_k(scores, min(topk, beam))
-    labels = jnp.take_along_axis(cand, sel, axis=-1)
+    top, labels = rescore_candidates(cfg, params, h, cand, log_pn,
+                                     min(topk, beam), score_fn=score_fn)
     if topk > beam:    # keep the documented (..., topk) output shape
         pad = [(0, 0)] * (labels.ndim - 1) + [(0, topk - beam)]
         top = jnp.pad(top, pad, constant_values=-jnp.inf)

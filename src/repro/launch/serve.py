@@ -1,10 +1,10 @@
-"""Serving launcher: prefill + batched greedy decode on a mesh, with the
-paper's Eq. 5 bias removal in the sampling path.
+"""Serving launcher: continuous-batching engine (default) or the legacy
+lock-step decode, with the paper's Eq. 5 bias removal in the sampling path.
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduced \
-      --batch 4 --prompt-len 16 --gen 8
+      --batch 4 --prompt-len 16 --gen 8 [--topk-beam 32]
 
-Two decode paths, selected by ``--topk-beam``:
+Decode paths, selected by ``--topk-beam``:
 
 - dense (default, ``--topk-beam 0``): every step computes all-C logits
   (O(C·K) matmul) plus the dense tree pass for log p_n (O(C·k)). Exact
@@ -14,9 +14,14 @@ Two decode paths, selected by ``--topk-beam``:
   generator tree to propose B candidates in O(B·k·log C), scores only those
   (gather-and-dot / gather_scores kernel), and applies Eq. 5 debiasing on
   the candidate set. Per-token cost is logarithmic in C — the serving path
-  for extreme vocabularies — at the price of missing the exact argmax when
-  the true top label falls outside the generator's beam (rare once the tree
-  is fitted; `benchmarks/bench_serve.py` measures both cost and agreement).
+  for extreme vocabularies. ``--shard-scores`` routes the candidate scoring
+  through ``sharded_candidate_scores`` on the mesh's model axis.
+
+By default requests run through ``repro.serve.Engine``: a slotted KV pool
+(``--slots``, default = ``--batch``), FIFO admission, per-request EOS /
+max-length retirement (``--eos-id``), and the prefix-keyed candidate cache
+on the beam path. ``--lockstep`` restores the fixed-batch loop (still with
+EOS handling) for A/B comparison; the two emit identical tokens.
 """
 from __future__ import annotations
 
@@ -25,51 +30,28 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs as cfg_lib
 from repro.models import lm_head, transformer
-from repro.parallel import (batch_shardings, cache_shardings,
-                            params_shardings, replicated)
+from repro.parallel import cache_shardings, params_shardings
 from repro.train import make_prefill, make_serve_step
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-3b",
-                    choices=list(cfg_lib.ARCHS))
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--head", default="adversarial_ns")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=8)
-    ap.add_argument("--model-axis", type=int, default=1)
-    ap.add_argument("--topk-beam", type=int, default=0,
-                    help="0 = dense O(C) scoring; B > 0 = tree-guided beam "
-                         "search over B candidates, O(B k log C) per token")
-    args = ap.parse_args()
-
-    from repro.launch.mesh import make_host_mesh
-    mesh = make_host_mesh(model_axis=args.model_axis)
-    cfg = (cfg_lib.reduced_config(args.arch) if args.reduced
-           else cfg_lib.get_config(args.arch))
+def run_lockstep(args, cfg, mesh, params, head_state, hcfg):
+    """Fixed-batch decode: one lock-step batch, no admission. Rows that emit
+    ``--eos-id`` are frozen (their subsequent tokens pinned to EOS) and the
+    loop exits early once every row has finished."""
     max_len = args.prompt_len + args.gen
-
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
-    params = jax.device_put(params, params_shardings(
-        cfg, mesh, jax.eval_shape(lambda: params)))
-    head_state = lm_head.default_head_state(jax.random.PRNGKey(1), cfg,
-                                            args.head)
-    hcfg = lm_head.head_config(cfg, args.head)
-
     cache = transformer.init_cache(cfg, args.batch, max_len)
     cache_sh = cache_shardings(cfg, mesh, jax.eval_shape(lambda: cache),
                                args.batch)
     cache = jax.device_put(cache, cache_sh)
 
     prefill = jax.jit(make_prefill(cfg))
-    serve_step = jax.jit(make_serve_step(cfg, hcfg,
-                                         topk_beam=args.topk_beam))
+    serve_step = jax.jit(make_serve_step(
+        cfg, hcfg, topk_beam=args.topk_beam,
+        mesh=mesh if args.shard_scores else None))
 
     prompts = jax.random.randint(jax.random.PRNGKey(2),
                                  (args.batch, args.prompt_len), 0,
@@ -81,19 +63,113 @@ def main():
           f"{(time.time()-t0)*1e3:.0f} ms")
 
     token = prompts[:, -1:]
+    finished = np.zeros((args.batch,), bool)
     toks = []
     t0 = time.time()
+    steps = 0
     for t in range(args.gen):
         token, cache = serve_step(params, head_state, token, cache,
                                   jnp.int32(args.prompt_len + t))
-        toks.append(token)
+        steps += 1
+        if args.eos_id >= 0:
+            row = np.asarray(token[:, 0])
+            row = np.where(finished, args.eos_id, row)
+            finished |= row == args.eos_id
+            token = jnp.asarray(row[:, None])
+            toks.append(row[:, None])
+            if finished.all():
+                break
+        else:
+            toks.append(np.asarray(token))
     jax.block_until_ready(token)
     dt = time.time() - t0
+    out = np.concatenate(toks, 1)
+    if args.eos_id >= 0:
+        # Real tokens only: everything after a row's first EOS is padding.
+        hit = out == args.eos_id
+        real = np.where(hit.any(1), hit.argmax(1) + 1, out.shape[1]).sum()
+    else:
+        real = out.size
     path = (f"beam={args.topk_beam}" if args.topk_beam
             else "dense debiased scores")
-    print(f"decode {args.gen} steps: {dt*1e3:.0f} ms "
-          f"({args.batch*args.gen/dt:.1f} tok/s) [{path}]")
-    print("sample:", jnp.concatenate(toks, 1)[0].tolist())
+    print(f"decode {steps} steps: {dt*1e3:.0f} ms "
+          f"({real/dt:.1f} tok/s) [{path}, lock-step]")
+    print("sample:", out[0].tolist())
+
+
+def run_engine(args, cfg, mesh, params, head_state, hcfg):
+    from repro.serve import Engine, Request, ServeConfig
+
+    slots = args.slots or args.batch
+    engine = Engine(cfg, hcfg, params, head_state, ServeConfig(
+        n_slots=slots, max_len=args.prompt_len + args.gen,
+        beam=args.topk_beam,
+        mesh=mesh if args.shard_scores else None,
+        eos_id=args.eos_id if args.eos_id >= 0 else None,
+        cache_dtype=jnp.bfloat16))
+    prompts = jax.random.randint(jax.random.PRNGKey(2),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    prompts = np.asarray(prompts)
+
+    t0 = time.time()
+    handles = [engine.submit(Request(prompt=p, max_new_tokens=args.gen))
+               for p in prompts]
+    engine.run()
+    dt = time.time() - t0
+    tokens = sum(len(h.tokens) for h in handles)
+    path = (f"beam={args.topk_beam}" if args.topk_beam
+            else "dense debiased scores")
+    print(f"engine: {len(handles)} requests over {slots} slots in "
+          f"{dt*1e3:.0f} ms ({len(handles)/dt:.1f} req/s, "
+          f"{tokens/dt:.1f} tok/s) [{path}]")
+    print("stats:", engine.stats())
+    print("sample:", handles[0].result().tolist())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b",
+                    choices=list(cfg_lib.ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--head", default="adversarial_ns")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests (and lock-step batch size)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="engine KV slots (0 = --batch)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8,
+                    help="max new tokens per request")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop token id (-1 = disabled)")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--topk-beam", type=int, default=0,
+                    help="0 = dense O(C) scoring; B > 0 = tree-guided beam "
+                         "search over B candidates, O(B k log C) per token")
+    ap.add_argument("--shard-scores", action="store_true",
+                    help="score beam candidates via sharded_candidate_"
+                         "scores on the mesh model axis")
+    ap.add_argument("--lockstep", action="store_true",
+                    help="legacy fixed-batch decode instead of the engine")
+    args = ap.parse_args()
+
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(model_axis=args.model_axis)
+    cfg = (cfg_lib.reduced_config(args.arch) if args.reduced
+           else cfg_lib.get_config(args.arch))
+
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    params = jax.device_put(params, params_shardings(
+        cfg, mesh, jax.eval_shape(lambda: params)))
+    head_state = lm_head.default_head_state(jax.random.PRNGKey(1), cfg,
+                                            args.head)
+    hcfg = lm_head.head_config(cfg, args.head)
+
+    if args.lockstep:
+        run_lockstep(args, cfg, mesh, params, head_state, hcfg)
+    else:
+        run_engine(args, cfg, mesh, params, head_state, hcfg)
 
 
 if __name__ == "__main__":

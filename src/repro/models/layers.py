@@ -131,7 +131,10 @@ def attention(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     Training/prefill: ``kv_cache is None`` → self-attention over x and the
     freshly written cache (k, v) is returned for serving prefill.
     Decode: ``kv_cache=(k, v)`` of shape (B, S_max, KV, hd), ``cache_pos``
-    scalar index of the current token; x has S=1.
+    scalar index of the current token; x has S=1. ``cache_pos`` may also be
+    a (B,) vector — one write position per row — which is the continuous-
+    batching decode path (`repro.serve`): every KV slot sits at its own
+    depth, so the write is a per-row scatter instead of one slice update.
 
     ``window`` is a traced int32 scalar (0 = full attention) so that
     heterogeneous layers (gemma2 local/global) share one scanned body.
@@ -162,10 +165,20 @@ def attention(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         new_cache = (k, v)
     else:
         ck, cv = kv_cache
-        k_all = jax.lax.dynamic_update_slice_in_dim(
-            ck, k.astype(ck.dtype), cache_pos, axis=1)
-        v_all = jax.lax.dynamic_update_slice_in_dim(
-            cv, v.astype(cv.dtype), cache_pos, axis=1)
+        cp = jnp.asarray(cache_pos)
+        if cp.ndim:
+            # Per-row write position (slotted decode). Rows past a slot's
+            # position hold stale bytes from the previous occupant; the
+            # causal mask (delta >= 0) keeps them out of the softmax.
+            assert s == 1, "per-row cache_pos requires single-token decode"
+            rows = jnp.arange(b)
+            k_all = ck.at[rows, cp].set(k[:, 0].astype(ck.dtype))
+            v_all = cv.at[rows, cp].set(v[:, 0].astype(cv.dtype))
+        else:
+            k_all = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), cache_pos, axis=1)
+            v_all = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), cache_pos, axis=1)
         s_max = ck.shape[1]
         k_pos = jnp.broadcast_to(jnp.arange(s_max)[None], (b, s_max))
         q_pos = positions if positions.ndim == 2 else positions[0]

@@ -60,6 +60,30 @@ def _softcap_score_fn(cap: float, base=heads_lib.candidate_scores):
     return fn
 
 
+def serving_score_fn(cfg: ModelConfig, use_kernel: bool = False,
+                     mesh=None) -> heads_lib.ScoreFn:
+    """Candidate scorer for the serving paths, final softcap included.
+
+    Selection (one place, shared by ``make_serve_step`` and the serve
+    engine so the two stay byte-identical): ``mesh`` → vocab-sharded
+    ``sharded_candidate_scores`` (each model shard scores only its rows,
+    one psum of the tiny score tensor); ``use_kernel`` → the gather_scores
+    Pallas kernel; else the plain O(beam·K) gather-and-dot.
+    """
+    if mesh is not None:
+        from repro.parallel.collectives import sharded_candidate_scores
+
+        def base(p: HeadParams, hh, ids):
+            return sharded_candidate_scores(mesh, p.w, p.b, hh, ids)
+    elif use_kernel:
+        base = heads_lib.kernel_score_fn()
+    else:
+        base = heads_lib.candidate_scores
+    if cfg.final_logit_softcap:
+        return _softcap_score_fn(cfg.final_logit_softcap, base)
+    return base
+
+
 def masked_full_logits(cfg: ModelConfig, params: HeadParams, h: jax.Array
                        ) -> jax.Array:
     """(…, V_pad) logits with padded rows masked and final softcap applied."""
@@ -102,7 +126,8 @@ def lm_head_loss(cfg: ModelConfig, hcfg: HeadConfig, params: HeadParams,
 def lm_predictive_topk(cfg: ModelConfig, hcfg: HeadConfig,
                        params: HeadParams, state: LMHeadState, h: jax.Array,
                        topk: int, beam: Optional[int] = None,
-                       use_kernel: bool = False
+                       use_kernel: bool = False,
+                       score_fn: Optional[heads_lib.ScoreFn] = None
                        ) -> Tuple[jax.Array, jax.Array]:
     """Top-``topk`` debiased (scores, labels) without the O(C) logits matmul.
 
@@ -110,15 +135,15 @@ def lm_predictive_topk(cfg: ModelConfig, hcfg: HeadConfig,
     candidates, only those are scored (softcap applied per candidate, padded
     vocab rows unreachable since candidates are real labels), Eq. 5 debias
     on the candidate set. ``use_kernel`` routes candidate scoring through
-    the gather_scores Pallas kernel. Other heads fall back to the dense
+    the gather_scores Pallas kernel; ``score_fn`` overrides the scorer
+    entirely and is used as-is (build one with :func:`serving_score_fn`,
+    which bakes in the softcap). Other heads fall back to the dense
     path + top_k.
     """
     if hcfg.kind == "adversarial_ns" and state.gen.tree is not None:
         x_gen = gen_features(state, h)
-        base = (heads_lib.kernel_score_fn() if use_kernel
-                else heads_lib.candidate_scores)
-        score_fn = (_softcap_score_fn(cfg.final_logit_softcap, base)
-                    if cfg.final_logit_softcap else base)
+        if score_fn is None:
+            score_fn = serving_score_fn(cfg, use_kernel=use_kernel)
         return heads_lib.predictive_topk(hcfg, params, state.gen, h, x_gen,
                                          topk, beam=beam, score_fn=score_fn)
     scores = lm_predictive_scores(cfg, hcfg, params, state, h)

@@ -159,14 +159,20 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
 
     - training:        cache=None
     - serving prefill: cache=init_cache(...), cache_pos=0, S=prompt len
-    - serving decode:  cache from prefill, cache_pos=current, S=1
+    - serving decode:  cache from prefill, cache_pos=current, S=1;
+      cache_pos may be a (B,) vector for slotted decode (repro.serve),
+      writing each row's KV at its own depth
     """
     h = embed_inputs(params, cfg, tokens, vision_embeds)
     bsz, s, _ = h.shape
     auto_positions = positions is None
     if positions is None:
-        base = 0 if cache_pos is None else cache_pos
-        positions = base + jnp.arange(s, dtype=jnp.int32)[None]
+        # cache_pos may be a scalar (lock-step decode / prefill) or a (B,)
+        # vector (slotted decode: each row at its own depth).
+        base = jnp.asarray(0 if cache_pos is None else cache_pos, jnp.int32)
+        positions = base[..., None] + jnp.arange(s, dtype=jnp.int32)
+        if positions.ndim == 1:
+            positions = positions[None]
         positions = jnp.broadcast_to(positions, (bsz, s))
     decode = cache is not None and s == 1
     windows = jnp.asarray(cfg.layer_windows(), jnp.int32)       # (L,)

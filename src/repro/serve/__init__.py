@@ -1,0 +1,48 @@
+"""repro.serve — continuous-batching serving engine (design overview).
+
+PR 1 made the per-token math sublinear in C (`tree_lib.beam_search` +
+`predictive_topk`); this package makes *serving* a system: request
+admission, KV-slot management, and cross-request amortization of the
+adversarial generator's candidate work, sitting between the model/step
+layer (`repro.train.step`, `repro.models`) and the launchers
+(`repro.launch.serve`, `examples/serve_lm.py`).
+
+Scheduler states (``engine.Engine``)::
+
+    submit()            admit (FIFO)            retire
+  ───────────▶ QUEUED ─────────────▶ RUNNING ─────────▶ FINISHED
+                        slot=alloc()  │  ▲               slot released,
+                        prefill into  └──┘               EOS / max-new /
+                        the slot      decode step        max-len reached
+
+Slot lifecycle (``cache_pool.SlotPool``): the pool owns one device cache
+pytree sized (layers, n_slots, max_len, ...), allocated once — admission
+prefills a slot in place, decode writes one row per step at the slot's own
+``cache_pos`` (per-row scatter in `models.layers.attention`), retirement
+returns the index to a free list. Stale bytes from previous occupants are
+never read: causal masking hides positions above the new occupant's depth
+and prefill overwrites the region below. Steady state does zero device
+allocation (the jitted steps donate the cache).
+
+Candidate-cache key scheme (``candidate_cache.CandidateCache``): key =
+the full token history ``tuple(prompt + generated)`` whose last element is
+the step's input token; value = the ``(candidates, log_pn)`` sets the tree
+beam proposed for that history. Greedy decode is deterministic, so a key
+hit implies a bit-identical hidden state and the cached candidates are
+exactly what the descent would return — repeated prefixes skip the
+O(beam·k·log C) tree walk and go straight to O(beam·K) re-scoring with
+Eq. 5 debias on the candidate set.
+
+``traffic`` supplies the Poisson-arrival driver used by
+``benchmarks/bench_engine.py`` to measure request throughput and p50/p99
+latency for dense vs beam vs beam+cache serving.
+"""
+from repro.serve.cache_pool import SlotPool
+from repro.serve.candidate_cache import CandidateCache
+from repro.serve.engine import (Engine, Request, ResultStream, ServeConfig,
+                                lockstep_decode)
+from repro.serve.traffic import TrafficConfig, drive, make_workload
+
+__all__ = ["SlotPool", "CandidateCache", "Engine", "Request",
+           "ResultStream", "ServeConfig", "TrafficConfig", "drive",
+           "lockstep_decode", "make_workload"]

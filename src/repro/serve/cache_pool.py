@@ -1,0 +1,90 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+The pool owns ONE device cache pytree, allocated once at engine start via
+``transformer.init_cache(cfg, n_slots, max_len)``: leaves are
+(L, n_slots, max_len, ...) for attention K/V and (L, n_slots, ...) for SSM
+conv/state. Requests borrow a *slot* (a batch row) for their lifetime:
+
+  free ──alloc()──▶ in-use ──release()──▶ free
+
+Admission prefills the slot (overwriting rows [0, prompt_len) plus the SSM
+state), decode steps write one row per step at the slot's own ``cache_pos``,
+and retirement just returns the slot index to the free list — the stale
+bytes left behind are dead by construction (causal masking below the next
+occupant's positions; prefill overwrites the live region), so there is no
+host↔device traffic or reallocation in steady state. The jitted step
+functions donate the cache argument, so XLA reuses the same device buffers
+step over step.
+
+Bookkeeping is host-side and O(n_slots); the device arrays never change
+shape. Invariants (enforced, and property-tested in
+``tests/test_serve_engine.py``): a slot is never handed out twice without
+an intervening release, never released twice, and ``free + in-use`` is
+always a partition of ``range(n_slots)``.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+class SlotPool:
+    """Fixed pool of ``n_slots`` KV-cache rows with free-list allocation."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
+                 dtype=jnp.float32):
+        assert n_slots >= 1 and max_len >= 2
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.dtype = dtype
+        self.cache = transformer.init_cache(cfg, n_slots, max_len,
+                                            dtype=dtype)
+        # LIFO free list: retired slots are reused first (their buffers are
+        # warm in whatever memory tier the runtime keeps them in).
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._in_use = [False] * n_slots
+
+    # -- allocation ------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_in_use(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Borrow a free slot index, or None when the pool is saturated."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        assert not self._in_use[slot], f"slot {slot} double-assigned"
+        self._in_use[slot] = True
+        return slot
+
+    def release(self, slot: int) -> None:
+        assert 0 <= slot < self.n_slots
+        assert self._in_use[slot], f"slot {slot} released while free"
+        self._in_use[slot] = False
+        self._free.append(slot)
+
+    def check_invariants(self) -> None:
+        """Free list and in-use flags partition range(n_slots) exactly."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate slot in free list"
+        for s in range(self.n_slots):
+            assert (s in free) != self._in_use[s], (
+                f"slot {s}: free={s in free} in_use={self._in_use[s]}")
+
+    # -- device cache ----------------------------------------------------
+
+    def swap_cache(self, new_cache: Any) -> Any:
+        """Install the cache pytree returned by a jitted step (functional
+        update; with donation the underlying buffers are the same)."""
+        old, self.cache = self.cache, new_cache
+        return old

@@ -1,0 +1,425 @@
+"""Continuous-batching serving engine over the jit-able step functions.
+
+One engine iteration (``Engine.step``) is: admit → decode → select → retire.
+
+  admit   — pop FIFO'd requests into free KV slots (``SlotPool.alloc``) and
+            prefill each prompt into its slot (``make_prefill_into_slot``);
+            new requests join mid-flight, no draining of the running batch.
+  decode  — ONE jitted ``make_slot_decode`` call for the whole pool: (B, 1)
+            in-flight tokens, (B,) per-slot ``cache_pos``. Free slots ride
+            along as masked garbage (their compute is the price of a static
+            batch shape; their writes are dead by construction).
+  select  — next-token choice from the final hiddens. Dense path: full
+            Eq. 5 debiased scores + argmax (O(C)). Beam path: the prefix-
+            keyed ``CandidateCache`` is consulted per slot; on an all-hit
+            step the O(beam·k·log C) tree descent is skipped entirely and
+            the cached candidate sets go straight to re-scoring
+            (O(beam·K) gather-and-dot, optionally the gather_scores Pallas
+            kernel or mesh-sharded ``sharded_candidate_scores``).
+  retire  — per-slot EOS / max-new-tokens / max-len checks; finished
+            requests release their slot the same step, making room for the
+            next admission.
+
+Request lifecycle: QUEUED → RUNNING(slot) → FINISHED. The caller drives the
+loop (``step()`` / ``run()``) and reads results incrementally through the
+streaming ``ResultStream`` handle returned by ``submit``.
+
+Determinism: greedy decode has no RNG, admission is FIFO, and the per-slot
+math is row-independent, so a request's output depends only on its prompt
+and the params — byte-identical to the lock-step ``make_serve_step`` path
+(property-tested in tests/test_serve_engine.py). The candidate cache can
+only skip work, never change results: a prefix hit implies a bit-identical
+hidden state, hence identical re-scored argmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import heads as heads_lib
+from repro.core import tree as tree_lib
+from repro.core.heads import HeadConfig, HeadParams
+from repro.models import lm_head
+from repro.models.config import ModelConfig
+from repro.models import transformer
+from repro.serve.cache_pool import SlotPool
+from repro.serve.candidate_cache import CandidateCache
+from repro.train.step import (make_prefill, make_prefill_into_slot,
+                              make_serve_step, make_slot_decode)
+
+
+_LOCKSTEP_FNS: Dict[Any, Any] = {}
+
+
+def lockstep_decode(cfg: ModelConfig, hcfg: HeadConfig, params, head_state,
+                    prompts, gen_tokens: int, topk_beam: int = 0,
+                    mesh=None, cache_dtype=jnp.float32) -> np.ndarray:
+    """Reference fixed-batch greedy decode — the pre-engine serving loop.
+
+    THE byte-identity oracle for the engine: tests, benchmarks, and
+    examples compare ``Engine`` outputs against this exact loop, so it is
+    defined once here. Returns the (batch, gen_tokens) generated ids.
+    The jitted prefill/step pair is memoized per static configuration so
+    repeated calls (hypothesis examples, bench chunks) reuse the compile.
+    """
+    prompts = jnp.asarray(prompts)
+    b, pl = prompts.shape
+    # Mesh objects are hashable and key by value — never id(), which can
+    # alias a dead mesh after GC. Cap the memo: it exists to dedupe
+    # repeated oracle calls (hypothesis examples, bench chunks), not to
+    # pin every configuration's executables forever.
+    key = (cfg, hcfg, topk_beam, mesh, jnp.dtype(cache_dtype).name)
+    if key not in _LOCKSTEP_FNS:
+        if len(_LOCKSTEP_FNS) >= 16:
+            _LOCKSTEP_FNS.clear()
+        _LOCKSTEP_FNS[key] = (
+            jax.jit(make_prefill(cfg)),
+            jax.jit(make_serve_step(cfg, hcfg, topk_beam=topk_beam,
+                                    mesh=mesh)))
+    prefill, step = _LOCKSTEP_FNS[key]
+    cache = transformer.init_cache(cfg, b, pl + gen_tokens,
+                                   dtype=cache_dtype)
+    _, cache = prefill(params, prompts, cache)
+    token, toks = prompts[:, -1:], []
+    for t in range(gen_tokens):
+        token, cache = step(params, head_state, token, cache,
+                            jnp.int32(pl + t))
+        toks.append(np.asarray(token))
+    return np.concatenate(toks, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine knobs (static: they shape the compiled step functions)."""
+    n_slots: int = 8             # concurrent decode lanes (KV pool rows)
+    max_len: int = 256           # per-slot KV capacity
+    beam: int = 0                # 0 = dense O(C) scoring; >0 = tree beam
+    use_kernel: bool = False     # gather_scores Pallas kernel for scoring
+    mesh: Any = None             # route scoring via sharded_candidate_scores
+    use_candidate_cache: bool = True   # prefix-keyed descent skipping
+    candidate_cache_capacity: int = 4096
+    eos_id: Optional[int] = None       # engine-wide default stop token
+    cache_dtype: Any = jnp.float32
+    retain_completed: int = 4096       # finished handles kept for audit;
+    #                                    older ones drop (callers hold
+    #                                    their own ResultStream refs)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``eos_id=None`` inherits the engine default;
+    ``max_new_tokens`` is the per-sequence length budget."""
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+
+class ResultStream:
+    """Streaming handle: ``tokens`` grows as the engine decodes; ``done``
+    flips on retirement. Timestamps are perf_counter seconds."""
+
+    def __init__(self, request: Request, request_id: int, now: float):
+        self.request = request
+        self.request_id = request_id
+        self.tokens: List[int] = []
+        self.done = False
+        self.submitted_at = now
+        self.admitted_at: Optional[float] = None
+        self.first_token_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        # -- scheduler state (engine-internal) --
+        self.slot: Optional[int] = None
+        self.cache_pos = 0
+        self.next_input = 0
+        self.history: List[int] = []
+        self._eos: Optional[int] = None
+
+    @property
+    def eos_hit(self) -> bool:
+        return bool(self.tokens) and self.tokens[-1] == self._eos
+
+    def result(self) -> np.ndarray:
+        assert self.done, "request still in flight"
+        return np.asarray(self.tokens, np.int32)
+
+    @property
+    def latency(self) -> float:
+        assert self.done
+        return self.finished_at - self.submitted_at
+
+
+class Engine:
+    """Continuous-batching decode engine. See module docstring."""
+
+    def __init__(self, cfg: ModelConfig, hcfg: HeadConfig, params,
+                 head_state, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.hcfg = hcfg
+        self.params = params
+        self.head_state = head_state
+        self.scfg = serve_cfg
+        self.pool = SlotPool(cfg, serve_cfg.n_slots, serve_cfg.max_len,
+                             dtype=serve_cfg.cache_dtype)
+        if serve_cfg.mesh is not None:
+            # Mesh serving: shard the KV pool per the decode policy (seq
+            # over 'model') so each device holds 1/TP of the cache instead
+            # of a full replica next to sharded params. Pool shapes that
+            # the mesh cannot divide (jax 0.4 requires exact divisibility)
+            # stay on default placement — GSPMD reshards inside the step.
+            from repro.parallel.sharding import cache_shardings
+            try:
+                self.pool.cache = jax.device_put(
+                    self.pool.cache,
+                    cache_shardings(cfg, serve_cfg.mesh,
+                                    jax.eval_shape(lambda: self.pool.cache),
+                                    serve_cfg.n_slots))
+            except ValueError:
+                pass
+        beam = serve_cfg.beam
+        if beam:
+            assert hcfg.kind == "adversarial_ns" and \
+                head_state.gen.tree is not None, \
+                "beam serving needs a fitted adversarial generator tree"
+            beam = min(beam, tree_lib.padded_size(hcfg.num_labels))
+        self.beam = beam
+        self.candidate_cache = (
+            CandidateCache(serve_cfg.candidate_cache_capacity)
+            if beam and serve_cfg.use_candidate_cache else None)
+
+        self._queue: "deque[ResultStream]" = deque()
+        self._active: Dict[int, ResultStream] = {}     # slot -> handle
+        self._next_id = 0
+        # Bounded audit trails — a long-running engine must not grow host
+        # memory per request served; counters carry the lifetime totals.
+        keep = serve_cfg.retain_completed
+        self.admission_order: "deque[int]" = deque(maxlen=keep)
+        self.completed: "deque[ResultStream]" = deque(maxlen=keep)
+        self.completed_count = 0
+        self.decode_steps = 0
+        self.descent_skips = 0      # all-hit steps that skipped beam_search
+        self._occupancy_sum = 0
+
+        # Jitted step functions. The cache argument is donated so the pool's
+        # device buffers are reused in place step over step.
+        self._prefill = jax.jit(
+            make_prefill_into_slot(cfg, serve_cfg.max_len,
+                                   cache_dtype=serve_cfg.cache_dtype),
+            donate_argnums=(2,))
+        self._decode = jax.jit(make_slot_decode(cfg), donate_argnums=(2,))
+        self._select_dense = jax.jit(self._build_dense_select())
+        if beam:
+            self._propose = jax.jit(self._build_propose())
+            self._score = jax.jit(self._build_score())
+
+    # -- jitted head-path builders --------------------------------------
+
+    def _build_dense_select(self):
+        cfg, hcfg = self.cfg, self.hcfg
+
+        def dense_select(params, head_state, h):
+            scores = lm_head.lm_predictive_scores(
+                cfg, hcfg, HeadParams(**params["head"]), head_state, h)
+            return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+        return dense_select
+
+    def _build_propose(self):
+        beam = self.beam
+
+        def propose(head_state, h):
+            x_gen = lm_head.gen_features(head_state, h)
+            return tree_lib.beam_search(head_state.gen.tree, x_gen, beam,
+                                        beam)
+
+        return propose
+
+    def _build_score(self):
+        hcfg = self.hcfg
+        score_fn = lm_head.serving_score_fn(
+            self.cfg, use_kernel=self.scfg.use_kernel, mesh=self.scfg.mesh)
+
+        def score(params, h, cand, log_pn):
+            # heads.rescore_candidates is the same tail predictive_topk
+            # runs, so engine outputs match the lock-step beam path
+            # bit-for-bit.
+            _, labels = heads_lib.rescore_candidates(
+                hcfg, HeadParams(**params["head"]), h, cand, log_pn, 1,
+                score_fn=score_fn)
+            return labels[..., 0].astype(jnp.int32)
+
+        return score
+
+    # -- public API ------------------------------------------------------
+
+    def submit(self, request: Request) -> ResultStream:
+        prompt = np.asarray(request.prompt, np.int32)
+        assert prompt.ndim == 1 and prompt.size >= 1, "prompt must be (S,)"
+        if prompt.size + request.max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens "
+                f"({request.max_new_tokens}) exceeds slot capacity "
+                f"({self.scfg.max_len})")
+        request = dataclasses.replace(request, prompt=prompt)
+        handle = ResultStream(request, self._next_id, time.perf_counter())
+        handle._eos = (request.eos_id if request.eos_id is not None
+                       else self.scfg.eos_id)
+        self._next_id += 1
+        self._queue.append(handle)
+        return handle
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def num_active(self) -> int:
+        return len(self._active)
+
+    def step(self) -> bool:
+        """One admit → decode → select → retire iteration. Returns False
+        when there was nothing to do (idle engine)."""
+        self._admit()
+        if not self._active:
+            return False
+        self._decode_and_retire()
+        return True
+
+    def run(self) -> None:
+        """Drive until queue and in-flight batch are empty."""
+        while self.step():
+            pass
+
+    def stream(self, handle: ResultStream):
+        """Yield ``handle``'s tokens as they are produced, stepping the
+        engine as needed (single-consumer streaming API)."""
+        sent = 0
+        while True:
+            while sent < len(handle.tokens):
+                yield handle.tokens[sent]
+                sent += 1
+            if handle.done:
+                return
+            if not self.step():
+                raise RuntimeError("engine idle but request not finished")
+
+    def stats(self) -> dict:
+        out = {
+            "completed": self.completed_count,
+            "decode_steps": self.decode_steps,
+            "descent_skips": self.descent_skips,
+            # The honest amortization metric: the fraction of decode steps
+            # whose tree descent was actually skipped (a partial-hit step
+            # still descends, even though its lookups count as cache hits).
+            "descent_skip_rate": (self.descent_skips / self.decode_steps
+                                  if self.decode_steps else 0.0),
+            "mean_occupancy": (self._occupancy_sum / self.decode_steps
+                               if self.decode_steps else 0.0),
+            "n_slots": self.scfg.n_slots,
+        }
+        if self.candidate_cache is not None:
+            out["candidate_cache"] = self.candidate_cache.stats()
+        return out
+
+    # -- scheduler internals --------------------------------------------
+
+    def _admit(self) -> None:
+        """FIFO admission into free slots; prefill each admitted prompt.
+
+        Head-of-line order is preserved unconditionally (a request is never
+        skipped in favour of a later one) — the fairness property the tests
+        pin down.
+        """
+        while self._queue and self.pool.num_free:
+            handle = self._queue.popleft()
+            slot = self.pool.alloc()
+            assert slot is not None
+            prompt = handle.request.prompt
+            h, new_cache = self._prefill(self.params, prompt[None, :],
+                                         self.pool.cache, slot)
+            del h   # first output token comes from the decode step below,
+            #         matching the lock-step path token-for-token
+            self.pool.swap_cache(new_cache)
+            handle.slot = slot
+            handle.cache_pos = int(prompt.size)
+            handle.next_input = int(prompt[-1])
+            handle.history = [int(t) for t in prompt]
+            handle.admitted_at = time.perf_counter()
+            self.admission_order.append(handle.request_id)
+            self._active[slot] = handle
+
+    def _decode_and_retire(self) -> None:
+        n = self.scfg.n_slots
+        token = np.zeros((n, 1), np.int32)
+        pos = np.zeros((n,), np.int32)
+        for slot, st in self._active.items():
+            token[slot, 0] = st.next_input
+            pos[slot] = st.cache_pos
+        h, new_cache = self._decode(self.params, token, self.pool.cache,
+                                    pos)
+        self.pool.swap_cache(new_cache)
+        self.decode_steps += 1
+        self._occupancy_sum += len(self._active)
+
+        next_tokens = self._select(h)
+
+        now = time.perf_counter()
+        for slot in list(self._active):
+            st = self._active[slot]
+            tok = int(next_tokens[slot])
+            if st.first_token_at is None:
+                st.first_token_at = now
+            st.tokens.append(tok)
+            st.history.append(tok)
+            st.next_input = tok
+            st.cache_pos += 1
+            done = (len(st.tokens) >= st.request.max_new_tokens
+                    or (st._eos is not None and tok == st._eos)
+                    or st.cache_pos >= self.scfg.max_len)
+            if done:
+                st.done = True
+                st.finished_at = now
+                del self._active[slot]
+                self.pool.release(slot)
+                self.completed.append(st)
+                self.completed_count += 1
+
+    def _select(self, h) -> np.ndarray:
+        """Next-token selection for every slot (free rows give garbage that
+        the caller never reads)."""
+        if not self.beam:
+            return np.asarray(self._select_dense(self.params,
+                                                 self.head_state, h))
+
+        cache = self.candidate_cache
+        cached: Dict[int, Any] = {}
+        if cache is not None:
+            for slot, st in self._active.items():
+                cached[slot] = cache.get(tuple(st.history))
+        all_hit = (cache is not None and self._active
+                   and all(v is not None for v in cached.values()))
+        if all_hit:
+            # Skip the tree descent entirely: assemble cached candidate
+            # sets; free rows stay all-invalid (-1 / -inf).
+            n = self.scfg.n_slots
+            cand = np.full((n, self.beam), -1, np.int32)
+            log_pn = np.full((n, self.beam), -np.inf, np.float32)
+            for slot, (c, lp) in cached.items():
+                cand[slot], log_pn[slot] = c, lp
+            self.descent_skips += 1
+        else:
+            cand, log_pn = self._propose(self.head_state, h)
+            if cache is not None:
+                # One host transfer for both arrays (they are tiny:
+                # n_slots x beam ids + log-probs).
+                cand_np, log_pn_np = jax.device_get((cand, log_pn))
+                for slot, st in self._active.items():
+                    if cached.get(slot) is None:
+                        cache.put(tuple(st.history), cand_np[slot],
+                                  log_pn_np[slot])
+        return np.asarray(self._score(self.params, h, cand, log_pn))

@@ -82,7 +82,8 @@ def make_eval_step(cfg: ModelConfig, hcfg: HeadConfig):
 
 
 def make_serve_step(cfg: ModelConfig, hcfg: HeadConfig,
-                    topk_beam: int = 0, use_kernel: bool = False):
+                    topk_beam: int = 0, use_kernel: bool = False,
+                    mesh=None):
     """Greedy decode step: one token in, one token out, cache updated.
 
     With ``topk_beam == 0`` (default) the predictive scores are dense: the
@@ -93,7 +94,16 @@ def make_serve_step(cfg: ModelConfig, hcfg: HeadConfig,
     (``use_kernel`` routes the scoring through the gather_scores Pallas
     kernel). Both paths pick the same argmax whenever the true top-1 label
     survives the beam.
+
+    ``mesh`` routes the beam path's candidate scoring through
+    ``parallel.collectives.sharded_candidate_scores``: each model shard
+    scores only the candidate rows it owns and one psum of the tiny
+    (batch, beam) score tensor replicates the result — no all-gather of
+    the vocab-sharded output embedding.
     """
+    score_fn = (lm_head.serving_score_fn(cfg, use_kernel=use_kernel,
+                                         mesh=mesh)
+                if topk_beam else None)
 
     def serve_step(params, head_state, token, cache, cache_pos,
                    positions=None):
@@ -104,7 +114,7 @@ def make_serve_step(cfg: ModelConfig, hcfg: HeadConfig,
         if topk_beam:
             _, labels = lm_head.lm_predictive_topk(
                 cfg, hcfg, head_params, head_state, h[:, -1], topk=1,
-                beam=topk_beam, use_kernel=use_kernel)
+                beam=topk_beam, use_kernel=use_kernel, score_fn=score_fn)
             next_token = labels[..., 0].astype(jnp.int32)
         else:
             scores = lm_head.lm_predictive_scores(
@@ -124,6 +134,55 @@ def make_prefill(cfg: ModelConfig):
         return h, new_cache
 
     return prefill
+
+
+def make_prefill_into_slot(cfg: ModelConfig, max_len: int,
+                           cache_dtype=jnp.bfloat16):
+    """Prefill one request into one slot of a pooled cache (repro.serve).
+
+    Returns ``prefill_into_slot(params, tokens, pool_cache, slot)`` →
+    ``(h, pool_cache)`` where ``tokens`` is a single prompt (1, S), the
+    forward runs against a fresh single-row cache (identical math to
+    :func:`make_prefill` on a batch row), and the resulting cache leaves
+    are scattered into batch index ``slot`` of the pool. ``slot`` is a
+    traced scalar, so one compiled function serves every slot; distinct
+    prompt *lengths* still retrace (shape-keyed jit cache — the engine's
+    admission path buckets lengths if that matters).
+    """
+
+    def prefill_into_slot(params, tokens, pool_cache, slot):
+        fresh = transformer.init_cache(cfg, 1, max_len, dtype=cache_dtype)
+        h, new_cache, _ = transformer.forward(
+            params, cfg, tokens, cache=fresh, cache_pos=jnp.int32(0))
+        pool_cache = jax.tree.map(
+            lambda pool, one: pool.at[:, slot].set(
+                one[:, 0].astype(pool.dtype)),
+            pool_cache, new_cache)
+        return h, pool_cache
+
+    return prefill_into_slot
+
+
+def make_slot_decode(cfg: ModelConfig):
+    """Masked decode step over a slot pool: per-row ``cache_pos``.
+
+    Returns ``slot_decode(params, token, cache, cache_pos)`` →
+    ``(h_last (B, d), new_cache)``. ``token`` is (B, 1) — one in-flight
+    token per KV slot — and ``cache_pos`` is a (B,) int32 vector, each
+    slot at its own depth (admitted at different times). Rows holding
+    retired/free slots decode garbage harmlessly: their writes land in a
+    region the next admission's prefill overwrites, and every consumer of
+    ``h_last`` masks them out host-side. Head scoring is deliberately NOT
+    fused here — the serve engine owns it so the candidate cache can skip
+    the tree descent per step.
+    """
+
+    def slot_decode(params, token, cache, cache_pos):
+        h, new_cache, _ = transformer.forward(
+            params, cfg, token, cache=cache, cache_pos=cache_pos)
+        return h[:, -1], new_cache
+
+    return slot_decode
 
 
 def init_train_state(rng, cfg: ModelConfig, opt_cfg: OptimizerConfig,

@@ -135,8 +135,21 @@ def test_launcher_entry_points():
     out = run_py("""
     import sys
     sys.argv = ["serve", "--arch", "stablelm-3b", "--batch", "4",
-                "--prompt-len", "8", "--gen", "4", "--model-axis", "2"]
+                "--prompt-len", "8", "--gen", "4", "--model-axis", "2",
+                "--lockstep"]
     from repro.launch.serve import main
     main()
     """)
     assert "decode 4 steps" in out
+    # Engine path on a mesh, beam candidates scored via the vocab-sharded
+    # sharded_candidate_scores collective (model axis = 2).
+    out = run_py("""
+    import sys
+    sys.argv = ["serve", "--arch", "stablelm-3b", "--batch", "3",
+                "--prompt-len", "8", "--gen", "4", "--model-axis", "2",
+                "--topk-beam", "8", "--shard-scores"]
+    from repro.launch.serve import main
+    main()
+    """)
+    assert "engine: 3 requests" in out
+    assert "beam=8" in out

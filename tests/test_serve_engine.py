@@ -1,0 +1,269 @@
+"""Continuous-batching engine: scheduler invariants (property-based), slot
+pool + candidate cache units, and byte-identity vs the lock-step decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.models import lm_head, transformer
+from repro.models.config import ModelConfig
+from repro.serve import (CandidateCache, Engine, Request, ServeConfig,
+                         SlotPool, lockstep_decode)
+from repro.serve.traffic import TrafficConfig, make_workload
+
+CFG = ModelConfig(
+    name="engine-test", num_layers=1, d_model=32, d_ff=64, vocab_size=100,
+    num_heads=2, num_kv_heads=2, vocab_pad_multiple=128, gen_feature_dim=8,
+    dtype="float32", remat=False)
+HCFG = lm_head.head_config(CFG, "adversarial_ns")
+PARAMS = transformer.init_params(jax.random.PRNGKey(0), CFG)
+HEAD_STATE = lm_head.default_head_state(jax.random.PRNGKey(1), CFG,
+                                        "adversarial_ns")
+MAX_LEN = 12
+BEAM = 8
+N_SLOTS = 2
+
+
+_ENGINE = None
+
+
+def shared_engine() -> Engine:
+    """One shared engine (jit caches stay warm across tests/examples);
+    between runs all slots are free and the queues empty, so state
+    carry-over is only the candidate cache — which never changes outputs,
+    only skips work. (A plain helper, not a pytest fixture: the hypothesis
+    fallback shim hides fixture params from pytest's resolver.)"""
+    global _ENGINE
+    if _ENGINE is None:
+        _ENGINE = Engine(CFG, HCFG, PARAMS, HEAD_STATE, ServeConfig(
+            n_slots=N_SLOTS, max_len=MAX_LEN, beam=BEAM,
+            cache_dtype=jnp.float32))
+    return _ENGINE
+
+
+def _prompts(rng, n, lo=2, hi=4):
+    return [rng.integers(0, CFG.vocab_size,
+                         rng.integers(lo, hi + 1)).astype(np.int32)
+            for _ in range(n)]
+
+
+def _lockstep(prompts, gen_tokens, beam):
+    """Reference decode: the shared fixed-batch oracle from repro.serve."""
+    return lockstep_decode(CFG, HCFG, PARAMS, HEAD_STATE, prompts,
+                           gen_tokens, topk_beam=beam)
+
+
+class TestSchedulerInvariants:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**20), n=st.integers(1, 6),
+           gen=st.integers(1, 4), use_eos=st.sampled_from([False, True]))
+    def test_every_request_retires_exactly_once(self, seed, n, gen,
+                                                use_eos):
+        engine = shared_engine()
+        rng = np.random.default_rng(seed)
+        completed_before = len(engine.completed)
+        handles = [engine.submit(Request(
+            prompt=p, max_new_tokens=gen,
+            eos_id=int(rng.integers(0, CFG.vocab_size)) if use_eos
+            else None)) for p in _prompts(rng, n)]
+        order_before = list(engine.admission_order)
+        engine.run()
+
+        # Every admitted request retired exactly once.
+        new_completed = list(engine.completed)[completed_before:]
+        assert sorted(h.request_id for h in new_completed) == \
+            sorted(h.request_id for h in handles)
+        for h in handles:
+            assert h.done and h.finished_at is not None
+            assert 1 <= len(h.tokens) <= gen
+            if len(h.tokens) < gen:     # early retirement must be EOS
+                assert h.eos_hit
+            assert all(0 <= t < CFG.vocab_size for t in h.tokens)
+
+        # No slot leaked or double-assigned.
+        engine.pool.check_invariants()
+        assert engine.pool.num_free == N_SLOTS
+        assert engine.num_active == 0 and engine.num_pending == 0
+
+        # FIFO admission fairness: admitted in submission order.
+        new_order = list(engine.admission_order)[len(order_before):]
+        assert new_order == [h.request_id for h in handles]
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**20))
+    def test_byte_identical_to_lockstep_beam(self, seed):
+        """Engine (2 slots, mixed admission) == lock-step batch decode,
+        token for token, for the same seed/prompts."""
+        engine = shared_engine()
+        rng = np.random.default_rng(seed)
+        b, pl, gen = 3, 3, 3
+        prompts = rng.integers(0, CFG.vocab_size, (b, pl)).astype(np.int32)
+        ref = _lockstep(prompts, gen, BEAM)
+        handles = [engine.submit(Request(prompt=p, max_new_tokens=gen))
+                   for p in prompts]
+        engine.run()
+        out = np.stack([h.result() for h in handles])
+        np.testing.assert_array_equal(out, ref)
+
+    def test_byte_identical_to_lockstep_dense(self):
+        rng = np.random.default_rng(7)
+        b, pl, gen = 3, 3, 3
+        prompts = rng.integers(0, CFG.vocab_size, (b, pl)).astype(np.int32)
+        ref = _lockstep(prompts, gen, 0)
+        eng = Engine(CFG, HCFG, PARAMS, HEAD_STATE, ServeConfig(
+            n_slots=2, max_len=MAX_LEN, beam=0, cache_dtype=jnp.float32))
+        handles = [eng.submit(Request(prompt=p, max_new_tokens=gen))
+                   for p in prompts]
+        eng.run()
+        np.testing.assert_array_equal(
+            np.stack([h.result() for h in handles]), ref)
+
+
+class TestCandidateCachePath:
+    def test_repeat_prefix_hits_and_identical_outputs(self):
+        engine = shared_engine()
+        rng = np.random.default_rng(11)
+        prompt = rng.integers(0, CFG.vocab_size, 4).astype(np.int32)
+        h1 = engine.submit(Request(prompt=prompt, max_new_tokens=4))
+        engine.run()
+        skips_before = engine.descent_skips
+        hits_before = engine.candidate_cache.hits
+        h2 = engine.submit(Request(prompt=prompt, max_new_tokens=4))
+        engine.run()
+        assert h2.tokens == h1.tokens
+        assert engine.candidate_cache.hits > hits_before
+        assert engine.descent_skips > skips_before
+
+    def test_cache_disabled_engine_matches(self):
+        rng = np.random.default_rng(13)
+        prompt = rng.integers(0, CFG.vocab_size, 4).astype(np.int32)
+        outs = []
+        for use_cache in (True, False):
+            eng = Engine(CFG, HCFG, PARAMS, HEAD_STATE, ServeConfig(
+                n_slots=1, max_len=MAX_LEN, beam=BEAM,
+                use_candidate_cache=use_cache, cache_dtype=jnp.float32))
+            h = eng.submit(Request(prompt=prompt, max_new_tokens=4))
+            h2 = eng.submit(Request(prompt=prompt, max_new_tokens=4))
+            eng.run()
+            outs.append((h.tokens, h2.tokens))
+            assert (eng.candidate_cache is not None) == use_cache
+        assert outs[0] == outs[1]
+
+
+class TestRetirement:
+    def test_per_request_max_new_tokens(self):
+        engine = shared_engine()
+        rng = np.random.default_rng(17)
+        prompts = _prompts(rng, 3)
+        lens = [1, 3, 2]
+        handles = [engine.submit(Request(prompt=p, max_new_tokens=g))
+                   for p, g in zip(prompts, lens)]
+        engine.run()
+        assert [len(h.tokens) for h in handles] == lens
+
+    def test_eos_stops_early_and_frees_slot(self):
+        engine = shared_engine()
+        rng = np.random.default_rng(19)
+        prompt = rng.integers(0, CFG.vocab_size, 3).astype(np.int32)
+        h_ref = engine.submit(Request(prompt=prompt, max_new_tokens=5))
+        engine.run()
+        assert len(h_ref.tokens) == 5
+        eos = h_ref.tokens[2]
+        first = h_ref.tokens.index(eos)      # eos may repeat earlier
+        h = engine.submit(Request(prompt=prompt, max_new_tokens=5,
+                                  eos_id=eos))
+        engine.run()
+        assert h.eos_hit and len(h.tokens) == first + 1
+        assert h.tokens == h_ref.tokens[:first + 1]
+        assert engine.pool.num_free == N_SLOTS
+
+    def test_oversized_request_rejected(self):
+        engine = shared_engine()
+        prompt = np.zeros((MAX_LEN,), np.int32)
+        with pytest.raises(ValueError):
+            engine.submit(Request(prompt=prompt, max_new_tokens=1))
+
+    def test_streaming_matches_result(self):
+        engine = shared_engine()
+        rng = np.random.default_rng(23)
+        prompt = rng.integers(0, CFG.vocab_size, 3).astype(np.int32)
+        h = engine.submit(Request(prompt=prompt, max_new_tokens=4))
+        streamed = list(engine.stream(h))
+        assert streamed == list(h.result())
+
+
+class TestSlotPool:
+    def test_alloc_release_invariants(self):
+        pool = SlotPool(CFG, 3, 8)
+        slots = [pool.alloc() for _ in range(3)]
+        assert sorted(slots) == [0, 1, 2]
+        assert pool.alloc() is None          # saturated, no double-assign
+        pool.check_invariants()
+        pool.release(slots[1])
+        assert pool.num_free == 1
+        assert pool.alloc() == slots[1]      # LIFO reuse
+        pool.check_invariants()
+        with pytest.raises(AssertionError):  # double release
+            pool.release(slots[1])
+            pool.release(slots[1])
+
+    def test_cache_shape(self):
+        pool = SlotPool(CFG, 4, 16, dtype=jnp.float32)
+        assert pool.cache["k"].shape == (
+            CFG.num_layers, 4, 16, CFG.num_kv_heads, CFG.resolved_head_dim)
+
+
+class TestCandidateCacheUnit:
+    def test_lru_eviction_and_stats(self):
+        cc = CandidateCache(capacity=2)
+        c = np.arange(4, dtype=np.int32)
+        lp = np.zeros(4, np.float32)
+        cc.put((1,), c, lp)
+        cc.put((2,), c, lp)
+        assert cc.get((1,)) is not None      # (1,) now most-recent
+        cc.put((3,), c, lp)                  # evicts (2,)
+        assert cc.get((2,)) is None
+        assert cc.get((3,)) is not None
+        assert cc.evictions == 1
+        assert cc.stats()["hits"] == 2 and cc.stats()["misses"] == 1
+
+    def test_hit_returns_stored_arrays(self):
+        cc = CandidateCache(capacity=4)
+        c = np.array([5, 7, -1], np.int32)
+        lp = np.array([-0.5, -1.5, -np.inf], np.float32)
+        cc.put((0, 1, 2), c, lp)
+        got_c, got_lp = cc.get((0, 1, 2))
+        np.testing.assert_array_equal(got_c, c)
+        np.testing.assert_array_equal(got_lp, lp)
+
+
+class TestTraffic:
+    def test_workload_shapes_and_repeats(self):
+        tcfg = TrafficConfig(n_requests=32, rate=100.0, prompt_len=5,
+                             gen_tokens=3, vocab_size=50, repeat_frac=0.5,
+                             n_shared_prompts=1, seed=3)
+        wl = make_workload(tcfg)
+        assert len(wl) == 32
+        arrivals = [t for t, _ in wl]
+        assert arrivals == sorted(arrivals) and arrivals[0] == 0.0
+        keys = {tuple(r.prompt.tolist()) for _, r in wl}
+        assert len(keys) < 32               # shared prompts actually repeat
+        for _, r in wl:
+            assert r.prompt.shape == (5,) and r.max_new_tokens == 3
+
+
+class TestMeshScoring:
+    def test_sharded_score_fn_matches_plain(self):
+        """make_serve_step(mesh=...) (1-shard mesh here; multi-shard runs in
+        test_parallel's subprocess launcher test) == plain scoring."""
+        from repro.parallel import AxisType, make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+        rng = np.random.default_rng(29)
+        b, pl, gen = 2, 3, 3
+        prompts = rng.integers(0, CFG.vocab_size, (b, pl)).astype(np.int32)
+        ref = _lockstep(prompts, gen, BEAM)
+        sharded = lockstep_decode(CFG, HCFG, PARAMS, HEAD_STATE, prompts,
+                                  gen, topk_beam=BEAM, mesh=mesh)
+        np.testing.assert_array_equal(sharded, ref)
