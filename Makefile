@@ -1,22 +1,28 @@
 # Tier-1 verification and benchmarks, one command each.
 #
 #   make test         - full suite (what the roadmap calls tier-1 verify)
-#   make test-fast    - skip @pytest.mark.slow (subprocess launcher tests)
+#   make test-fast    - skip @pytest.mark.slow (subprocess launcher tests,
+#                       odd-page-geometry oracle sweeps)
+#   make test-serve   - serving-engine suite only (@pytest.mark.serve)
 #   make bench-serve  - dense vs beam serving latency sweep over C
 #   make bench-engine - continuous-batching engine under Poisson traffic
-#                       (writes BENCH_engine.json: throughput, p50/p99)
+#                       (writes BENCH_engine.json: throughput, p50/p99,
+#                       paged-vs-monolithic concurrency at equal bytes)
 #   make bench        - the full benchmark harness CSV
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-serve bench-engine bench
+.PHONY: test test-fast test-serve bench-serve bench-engine bench
 
 test:
 	$(PYTHON) -m pytest -x -q
 
 test-fast:
 	$(PYTHON) -m pytest -x -q -m "not slow"
+
+test-serve:
+	$(PYTHON) -m pytest -x -q -m serve
 
 bench-serve:
 	$(PYTHON) -m benchmarks.bench_serve

@@ -10,10 +10,14 @@ Part 1 — lock-step decode, three head paths on the same prompts:
 - exhaustive beam (= padded vocab): must reproduce dense token-for-token.
 
 Part 2 — the same prompts through the continuous-batching engine
-(`repro.serve`): fewer KV slots than requests (so admission actually
-queues), per-request EOS + max-new-tokens retirement, and the prefix-keyed
-candidate cache skipping the tree descent on resubmitted prompts. Engine
-outputs are asserted byte-identical to the lock-step beam decode.
+(`repro.serve`): a paged KV pool sized to HALF the monolithic bytes (pages
+of 8 positions instead of one max_len buffer per lane), fewer decode lanes
+than requests (so admission actually queues), batched multi-request
+prefill, per-request EOS + max-new-tokens retirement with page
+reclamation, and the prefix-keyed candidate cache skipping the tree
+descent on resubmitted prompts. Engine outputs are asserted byte-identical
+to the lock-step beam decode — paging changes physical KV addressing,
+never the math.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -89,12 +93,18 @@ def main():
     # the model (repro.train.generator_fit).
     print(f"dense/beam=32 token agreement: {agree:.0%} (unfitted generator)")
 
-    # --- Part 2: continuous-batching engine -----------------------------
-    # Half as many KV slots as requests: admission queues and back-fills
-    # retired slots mid-flight. Same prompts, same beam → byte-identical.
+    # --- Part 2: continuous-batching engine over a paged KV pool --------
+    # Half as many decode lanes as requests (admission queues and
+    # back-fills retired lanes mid-flight) AND half the monolithic pool's
+    # KV bytes: pages of 8 positions, 12 pages ≈ (4 lanes × 48)/2
+    # positions. Each request maps ceil(40/8) = 5 pages, so two run
+    # concurrently per admission round — memory, not lanes, is the honest
+    # limit. Same prompts, same beam → byte-identical anyway.
+    page_len = 8
+    n_pages = (batch // 2) * max_len // 2 // page_len
     engine = Engine(cfg, hcfg, params, head_state, ServeConfig(
-        n_slots=batch // 2, max_len=max_len, beam=32,
-        cache_dtype=jnp.float32))
+        n_slots=batch // 2, max_len=max_len, beam=32, page_len=page_len,
+        n_pages=n_pages, cache_dtype=jnp.float32))
     prompts_np = np.asarray(prompts)
     t0 = time.time()
     handles = [engine.submit(Request(prompt=p, max_new_tokens=gen_tokens))
@@ -104,9 +114,14 @@ def main():
     out = np.stack([h.result() for h in handles])
     assert (out == np.asarray(decoded["beam=32"])).all(), \
         "engine must reproduce the lock-step beam decode byte-for-byte"
-    print(f"[engine] {batch} requests over {batch // 2} slots in "
-          f"{dt*1e3:.0f} ms ({batch*gen_tokens/dt:.0f} tok/s); outputs == "
-          "lock-step beam=32")
+    st = engine.stats()
+    assert st["peak_pages_in_use"] <= n_pages and st["pages_in_use"] == 0
+    print(f"[engine] {batch} requests over {batch // 2} lanes / "
+          f"{n_pages} pages x {page_len} (half the monolithic KV bytes) "
+          f"in {dt*1e3:.0f} ms ({batch*gen_tokens/dt:.0f} tok/s); "
+          f"outputs == lock-step beam=32; peak pages "
+          f"{st['peak_pages_in_use']}/{n_pages}, "
+          f"{st['prefill_calls']} batched prefill launches")
 
     # Resubmit the same prompts: every step's candidate set is a prefix hit,
     # so the tree descent is skipped entirely (descent_skips > 0). Hit rate

@@ -17,11 +17,15 @@ Decode paths, selected by ``--topk-beam``:
   for extreme vocabularies. ``--shard-scores`` routes the candidate scoring
   through ``sharded_candidate_scores`` on the mesh's model axis.
 
-By default requests run through ``repro.serve.Engine``: a slotted KV pool
-(``--slots``, default = ``--batch``), FIFO admission, per-request EOS /
-max-length retirement (``--eos-id``), and the prefix-keyed candidate cache
-on the beam path. ``--lockstep`` restores the fixed-batch loop (still with
-EOS handling) for A/B comparison; the two emit identical tokens.
+By default requests run through ``repro.serve.Engine``: a paged KV pool
+(``--slots`` decode lanes, ``--page-len``/``--n-pages`` page geometry —
+defaults reproduce the monolithic one-buffer-per-lane capacity; undersize
+``--n-pages`` to pack more lanes into the same device bytes on mixed-length
+traffic), FIFO admission with batched multi-request prefill, per-request
+EOS / max-length retirement (``--eos-id``) with page reclamation, and the
+prefix-keyed candidate cache on the beam path. ``--lockstep`` restores the
+fixed-batch loop (still with EOS handling) for A/B comparison; the two
+emit identical tokens.
 """
 from __future__ import annotations
 
@@ -103,6 +107,7 @@ def run_engine(args, cfg, mesh, params, head_state, hcfg):
     slots = args.slots or args.batch
     engine = Engine(cfg, hcfg, params, head_state, ServeConfig(
         n_slots=slots, max_len=args.prompt_len + args.gen,
+        page_len=args.page_len, n_pages=args.n_pages,
         beam=args.topk_beam,
         mesh=mesh if args.shard_scores else None,
         eos_id=args.eos_id if args.eos_id >= 0 else None,
@@ -137,7 +142,16 @@ def main():
     ap.add_argument("--batch", type=int, default=4,
                     help="number of requests (and lock-step batch size)")
     ap.add_argument("--slots", type=int, default=0,
-                    help="engine KV slots (0 = --batch)")
+                    help="engine decode lanes (0 = --batch)")
+    ap.add_argument("--page-len", type=int, default=0,
+                    help="KV page size in positions (0 = one max_len page "
+                         "per request: monolithic-equivalent; ignored for "
+                         "pure-SSM archs, which have no KV arena)")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="KV arena capacity in pages (0 = full per-lane "
+                         "reservation; smaller packs more lanes into the "
+                         "same device bytes on mixed-length traffic; "
+                         "ignored for pure-SSM archs)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8,
                     help="max new tokens per request")

@@ -125,7 +125,8 @@ def attention(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
               window: jax.Array,
               kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
               cache_pos: Optional[jax.Array] = None,
-              mask: Optional[jax.Array] = None):
+              mask: Optional[jax.Array] = None,
+              page_table: Optional[jax.Array] = None):
     """GQA attention with causal + per-layer sliding-window mask + softcap.
 
     Training/prefill: ``kv_cache is None`` → self-attention over x and the
@@ -135,6 +136,16 @@ def attention(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     a (B,) vector — one write position per row — which is the continuous-
     batching decode path (`repro.serve`): every KV slot sits at its own
     depth, so the write is a per-row scatter instead of one slice update.
+
+    Paged decode: with ``page_table`` (B, max_pages) the cache leaves are a
+    shared page *arena* (n_pages, page_len, KV, hd) instead of per-row
+    buffers. Row b's logical position p lives at physical
+    ``(page_table[b, p // page_len], p % page_len)``: the step scatter-writes
+    the new token there and gathers the row's pages back into logical order
+    for the softmax. Page tables hold only live mappings for positions the
+    row has reached; unmapped entries point at the allocator's sink page,
+    whose bytes are causally masked (delta >= 0 fails above ``cache_pos``)
+    exactly like a previous occupant's stale rows in the contiguous layout.
 
     ``window`` is a traced int32 scalar (0 = full attention) so that
     heterogeneous layers (gemma2 local/global) share one scanned body.
@@ -163,6 +174,30 @@ def attention(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         k_pos = positions if positions.ndim == 2 else positions[0]
         q_pos = k_pos
         new_cache = (k, v)
+    elif page_table is not None:
+        # Paged decode: cache leaves are the shared arena. Scatter the new
+        # token at its (page, offset), then gather this row's pages back
+        # into logical order — positions are identical to the contiguous
+        # layout, only the physical addressing differs, so the softmax sees
+        # byte-identical inputs (the property the geometry oracle pins).
+        assert s == 1, "paged cache requires single-token decode"
+        ck, cv = kv_cache                       # (P, page_len, KV, hd)
+        page_len = ck.shape[1]
+        cp = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
+        rows = jnp.arange(b)
+        pid = page_table[rows, cp // page_len]  # (B,) physical page per row
+        off = cp % page_len
+        # Distinct live rows own distinct pages (allocator invariant), so
+        # the only duplicate scatter targets are free rows' sink writes —
+        # garbage into the garbage page, in unspecified order.
+        k_arena = ck.at[pid, off].set(k[:, 0].astype(ck.dtype))
+        v_arena = cv.at[pid, off].set(v[:, 0].astype(cv.dtype))
+        new_cache = (k_arena, v_arena)
+        s_max = page_table.shape[1] * page_len
+        k_all = k_arena[page_table].reshape(b, s_max, kv, hd)
+        v_all = v_arena[page_table].reshape(b, s_max, kv, hd)
+        k_pos = jnp.broadcast_to(jnp.arange(s_max)[None], (b, s_max))
+        q_pos = positions if positions.ndim == 2 else positions[0]
     else:
         ck, cv = kv_cache
         cp = jnp.asarray(cache_pos)

@@ -169,9 +169,12 @@ def ssm_block(params, cfg: ModelConfig, x: jax.Array,
         y, state = ssd_chunked(xs, dt, a_neg, bm, cm, params["d_skip"],
                                cfg.ssm_chunk, initial_state=init_state)
         width = cfg.ssm_conv_width
-        # conv state for serving: last (width-1) *pre-conv* inputs.
+        # conv state for serving: last (width-1) *pre-conv* inputs. A
+        # prompt shorter than the window left-pads with zeros — exactly
+        # the fresh-cache contents those positions held.
         pre = jnp.einsum("bsd,de->bse", x,
                          params["w_in"].astype(cdt))[..., di:di + di + 2 * n]
+        pre = jnp.pad(pre, ((0, 0), (max(0, width - 1 - s), 0), (0, 0)))
         conv_state = pre[:, -(width - 1):, :].astype(jnp.float32)
     else:
         assert s == 1 and cache is not None

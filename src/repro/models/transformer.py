@@ -87,12 +87,33 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, n_lanes: int, n_pages: int,
+                     page_len: int, dtype=jnp.bfloat16):
+    """Paged decode cache: attention K/V live in a shared page arena
+    (``n_pages`` physical pages of ``page_len`` positions each, including
+    the allocator's sink page) addressed through per-lane page tables, not
+    in per-row ``max_len`` buffers. SSM conv/state have no sequence dim to
+    page, so they stay lane-indexed (``n_lanes`` rows) as before."""
+    ell = cfg.num_layers
+    cache: Dict[str, Any] = {}
+    if cfg.block in ("attn", "hybrid"):
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache["k"] = jnp.zeros((ell, n_pages, page_len, kv, hd), dtype)
+        cache["v"] = jnp.zeros((ell, n_pages, page_len, kv, hd), dtype)
+    if cfg.block in ("ssm", "hybrid"):
+        conv, state = ssm_lib.init_ssm_cache(cfg, n_lanes)
+        cache["conv"] = jnp.tile(conv[None], (ell,) + (1,) * conv.ndim)
+        cache["state"] = jnp.tile(state[None], (ell,) + (1,) * state.ndim)
+    return cache
+
+
 # ---------------------------------------------------------------------------
 # Block body
 # ---------------------------------------------------------------------------
 
 def _block(layer_params, cfg: ModelConfig, h, positions, window,
-           cache_l, cache_pos, decode: bool, attn_mask=None):
+           cache_l, cache_pos, decode: bool, attn_mask=None,
+           page_table=None):
     """One decoder block. Returns (h, new_cache_l, metrics)."""
     from repro.parallel.hints import hint_residual
     h = hint_residual(h)   # seq-parallel residual (no-op unless hinted)
@@ -105,7 +126,8 @@ def _block(layer_params, cfg: ModelConfig, h, positions, window,
         kvc = (cache_l["k"], cache_l["v"]) if cache_l is not None else None
         a_out, a_cache = L.attention(layer_params["attn"], cfg, mix_in,
                                      positions, window, kv_cache=kvc,
-                                     cache_pos=cache_pos, mask=attn_mask)
+                                     cache_pos=cache_pos, mask=attn_mask,
+                                     page_table=page_table)
         if cache_l is not None:
             new_cache["k"], new_cache["v"] = a_cache
         mix_out = mix_out + a_out
@@ -154,6 +176,7 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
             positions: Optional[jax.Array] = None,
             vision_embeds: Optional[jax.Array] = None,
             cache=None, cache_pos: Optional[jax.Array] = None,
+            page_table: Optional[jax.Array] = None,
             ) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
     """Run the stack. Returns (hidden (B,S,d), new_cache, metrics).
 
@@ -162,6 +185,10 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
     - serving decode:  cache from prefill, cache_pos=current, S=1;
       cache_pos may be a (B,) vector for slotted decode (repro.serve),
       writing each row's KV at its own depth
+    - paged decode:    cache=init_paged_cache(...), cache_pos (B,) vector,
+      page_table (B, max_pages) mapping each lane's logical pages onto the
+      shared arena (repro.serve.PagedPool); the page table is shared by
+      every layer
     """
     h = embed_inputs(params, cfg, tokens, vision_embeds)
     bsz, s, _ = h.shape
@@ -188,7 +215,8 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
             L.causal_window_mask(s, cfg.window_size or 0)])
 
     body = functools.partial(_block, cfg=cfg, positions=positions,
-                             cache_pos=cache_pos, decode=decode)
+                             cache_pos=cache_pos, decode=decode,
+                             page_table=page_table)
 
     if cfg.scan_layers:
         def scan_body(carry, xs):

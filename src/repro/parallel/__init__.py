@@ -1,9 +1,11 @@
 from repro.parallel.compat import (AxisType, ensure_partitionable_rng,
                                    make_mesh)
 from repro.parallel.sharding import (batch_shardings, cache_shardings,
-                                     mesh_axes, param_spec, params_shardings,
+                                     mesh_axes, paged_cache_shardings,
+                                     param_spec, params_shardings,
                                      replicated, train_state_shardings)
 
 __all__ = ["AxisType", "ensure_partitionable_rng", "make_mesh",
-           "batch_shardings", "cache_shardings", "mesh_axes", "param_spec",
+           "batch_shardings", "cache_shardings", "mesh_axes",
+           "paged_cache_shardings", "param_spec",
            "params_shardings", "replicated", "train_state_shardings"]

@@ -175,6 +175,37 @@ def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_abstract: Any,
     return tree_map_with_path(spec, cache_abstract)
 
 
+def paged_cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_abstract: Any,
+                          n_lanes: int):
+    """Sharding for the paged KV arena (repro.serve.PagedPool).
+
+    K/V pages: any lane gathers any page, so the page dim stays replicated
+    across data axes; the within-page sequence dim goes over 'model',
+    carrying the decode policy above (sharded-S logits, psum'd softmax)
+    into the paged layout. SSM conv/state leaves are lane-indexed and keep
+    the contiguous-cache rules.
+    """
+    dp_axes, model = mesh_axes(mesh)
+    tp = _tp(mesh)
+    big_batch = n_lanes % _dp(mesh) == 0
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        if names[-1] in ("k", "v"):                   # (L,P,page_len,KV,hd)
+            return NamedSharding(mesh, P(None, None, model, None, None))
+        if names[-1] == "state":                      # (L,lanes,H,N,P)
+            h_ax = model if cfg.ssm_heads % tp == 0 else None
+            b_ax = dp_axes if big_batch else None
+            return NamedSharding(mesh, P(None, b_ax, h_ax, None, None))
+        if names[-1] == "conv":                       # (L,lanes,W,conv_dim)
+            b_ax = dp_axes if big_batch else None
+            return NamedSharding(mesh, P(None, b_ax, None, None))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return tree_map_with_path(spec, cache_abstract)
+
+
 def train_state_shardings(cfg: ModelConfig, mesh: Mesh, state_abstract):
     """TrainState sharding: params rules; opt state mirrors params; head
     generator state replicated (it is small and read-everywhere)."""

@@ -11,18 +11,30 @@ Scheduler states (``engine.Engine``)::
 
     submit()            admit (FIFO)            retire
   ───────────▶ QUEUED ─────────────▶ RUNNING ─────────▶ FINISHED
-                        slot=alloc()  │  ▲               slot released,
-                        prefill into  └──┘               EOS / max-new /
-                        the slot      decode step        max-len reached
+                        lane+pages     │  ▲              lane + pages
+                        = alloc(n);    └──┘              reclaimed,
+                        batched        decode step       EOS / max-new /
+                        prefill        (page-table       max-len reached
+                        into pages     gather/scatter)
 
-Slot lifecycle (``cache_pool.SlotPool``): the pool owns one device cache
-pytree sized (layers, n_slots, max_len, ...), allocated once — admission
-prefills a slot in place, decode writes one row per step at the slot's own
-``cache_pos`` (per-row scatter in `models.layers.attention`), retirement
-returns the index to a free list. Stale bytes from previous occupants are
-never read: causal masking hides positions above the new occupant's depth
-and prefill overwrites the region below. Steady state does zero device
-allocation (the jitted steps donate the cache).
+Page lifecycle (``cache_pool.PagedPool``): the pool owns one device arena
+pytree sized (layers, n_pages + 1, page_len, ...) — fixed-size KV pages
+plus a sink page for free lanes' garbage writes — allocated once.
+Admission allocates a decode lane plus ``ceil((prompt + max_new) /
+page_len)`` pages, records them in the lane's page table, and prefills
+ALL newly-admitted prompts in one padded jitted call
+(`train.step.make_batched_prefill`, row/length power-of-two bucketing to
+bound recompiles). Decode scatter-writes each lane's token at
+``(page_table[pos // page_len], pos % page_len)`` and gathers the lane's
+pages back into logical order for the softmax (paged branch of
+`models.layers.attention`); retirement returns lane and pages to their
+free lists. Stale bytes from previous page occupants are never read:
+causal masking hides positions above the new occupant's depth and prefill
+overwrites the region below. Steady state does zero device allocation
+(the jitted steps donate the arena). Against the old one-max_len-buffer-
+per-slot layout, memory is charged per reachable position instead of per
+worst-case slot, so mixed-length traffic packs several times more
+concurrent requests into the same device bytes.
 
 Candidate-cache key scheme (``candidate_cache.CandidateCache``): key =
 the full token history ``tuple(prompt + generated)`` whose last element is
@@ -37,12 +49,12 @@ Eq. 5 debias on the candidate set.
 ``benchmarks/bench_engine.py`` to measure request throughput and p50/p99
 latency for dense vs beam vs beam+cache serving.
 """
-from repro.serve.cache_pool import SlotPool
+from repro.serve.cache_pool import PagedPool
 from repro.serve.candidate_cache import CandidateCache
 from repro.serve.engine import (Engine, Request, ResultStream, ServeConfig,
                                 lockstep_decode)
 from repro.serve.traffic import TrafficConfig, drive, make_workload
 
-__all__ = ["SlotPool", "CandidateCache", "Engine", "Request",
+__all__ = ["PagedPool", "CandidateCache", "Engine", "Request",
            "ResultStream", "ServeConfig", "TrafficConfig", "drive",
            "lockstep_decode", "make_workload"]

@@ -1,85 +1,160 @@
-"""Slot-based KV-cache pool for continuous batching.
+"""Paged KV-cache pool for continuous batching.
 
 The pool owns ONE device cache pytree, allocated once at engine start via
-``transformer.init_cache(cfg, n_slots, max_len)``: leaves are
-(L, n_slots, max_len, ...) for attention K/V and (L, n_slots, ...) for SSM
-conv/state. Requests borrow a *slot* (a batch row) for their lifetime:
+``transformer.init_paged_cache(cfg, n_lanes, n_pages + 1, page_len)``:
+attention K/V leaves are a shared *arena* (L, n_pages + 1, page_len, ...)
+of fixed-size pages (the extra physical page is the **sink** — the
+designated garbage target for free lanes and padded prefill rows; one
+page of deliberate overhead traded for simple, always-in-bounds
+addressing over scatter-drop/gather-fill modes), and SSM conv/state
+leaves stay lane-indexed (L, n_lanes, ...) since they have no sequence
+dimension to page.
 
-  free ──alloc()──▶ in-use ──release()──▶ free
+A request borrows two resources for its lifetime: a decode *lane* (a row of
+the static decode batch) and ``pages_needed(prompt + max_new)`` *pages*
+(rounded up to ``page_len``). Unlike the previous one-``max_len``-buffer-
+per-slot layout, memory is charged for what the request can actually
+reach, so skewed prompt/output lengths pack several times more concurrent
+requests into the same device bytes:
 
-Admission prefills the slot (overwriting rows [0, prompt_len) plus the SSM
-state), decode steps write one row per step at the slot's own ``cache_pos``,
-and retirement just returns the slot index to the free list — the stale
-bytes left behind are dead by construction (causal masking below the next
-occupant's positions; prefill overwrites the live region), so there is no
+            alloc(n)                                release(lane)
+  free ───────────────▶ mapped to one lane ───────────────────────▶ free
+  pages   lane + pages   (page_table row =    all the lane's pages
+          assigned       [p0, p1, .., sink])  reclaimed, row reset to sink
+
+Admission prefills the mapped pages (``make_batched_prefill`` scatters each
+logical position p into ``(page_table[p // page_len], p % page_len)``),
+decode steps scatter one row per step at the lane's own ``(page, offset)``,
+and retirement returns lane and pages to their free lists — stale bytes
+left in a reclaimed page are dead by construction (causal masking above the
+next occupant's positions; prefill overwrites below), so there is no
 host↔device traffic or reallocation in steady state. The jitted step
-functions donate the cache argument, so XLA reuses the same device buffers
-step over step.
+functions donate the arena, so XLA reuses the same device buffers step over
+step.
 
-Bookkeeping is host-side and O(n_slots); the device arrays never change
-shape. Invariants (enforced, and property-tested in
-``tests/test_serve_engine.py``): a slot is never handed out twice without
-an intervening release, never released twice, and ``free + in-use`` is
-always a partition of ``range(n_slots)``.
+Bookkeeping is host-side and O(n_lanes + n_pages); the device arrays never
+change shape. Invariants (enforced, and property-tested in
+``tests/test_serve_engine.py``): free and mapped pages always partition
+``range(n_pages)``, no page is mapped by two live lanes, release reclaims
+exactly the pages alloc handed out, and a drained pool is indistinguishable
+from a fresh one.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
 
 
-class SlotPool:
-    """Fixed pool of ``n_slots`` KV-cache rows with free-list allocation."""
+class PagedPool:
+    """Fixed arena of ``n_pages`` KV pages + ``n_lanes`` decode lanes with
+    free-list allocation and per-lane page tables."""
 
-    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
-                 dtype=jnp.float32):
-        assert n_slots >= 1 and max_len >= 2
-        self.n_slots = n_slots
+    def __init__(self, cfg: ModelConfig, n_lanes: int, n_pages: int,
+                 page_len: int, max_len: int, dtype=jnp.float32):
+        assert n_lanes >= 1 and n_pages >= 1 and page_len >= 1
+        assert max_len >= 2
+        self.n_lanes = n_lanes
+        self.n_pages = n_pages
+        self.page_len = page_len
         self.max_len = max_len
+        # Worst-case pages a single request can map; fixes the page-table
+        # width (and with it the gathered KV length) at compile time.
+        self.max_pages = -(-max_len // page_len)
+        assert n_pages >= self.max_pages, (
+            f"pool of {n_pages} pages cannot hold one max_len={max_len} "
+            f"request ({self.max_pages} pages of {page_len})")
+        self.sink = n_pages               # physical garbage page
         self.dtype = dtype
-        self.cache = transformer.init_cache(cfg, n_slots, max_len,
-                                            dtype=dtype)
-        # LIFO free list: retired slots are reused first (their buffers are
-        # warm in whatever memory tier the runtime keeps them in).
-        self._free: List[int] = list(range(n_slots - 1, -1, -1))
-        self._in_use = [False] * n_slots
+        self.cache = transformer.init_paged_cache(
+            cfg, n_lanes, n_pages + 1, page_len, dtype=dtype)
+        # LIFO free lists: recently retired lanes/pages are reused first
+        # (warm in whatever memory tier the runtime keeps them in).
+        self._free_pages: List[int] = list(range(n_pages - 1, -1, -1))
+        self._free_lanes: List[int] = list(range(n_lanes - 1, -1, -1))
+        self._pages_of: Dict[int, List[int]] = {}      # lane -> its pages
+        # Host mirror of the device page tables, fed to every decode step.
+        # Unmapped entries point at the sink page.
+        self.page_table = np.full((n_lanes, self.max_pages), self.sink,
+                                  np.int32)
 
     # -- allocation ------------------------------------------------------
 
+    def pages_needed(self, total_len: int) -> int:
+        """Pages covering ``total_len`` positions (prompt + max new)."""
+        return max(1, -(-int(total_len) // self.page_len))
+
     @property
-    def num_free(self) -> int:
-        return len(self._free)
+    def num_free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def num_mapped_pages(self) -> int:
+        return self.n_pages - len(self._free_pages)
+
+    @property
+    def num_free_lanes(self) -> int:
+        return len(self._free_lanes)
 
     @property
     def num_in_use(self) -> int:
-        return self.n_slots - len(self._free)
+        return self.n_lanes - len(self._free_lanes)
 
-    def alloc(self) -> Optional[int]:
-        """Borrow a free slot index, or None when the pool is saturated."""
-        if not self._free:
+    def can_admit(self, n_pages: int) -> bool:
+        return bool(self._free_lanes) and len(self._free_pages) >= n_pages
+
+    def alloc(self, n_pages: int) -> Optional[Tuple[int, List[int]]]:
+        """Borrow one lane plus ``n_pages`` pages, or None when either
+        resource is exhausted (all-or-nothing: no partial grants)."""
+        assert 1 <= n_pages <= self.max_pages, n_pages
+        if not self.can_admit(n_pages):
             return None
-        slot = self._free.pop()
-        assert not self._in_use[slot], f"slot {slot} double-assigned"
-        self._in_use[slot] = True
-        return slot
+        lane = self._free_lanes.pop()
+        assert lane not in self._pages_of, f"lane {lane} double-assigned"
+        pages = [self._free_pages.pop() for _ in range(n_pages)]
+        self._pages_of[lane] = pages
+        row = self.page_table[lane]
+        row[:] = self.sink
+        row[:n_pages] = pages
+        return lane, pages
 
-    def release(self, slot: int) -> None:
-        assert 0 <= slot < self.n_slots
-        assert self._in_use[slot], f"slot {slot} released while free"
-        self._in_use[slot] = False
-        self._free.append(slot)
+    def release(self, lane: int) -> List[int]:
+        """Return the lane and reclaim exactly its pages."""
+        assert 0 <= lane < self.n_lanes
+        assert lane in self._pages_of, f"lane {lane} released while free"
+        pages = self._pages_of.pop(lane)
+        self._free_pages.extend(pages)
+        self._free_lanes.append(lane)
+        self.page_table[lane] = self.sink
+        return pages
 
     def check_invariants(self) -> None:
-        """Free list and in-use flags partition range(n_slots) exactly."""
-        free = set(self._free)
-        assert len(free) == len(self._free), "duplicate slot in free list"
-        for s in range(self.n_slots):
-            assert (s in free) != self._in_use[s], (
-                f"slot {s}: free={s in free} in_use={self._in_use[s]}")
+        """Free + mapped pages partition range(n_pages); no double-maps;
+        page tables mirror the allocator; same for lanes."""
+        free = set(self._free_pages)
+        assert len(free) == len(self._free_pages), "dup page in free list"
+        mapped: set = set()
+        for lane, pages in self._pages_of.items():
+            ps = set(pages)
+            assert len(ps) == len(pages), f"lane {lane} maps a page twice"
+            assert not (mapped & ps), "page mapped by two lanes"
+            mapped |= ps
+            row = self.page_table[lane]
+            assert list(row[:len(pages)]) == pages, "page table out of sync"
+            assert (row[len(pages):] == self.sink).all()
+        assert free | mapped == set(range(self.n_pages))
+        assert not (free & mapped)
+        free_lanes = set(self._free_lanes)
+        assert len(free_lanes) == len(self._free_lanes), "dup free lane"
+        assert free_lanes | set(self._pages_of) == set(range(self.n_lanes))
+        assert not (free_lanes & set(self._pages_of))
+        for lane in free_lanes:
+            assert (self.page_table[lane] == self.sink).all(), (
+                f"free lane {lane} still holds page mappings")
 
     # -- device cache ----------------------------------------------------
 

@@ -2,13 +2,18 @@
 
 One engine iteration (``Engine.step``) is: admit → decode → select → retire.
 
-  admit   — pop FIFO'd requests into free KV slots (``SlotPool.alloc``) and
-            prefill each prompt into its slot (``make_prefill_into_slot``);
-            new requests join mid-flight, no draining of the running batch.
-  decode  — ONE jitted ``make_slot_decode`` call for the whole pool: (B, 1)
-            in-flight tokens, (B,) per-slot ``cache_pos``. Free slots ride
-            along as masked garbage (their compute is the price of a static
-            batch shape; their writes are dead by construction).
+  admit   — pop FIFO'd requests into free decode lanes + freshly-allocated
+            KV pages (``PagedPool.alloc``) and prefill ALL newly-admitted
+            prompts in one padded jitted call (``make_batched_prefill``,
+            row- and length-bucketed to powers of two so recompiles stay
+            bounded); new requests join mid-flight, no draining of the
+            running batch.
+  decode  — ONE jitted ``make_paged_decode`` call for the whole pool:
+            (B, 1) in-flight tokens, (B,) per-lane ``cache_pos``, and the
+            (B, max_pages) page table mapping each lane's logical pages
+            onto the shared arena. Free lanes ride along as masked garbage
+            (their compute is the price of a static batch shape; their
+            writes land in the sink page by construction).
   select  — next-token choice from the final hiddens. Dense path: full
             Eq. 5 debiased scores + argmax (O(C)). Beam path: the prefix-
             keyed ``CandidateCache`` is consulted per slot; on an all-hit
@@ -16,13 +21,13 @@ One engine iteration (``Engine.step``) is: admit → decode → select → retir
             the cached candidate sets go straight to re-scoring
             (O(beam·K) gather-and-dot, optionally the gather_scores Pallas
             kernel or mesh-sharded ``sharded_candidate_scores``).
-  retire  — per-slot EOS / max-new-tokens / max-len checks; finished
-            requests release their slot the same step, making room for the
-            next admission.
+  retire  — per-lane EOS / max-new-tokens / max-len checks; finished
+            requests release their lane AND their pages the same step
+            (page reclamation), making room for the next admission.
 
-Request lifecycle: QUEUED → RUNNING(slot) → FINISHED. The caller drives the
-loop (``step()`` / ``run()``) and reads results incrementally through the
-streaming ``ResultStream`` handle returned by ``submit``.
+Request lifecycle: QUEUED → RUNNING(lane, pages) → FINISHED. The caller
+drives the loop (``step()`` / ``run()``) and reads results incrementally
+through the streaming ``ResultStream`` handle returned by ``submit``.
 
 Determinism: greedy decode has no RNG, admission is FIFO, and the per-slot
 math is row-independent, so a request's output depends only on its prompt
@@ -48,10 +53,10 @@ from repro.core.heads import HeadConfig, HeadParams
 from repro.models import lm_head
 from repro.models.config import ModelConfig
 from repro.models import transformer
-from repro.serve.cache_pool import SlotPool
+from repro.serve.cache_pool import PagedPool
 from repro.serve.candidate_cache import CandidateCache
-from repro.train.step import (make_prefill, make_prefill_into_slot,
-                              make_serve_step, make_slot_decode)
+from repro.train.step import (make_batched_prefill, make_paged_decode,
+                              make_prefill, make_serve_step)
 
 
 _LOCKSTEP_FNS: Dict[Any, Any] = {}
@@ -97,8 +102,19 @@ def lockstep_decode(cfg: ModelConfig, hcfg: HeadConfig, params, head_state,
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Engine knobs (static: they shape the compiled step functions)."""
-    n_slots: int = 8             # concurrent decode lanes (KV pool rows)
-    max_len: int = 256           # per-slot KV capacity
+    n_slots: int = 8             # concurrent decode lanes
+    max_len: int = 256           # per-request KV capacity (prompt + new)
+    page_len: int = 0            # KV page size; 0 = max_len (one page per
+    #                              request: the monolithic-equivalent
+    #                              geometry, full per-request reservation)
+    n_pages: int = 0             # arena capacity; 0 = n_slots * pages-per-
+    #                              max_len-request (byte-equivalent to the
+    #                              old one-buffer-per-slot pool). Undersize
+    #                              it (mixed-length traffic) to hold more
+    #                              lanes in the same device bytes.
+    batched_prefill: bool = True  # one padded prefill per admission round;
+    #                               False = one call per request (same
+    #                               bytes out — oracle-tested)
     beam: int = 0                # 0 = dense O(C) scoring; >0 = tree beam
     use_kernel: bool = False     # gather_scores Pallas kernel for scoring
     mesh: Any = None             # route scoring via sharded_candidate_scores
@@ -164,21 +180,32 @@ class Engine:
         self.params = params
         self.head_state = head_state
         self.scfg = serve_cfg
-        self.pool = SlotPool(cfg, serve_cfg.n_slots, serve_cfg.max_len,
-                             dtype=serve_cfg.cache_dtype)
+        page_len = serve_cfg.page_len or serve_cfg.max_len
+        max_pages = -(-serve_cfg.max_len // page_len)
+        n_pages = serve_cfg.n_pages or serve_cfg.n_slots * max_pages
+        if cfg.block == "ssm":
+            # Pure-SSM: there is no K/V arena — pages would back zero
+            # device bytes, so they must never gate admission. Pin one
+            # nominal page per lane; lanes alone bound concurrency.
+            page_len, n_pages = serve_cfg.max_len, serve_cfg.n_slots
+        self.pool = PagedPool(cfg, serve_cfg.n_slots, n_pages, page_len,
+                              serve_cfg.max_len,
+                              dtype=serve_cfg.cache_dtype)
         if serve_cfg.mesh is not None:
-            # Mesh serving: shard the KV pool per the decode policy (seq
-            # over 'model') so each device holds 1/TP of the cache instead
-            # of a full replica next to sharded params. Pool shapes that
-            # the mesh cannot divide (jax 0.4 requires exact divisibility)
-            # stay on default placement — GSPMD reshards inside the step.
-            from repro.parallel.sharding import cache_shardings
+            # Mesh serving: shard the page arena per the decode policy
+            # (page_len over 'model') so each device holds 1/TP of the
+            # cache instead of a full replica next to sharded params.
+            # Shapes the mesh cannot divide (jax 0.4 requires exact
+            # divisibility) stay on default placement — GSPMD reshards
+            # inside the step.
+            from repro.parallel.sharding import paged_cache_shardings
             try:
                 self.pool.cache = jax.device_put(
                     self.pool.cache,
-                    cache_shardings(cfg, serve_cfg.mesh,
-                                    jax.eval_shape(lambda: self.pool.cache),
-                                    serve_cfg.n_slots))
+                    paged_cache_shardings(
+                        cfg, serve_cfg.mesh,
+                        jax.eval_shape(lambda: self.pool.cache),
+                        serve_cfg.n_slots))
             except ValueError:
                 pass
         beam = serve_cfg.beam
@@ -203,15 +230,19 @@ class Engine:
         self.completed_count = 0
         self.decode_steps = 0
         self.descent_skips = 0      # all-hit steps that skipped beam_search
+        self.prefill_calls = 0      # padded batched-prefill launches
         self._occupancy_sum = 0
+        self._page_occupancy_sum = 0
+        self.peak_active = 0
+        self.peak_pages_in_use = 0
 
-        # Jitted step functions. The cache argument is donated so the pool's
-        # device buffers are reused in place step over step.
+        # Jitted step functions. The arena argument is donated so the
+        # pool's device buffers are reused in place step over step.
         self._prefill = jax.jit(
-            make_prefill_into_slot(cfg, serve_cfg.max_len,
-                                   cache_dtype=serve_cfg.cache_dtype),
-            donate_argnums=(2,))
-        self._decode = jax.jit(make_slot_decode(cfg), donate_argnums=(2,))
+            make_batched_prefill(cfg, self.pool.page_len, self.pool.sink,
+                                 cache_dtype=serve_cfg.cache_dtype),
+            donate_argnums=(4,))
+        self._decode = jax.jit(make_paged_decode(cfg), donate_argnums=(2,))
         self._select_dense = jax.jit(self._build_dense_select())
         if beam:
             self._propose = jax.jit(self._build_propose())
@@ -260,6 +291,11 @@ class Engine:
     def submit(self, request: Request) -> ResultStream:
         prompt = np.asarray(request.prompt, np.int32)
         assert prompt.ndim == 1 and prompt.size >= 1, "prompt must be (S,)"
+        if request.max_new_tokens < 1:
+            # The engine always runs at least one decode step; a zero
+            # budget would write at cache_pos == prompt_len + max_new,
+            # one position past the request's page reservation.
+            raise ValueError("max_new_tokens must be >= 1")
         if prompt.size + request.max_new_tokens > self.scfg.max_len:
             raise ValueError(
                 f"prompt ({prompt.size}) + max_new_tokens "
@@ -308,10 +344,39 @@ class Engine:
             if not self.step():
                 raise RuntimeError("engine idle but request not finished")
 
+    def warm_prefill_buckets(self, prompt_lens) -> int:
+        """Compile every (rows, padded-length) batched-prefill shape that
+        admission can hit for prompts drawn from ``prompt_lens`` — the
+        same bucketing ``_flush_prefill`` applies, kept here so benchmark
+        warmups cannot drift from it. The probe rows are zero-length:
+        their scatters route to the sink page / dropped lanes, so nothing
+        real lands in the arena. Returns the number of shapes compiled.
+        """
+        pool = self.pool
+        shapes = sorted({self._prefill_shape(k, int(pl))
+                         for k in range(1, self.scfg.n_slots + 1)
+                         for pl in prompt_lens})
+        for r, s in shapes:
+            _, new_cache = self._prefill(
+                self.params, np.zeros((r, s), np.int32),
+                np.zeros((r,), np.int32),
+                np.full((r,), pool.n_lanes, np.int32), pool.cache,
+                np.full((r, pool.max_pages), pool.sink, np.int32))
+            pool.swap_cache(new_cache)
+        return len(shapes)
+
     def stats(self) -> dict:
+        pool = self.pool
+        # Internal fragmentation: the tail of each active request's last
+        # page holds positions it has not reached (and with upfront
+        # reservation, whole unreached pages). 0 = every mapped byte
+        # corresponds to a written position.
+        mapped_pos = pool.num_mapped_pages * pool.page_len
+        used_pos = sum(st.cache_pos for st in self._active.values())
         out = {
             "completed": self.completed_count,
             "decode_steps": self.decode_steps,
+            "prefill_calls": self.prefill_calls,
             "descent_skips": self.descent_skips,
             # The honest amortization metric: the fraction of decode steps
             # whose tree descent was actually skipped (a partial-hit step
@@ -321,6 +386,19 @@ class Engine:
             "mean_occupancy": (self._occupancy_sum / self.decode_steps
                                if self.decode_steps else 0.0),
             "n_slots": self.scfg.n_slots,
+            "peak_active": self.peak_active,
+            # -- paged-pool memory accounting --
+            "n_pages": pool.n_pages,
+            "page_len": pool.page_len,
+            "pages_in_use": pool.num_mapped_pages,
+            "peak_pages_in_use": self.peak_pages_in_use,
+            "page_occupancy": pool.num_mapped_pages / pool.n_pages,
+            "mean_page_occupancy": (
+                self._page_occupancy_sum / (self.decode_steps
+                                            * pool.n_pages)
+                if self.decode_steps else 0.0),
+            "internal_fragmentation": (1.0 - used_pos / mapped_pos
+                                       if mapped_pos else 0.0),
         }
         if self.candidate_cache is not None:
             out["candidate_cache"] = self.candidate_cache.stats()
@@ -329,29 +407,108 @@ class Engine:
     # -- scheduler internals --------------------------------------------
 
     def _admit(self) -> None:
-        """FIFO admission into free slots; prefill each admitted prompt.
+        """FIFO admission into free lanes + pages; prefill the admitted
+        prompts in one padded batched call (or one call per request with
+        ``batched_prefill=False`` — same bytes out, oracle-tested).
 
         Head-of-line order is preserved unconditionally (a request is never
-        skipped in favour of a later one) — the fairness property the tests
-        pin down.
+        skipped in favour of a later one, even when a later, smaller
+        request would fit the remaining pages) — the fairness property the
+        tests pin down.
         """
-        while self._queue and self.pool.num_free:
+        batch: List[ResultStream] = []
+        while self._queue:
+            head = self._queue[0]
+            need = self.pool.pages_needed(
+                head.request.prompt.size + head.request.max_new_tokens)
+            if not self.pool.can_admit(need):
+                break
             handle = self._queue.popleft()
-            slot = self.pool.alloc()
-            assert slot is not None
+            lane, _pages = self.pool.alloc(need)
             prompt = handle.request.prompt
-            h, new_cache = self._prefill(self.params, prompt[None, :],
-                                         self.pool.cache, slot)
-            del h   # first output token comes from the decode step below,
-            #         matching the lock-step path token-for-token
-            self.pool.swap_cache(new_cache)
-            handle.slot = slot
+            handle.slot = lane
             handle.cache_pos = int(prompt.size)
             handle.next_input = int(prompt[-1])
             handle.history = [int(t) for t in prompt]
-            handle.admitted_at = time.perf_counter()
-            self.admission_order.append(handle.request_id)
-            self._active[slot] = handle
+            batch.append(handle)
+            if not self.scfg.batched_prefill:
+                self._prefill_batch([handle])
+                batch.clear()
+        if batch:
+            self._prefill_batch(batch)
+        self.peak_active = max(self.peak_active, len(self._active))
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pool.num_mapped_pages)
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Next power of two >= n: bounds the distinct (rows, length)
+        shapes the batched prefill compiles for."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    def _prefill_shape(self, n_handles: int, s_max: int):
+        """THE (rows, padded-length) jit shape admission uses for a group
+        of ``n_handles`` prompts up to ``s_max`` long — shared by
+        ``_flush_prefill`` and ``warm_prefill_buckets`` so warmups compile
+        exactly the shapes the engine will launch. Attn prompts pad to a
+        power of two (causality keeps padding invisible); ssm/hybrid run
+        at exact length (recurrent state is not padding-invariant)."""
+        n_rows = min(self._bucket(n_handles), self.pool.n_lanes)
+        s_pad = self._bucket(s_max) if self.cfg.block == "attn" else s_max
+        return n_rows, s_pad
+
+    def _prefill_batch(self, handles: List[ResultStream]) -> None:
+        """Batched prefill for ``handles``: rows bucketed to a power of two
+        (padding rows scatter into the sink page / drop their lane writes),
+        prompts right-padded to a power-of-two length (causal attention
+        keeps padding invisible to the real tokens).
+
+        Length padding is only sound for pure-attention models: K/V are
+        position-local, so padded positions land in the sink page and the
+        real rows' bytes are untouched. An SSM branch carries a *recurrent*
+        state out of the prefill, and padding tokens would keep updating it
+        past the prompt — so ssm/hybrid admissions are grouped by exact
+        prompt length (still one call per group, just no length padding).
+        """
+        if self.cfg.block != "attn" and len(handles) > 1:
+            by_len: Dict[int, List[ResultStream]] = {}
+            for h in handles:
+                by_len.setdefault(h.request.prompt.size, []).append(h)
+            for group in by_len.values():
+                self._flush_prefill(group)
+        else:
+            self._flush_prefill(handles)
+        # Admission bookkeeping in SUBMISSION order, not flush order: the
+        # by-length grouping above must not reorder the FIFO audit trail.
+        now = time.perf_counter()
+        for h in handles:
+            h.admitted_at = now
+            self.admission_order.append(h.request_id)
+            self._active[h.slot] = h
+
+    def _flush_prefill(self, handles: List[ResultStream]) -> None:
+        pool = self.pool
+        n_rows, s_pad = self._prefill_shape(
+            len(handles), max(h.request.prompt.size for h in handles))
+        tokens = np.zeros((n_rows, s_pad), np.int32)
+        lengths = np.zeros((n_rows,), np.int32)
+        lanes = np.full((n_rows,), pool.n_lanes, np.int32)  # OOB => drop
+        ptab = np.full((n_rows, pool.max_pages), pool.sink, np.int32)
+        for i, h in enumerate(handles):
+            prompt = h.request.prompt
+            tokens[i, :prompt.size] = prompt
+            lengths[i] = prompt.size
+            lanes[i] = h.slot
+            ptab[i] = pool.page_table[h.slot]
+        hid, new_cache = self._prefill(self.params, tokens, lengths, lanes,
+                                       pool.cache, ptab)
+        del hid   # first output token comes from the decode step,
+        #           matching the lock-step path token-for-token
+        pool.swap_cache(new_cache)
+        self.prefill_calls += 1
 
     def _decode_and_retire(self) -> None:
         n = self.scfg.n_slots
@@ -361,10 +518,11 @@ class Engine:
             token[slot, 0] = st.next_input
             pos[slot] = st.cache_pos
         h, new_cache = self._decode(self.params, token, self.pool.cache,
-                                    pos)
+                                    pos, self.pool.page_table)
         self.pool.swap_cache(new_cache)
         self.decode_steps += 1
         self._occupancy_sum += len(self._active)
+        self._page_occupancy_sum += self.pool.num_mapped_pages
 
         next_tokens = self._select(h)
 

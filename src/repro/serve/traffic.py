@@ -2,8 +2,11 @@
 
 Models the ROADMAP's "heavy traffic from millions of users" shape at bench
 scale: requests arrive as a Poisson process (exponential inter-arrival
-gaps at ``rate`` req/s), prompts are random token strings of a fixed
-length (one length bucket keeps the prefill jit cache to a single entry),
+gaps at ``rate`` req/s), prompts are random token strings — a fixed
+length by default (one length bucket, one prefill jit entry), or mixed
+lengths via ``prompt_len_choices``/``gen_tokens_choices`` (the skewed
+shape the paged KV pool packs; each distinct length adds a prefill
+bucket, so warm them via ``Engine.warm_prefill_buckets`` before timing) —
 and a configurable fraction of requests reuse a small set of shared
 prompts — the repeated-prefix workload the candidate cache exists for
 (shared system prompts / common query heads in production).
@@ -32,6 +35,13 @@ class TrafficConfig:
     rate: float = 50.0            # offered load, requests/second
     prompt_len: int = 8
     gen_tokens: int = 8           # max_new_tokens per request
+    # Mixed-length traffic (the skewed shape the paged KV pool exists
+    # for): when set, each non-shared request draws its prompt length /
+    # token budget uniformly from these choices instead of the scalars
+    # above. Shared prompts keep the scalar prompt_len so repeats stay
+    # exact repeats.
+    prompt_len_choices: Optional[Tuple[int, ...]] = None
+    gen_tokens_choices: Optional[Tuple[int, ...]] = None
     vocab_size: int = 1024
     repeat_frac: float = 0.0      # fraction drawing from shared prompts
     n_shared_prompts: int = 1
@@ -46,14 +56,22 @@ def make_workload(tcfg: TrafficConfig) -> List[Tuple[float, Request]]:
     arrivals = np.cumsum(gaps) - gaps[0]         # first request at t=0
     shared = rng.integers(0, tcfg.vocab_size,
                           (max(1, tcfg.n_shared_prompts), tcfg.prompt_len))
+
+    def pick(choices, default):
+        if choices is None:
+            return default
+        return int(choices[rng.integers(0, len(choices))])
+
     out = []
     for t in arrivals:
+        gen = pick(tcfg.gen_tokens_choices, tcfg.gen_tokens)
         if rng.random() < tcfg.repeat_frac:
             prompt = shared[rng.integers(0, len(shared))]
         else:
-            prompt = rng.integers(0, tcfg.vocab_size, tcfg.prompt_len)
+            pl = pick(tcfg.prompt_len_choices, tcfg.prompt_len)
+            prompt = rng.integers(0, tcfg.vocab_size, pl)
         out.append((float(t), Request(prompt=np.asarray(prompt, np.int32),
-                                      max_new_tokens=tcfg.gen_tokens,
+                                      max_new_tokens=gen,
                                       eos_id=tcfg.eos_id)))
     return out
 

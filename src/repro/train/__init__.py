@@ -1,11 +1,11 @@
 from repro.train.loop import LoopConfig, Preemption, StragglerMonitor, run_loop
 from repro.train.state import TrainState
-from repro.train.step import (init_train_state, make_eval_step,
-                              make_prefill, make_prefill_into_slot,
-                              make_serve_step, make_slot_decode,
+from repro.train.step import (init_train_state, make_batched_prefill,
+                              make_eval_step, make_paged_decode,
+                              make_prefill, make_serve_step,
                               make_train_step)
 
 __all__ = ["LoopConfig", "Preemption", "StragglerMonitor", "run_loop",
-           "TrainState", "init_train_state", "make_eval_step",
-           "make_prefill", "make_prefill_into_slot", "make_serve_step",
-           "make_slot_decode", "make_train_step"]
+           "TrainState", "init_train_state", "make_batched_prefill",
+           "make_eval_step", "make_paged_decode", "make_prefill",
+           "make_serve_step", "make_train_step"]

@@ -136,53 +136,84 @@ def make_prefill(cfg: ModelConfig):
     return prefill
 
 
-def make_prefill_into_slot(cfg: ModelConfig, max_len: int,
-                           cache_dtype=jnp.bfloat16):
-    """Prefill one request into one slot of a pooled cache (repro.serve).
+def make_batched_prefill(cfg: ModelConfig, page_len: int, sink_page: int,
+                         cache_dtype=jnp.bfloat16):
+    """Prefill a *batch* of newly-admitted requests into their pages
+    (repro.serve). Generalizes the old one-request-per-call
+    ``make_prefill_into_slot``: every request admitted in an engine
+    iteration runs through ONE padded forward instead of N sequential
+    single-row calls.
 
-    Returns ``prefill_into_slot(params, tokens, pool_cache, slot)`` →
-    ``(h, pool_cache)`` where ``tokens`` is a single prompt (1, S), the
-    forward runs against a fresh single-row cache (identical math to
-    :func:`make_prefill` on a batch row), and the resulting cache leaves
-    are scattered into batch index ``slot`` of the pool. ``slot`` is a
-    traced scalar, so one compiled function serves every slot; distinct
-    prompt *lengths* still retrace (shape-keyed jit cache — the engine's
-    admission path buckets lengths if that matters).
+    Returns ``batched_prefill(params, tokens, lengths, lanes, arena,
+    page_tables)`` → ``(h, arena)``:
+
+    - ``tokens`` (N, S): right-padded prompts. Padding is invisible to the
+      real tokens (causal attention never looks forward), so each row's
+      K/V and hiddens are bit-identical to an unpadded single-request
+      prefill — the property the batched-vs-sequential oracle pins.
+    - ``lengths`` (N,): true prompt lengths; positions at or beyond a
+      row's length scatter into ``sink_page`` (the allocator's garbage
+      page) instead of a mapped page.
+    - ``lanes`` (N,): decode-lane index per row, for the lane-indexed SSM
+      conv/state leaves. Padding rows carry an out-of-range lane and are
+      dropped by the scatter.
+    - ``page_tables`` (N, max_pages): each row's logical→physical page
+      map; logical position p lands at ``(page_tables[n, p // page_len],
+      p % page_len)``.
+
+    The forward runs against a fresh contiguous (N, S) cache — identical
+    math to :func:`make_prefill` — and only the final scatter re-addresses
+    the resulting K/V into the paged arena. N and S are shape-traced, so
+    the engine buckets both (rows to a power of two, lengths to a power of
+    two) to bound recompiles.
     """
 
-    def prefill_into_slot(params, tokens, pool_cache, slot):
-        fresh = transformer.init_cache(cfg, 1, max_len, dtype=cache_dtype)
+    def batched_prefill(params, tokens, lengths, lanes, arena, page_tables):
+        n, s = tokens.shape
+        fresh = transformer.init_cache(cfg, n, s, dtype=cache_dtype)
         h, new_cache, _ = transformer.forward(
             params, cfg, tokens, cache=fresh, cache_pos=jnp.int32(0))
-        pool_cache = jax.tree.map(
-            lambda pool, one: pool.at[:, slot].set(
-                one[:, 0].astype(pool.dtype)),
-            pool_cache, new_cache)
-        return h, pool_cache
+        pos = jnp.arange(s, dtype=jnp.int32)
+        pid = page_tables[:, pos // page_len]               # (N, S)
+        pid = jnp.where(pos[None, :] < lengths[:, None], pid, sink_page)
+        off = jnp.broadcast_to((pos % page_len)[None], (n, s))
+        out = dict(arena)
+        for key in ("k", "v"):
+            if key in arena:      # (L, P, page_len, KV, hd) ← (L, N, S, ..)
+                out[key] = arena[key].at[:, pid, off].set(
+                    new_cache[key].astype(arena[key].dtype))
+        for key in ("conv", "state"):
+            if key in arena:      # lane-indexed; padding lanes drop
+                out[key] = arena[key].at[:, lanes].set(
+                    new_cache[key].astype(arena[key].dtype), mode="drop")
+        return h, out
 
-    return prefill_into_slot
+    return batched_prefill
 
 
-def make_slot_decode(cfg: ModelConfig):
-    """Masked decode step over a slot pool: per-row ``cache_pos``.
+def make_paged_decode(cfg: ModelConfig):
+    """Masked decode step over a paged pool: per-lane ``cache_pos`` and
+    page tables.
 
-    Returns ``slot_decode(params, token, cache, cache_pos)`` →
-    ``(h_last (B, d), new_cache)``. ``token`` is (B, 1) — one in-flight
-    token per KV slot — and ``cache_pos`` is a (B,) int32 vector, each
-    slot at its own depth (admitted at different times). Rows holding
-    retired/free slots decode garbage harmlessly: their writes land in a
-    region the next admission's prefill overwrites, and every consumer of
-    ``h_last`` masks them out host-side. Head scoring is deliberately NOT
-    fused here — the serve engine owns it so the candidate cache can skip
-    the tree descent per step.
+    Returns ``paged_decode(params, token, arena, cache_pos, page_table)``
+    → ``(h_last (B, d), arena)``. ``token`` is (B, 1) — one in-flight
+    token per decode lane — ``cache_pos`` is a (B,) int32 vector (each
+    lane at its own depth), and ``page_table`` (B, max_pages) maps each
+    lane's logical pages onto the shared arena. Free lanes ride along as
+    garbage: their page-table rows point at the sink page, so their
+    writes land in the garbage page and every consumer of ``h_last``
+    masks them out host-side. Head scoring is deliberately NOT fused here
+    — the serve engine owns it so the candidate cache can skip the tree
+    descent per step.
     """
 
-    def slot_decode(params, token, cache, cache_pos):
-        h, new_cache, _ = transformer.forward(
-            params, cfg, token, cache=cache, cache_pos=cache_pos)
-        return h[:, -1], new_cache
+    def paged_decode(params, token, arena, cache_pos, page_table):
+        h, new_arena, _ = transformer.forward(
+            params, cfg, token, cache=arena, cache_pos=cache_pos,
+            page_table=page_table)
+        return h[:, -1], new_arena
 
-    return slot_decode
+    return paged_decode
 
 
 def init_train_state(rng, cfg: ModelConfig, opt_cfg: OptimizerConfig,
