@@ -8,12 +8,16 @@
 #   make bench-engine - continuous-batching engine under Poisson traffic
 #                       (writes BENCH_engine.json: throughput, p50/p99,
 #                       paged-vs-monolithic concurrency at equal bytes)
+#   make bench-tree-fit - generator fitting at scale: sequential oracle vs
+#                       level-parallel vs warm-start refresh + held-out
+#                       log-likelihood (writes BENCH_tree_fit.json)
 #   make bench        - the full benchmark harness CSV
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-serve bench-serve bench-engine bench
+.PHONY: test test-fast test-serve bench-serve bench-engine \
+        bench-tree-fit bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -29,6 +33,9 @@ bench-serve:
 
 bench-engine:
 	$(PYTHON) -m benchmarks.bench_engine
+
+bench-tree-fit:
+	$(PYTHON) -m benchmarks.bench_tree_fit
 
 bench:
 	$(PYTHON) -m benchmarks.run

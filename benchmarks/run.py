@@ -8,6 +8,9 @@
   bench_kernels      — Pallas kernels vs jnp refs      (interpret mode)
   bench_serve        — per-token serving cost vs C     (dense vs beam path)
                        + fitted-vs-random generator beam/dense agreement
+  bench_tree_fit     — generator fitting at scale      (sequential oracle
+                       vs level-parallel vs warm refresh; BENCH_tree_fit
+                       .json via `make bench-tree-fit`)
   bench_engine       — continuous-batching engine under Poisson traffic
                        (throughput + p50/p99; writes BENCH_engine.json)
   bench_roofline     — dry-run roofline readout        (§Roofline artifacts)
@@ -26,7 +29,7 @@ import sys
 def main() -> None:
     args = set(sys.argv[1:])
     default = {"heads", "tree", "snr", "kernels", "serve", "engine",
-               "roofline"}
+               "roofline", "tree_fit"}
     wanted = default if not args else (
         default | {"convergence"} if "all" in args else args)
 
@@ -53,6 +56,11 @@ def main() -> None:
         # (from `make bench-engine`) is not clobbered.
         bench_engine.run(rows, c_values=(1024, 32768), n_requests=16,
                          write_json=False)
+    if "tree_fit" in wanted:
+        from benchmarks import bench_tree_fit
+        # Reduced sweep; no JSON so the tracked full-sweep
+        # BENCH_tree_fit.json (from `make bench-tree-fit`) survives.
+        bench_tree_fit.run(rows, c_values=(1024, 4096), write_json=False)
     if "convergence" in wanted:
         from benchmarks import bench_convergence
         bench_convergence.run(rows)

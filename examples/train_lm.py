@@ -13,9 +13,20 @@ Profiles:
 
 Run:  PYTHONPATH=src python examples/train_lm.py [--profile demo|100m]
       [--head adversarial_ns|softmax|uniform_ns|...]
+      [--gen-refresh N] [--gen-async] [--gen-swap-delay D]
+
+The generator-refresh demo (the loop's "Step 1" end-to-end): with
+``--gen-refresh N`` the tree is refitted every N steps from a frozen
+snapshot — warm-started from the previous tree after the first fit
+(watch the printed fit times collapse once the structure is reused). In
+blocking mode the whole loop stalls for each fit; with ``--gen-async``
+the fit runs in a background thread while training keeps stepping on the
+stale generator, and the new tree is swapped in at the recorded step
+(submit + D) — same schedule, no stall, bit-exact under resume.
 """
 import argparse
 import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +38,7 @@ from repro.models.config import ModelConfig
 from repro.optim import OptimizerConfig
 from repro.train import (LoopConfig, init_train_state, make_eval_step,
                          make_train_step, run_loop)
-from repro.train.generator_fit import fit_lm_generator
+from repro.train.generator_fit import make_gen_fit_fn
 
 PROFILES = {
     "demo": dict(num_layers=2, d_model=128, d_ff=384, vocab_size=2048,
@@ -44,6 +55,13 @@ def main():
     ap.add_argument("--profile", default="demo", choices=PROFILES)
     ap.add_argument("--head", default="adversarial_ns")
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--gen-refresh", type=int, default=None,
+                    help="refresh the generator every N steps "
+                         "(default: steps // 3)")
+    ap.add_argument("--gen-async", action="store_true",
+                    help="non-blocking refresh: fit in a background "
+                         "thread, swap at the recorded step")
+    ap.add_argument("--gen-swap-delay", type=int, default=8)
     args = ap.parse_args()
     p = PROFILES[args.profile]
     steps = args.steps or p["steps"]
@@ -66,27 +84,44 @@ def main():
     batch_fn = lambda s: {k: jnp.asarray(v)                # noqa: E731
                           for k, v in make(s).items()}
 
+    # Higher lambda_n than the paper's 0.1: LM hidden states drift, so a
+    # conservative (better-calibrated) generator keeps the Eq. 5
+    # correction bounded (DESIGN.md §7). First fit is full; later
+    # refreshes warm-start from the in-state tree (DESIGN.md §3).
+    base_fit = make_gen_fit_fn(
+        cfg, batch_fn, kind=args.head, fit_config=FitConfig(reg=1.0),
+        max_tokens=16_384, n_batches=32)
+    fit_log = []
+
     def gen_fit(st):
-        print("  [generator] fitting tree on frozen snapshot ...")
-        return fit_lm_generator(
-            st.params, cfg, (make(10_000 + i) for i in range(32)),
-            kind=args.head, fit_config=FitConfig(reg=1.0),
-            max_tokens=16_384)   # higher lambda_n than the paper's 0.1:
-        # LM hidden states drift, so a conservative (better-calibrated)
-        # generator keeps the Eq. 5 correction bounded (DESIGN.md §7).
+        t0 = time.perf_counter()
+        head = base_fit(st)
+        fit_log.append(time.perf_counter() - t0)
+        return head
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
         # gen_refresh re-fits the tree periodically: LM hidden states DRIFT
         # during training (unlike the paper's fixed features), and a stale
         # generator degrades both negatives and the Eq. 5 correction.
+        refresh = args.gen_refresh or max(steps // 3, 1)
+        warmup = min(p["gen_warmup"], max(steps // 4, 1))
+        # Async needs the swap to precede the next submit; with a 1-step
+        # refresh period there is no room, so fall back to blocking.
+        use_async = args.gen_async and refresh > 1
         loop = LoopConfig(total_steps=steps, checkpoint_every=max(steps //
                                                                   4, 1),
                           checkpoint_dir=ckpt_dir,
-                          gen_warmup_steps=p["gen_warmup"],
-                          gen_refresh_steps=max(steps // 3, 1))
+                          gen_warmup_steps=warmup,
+                          gen_refresh_steps=refresh,
+                          gen_async=use_async,
+                          gen_swap_delay=(min(args.gen_swap_delay,
+                                              refresh - 1)
+                                          if use_async else 0))
         gen_cb = gen_fit if args.head in ("adversarial_ns", "nce",
                                           "sampled_softmax",
                                           "freq_ns") else None
+        mode = "async" if use_async else "blocking"
+        print(f"generator refresh: every {refresh} steps ({mode})")
         state, hist = run_loop(
             state, train_step, batch_fn, loop, jax.random.PRNGKey(1),
             gen_fit_fn=gen_cb,
@@ -94,6 +129,13 @@ def main():
                 f"  step {s:4d} loss={m['loss']:.4f} "
                 f"({m['step_time']*1e3:.0f} ms)"))
         print(f"stragglers flagged: {hist['stragglers']}")
+        if fit_log:
+            print(f"generator fits: {len(fit_log)} "
+                  f"(first {fit_log[0]*1e3:.0f} ms full, refresh "
+                  f"{[f'{t*1e3:.0f}' for t in fit_log[1:]]} ms warm)")
+        for key in ("gen_submit_steps", "gen_swap_steps"):
+            if key in hist:
+                print(f"{key}: {hist[key]}")
 
         ev = eval_step(state, batch_fn(99_999))
         print(f"eval (debiased): loglik={float(ev['eval_loglik']):.4f} "

@@ -36,13 +36,20 @@ def _tree_paths(tree: Any):
 
 
 def save_checkpoint(directory: str, step: int, tree: Any,
-                    keep: int = 3) -> str:
-    """Atomically write `tree` as checkpoint `step`. Returns the path."""
+                    keep: int = 3, prefix: str = "step_",
+                    update_latest: bool = True) -> str:
+    """Atomically write `tree` as checkpoint `step`. Returns the path.
+
+    A non-default ``prefix`` (with ``update_latest=False``) writes a side
+    artifact that auto-resume and GC never look at — the generator-refresh
+    snapshots (``gensnap_<step>``) use this so an in-flight fit can be
+    replayed after a restart without perturbing the LATEST pointer.
+    """
     os.makedirs(directory, exist_ok=True)
     leaves, treedef = _tree_paths(tree)
     host_leaves = jax.device_get(leaves)
 
-    final = os.path.join(directory, f"step_{step:08d}")
+    final = os.path.join(directory, f"{prefix}{step:08d}")
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
     try:
         meta = {"step": step, "treedef": str(treedef),
@@ -62,14 +69,16 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
-    # Atomic LATEST pointer.
-    ptr_tmp = os.path.join(directory, ".LATEST.tmp")
-    with open(ptr_tmp, "w") as f:
-        f.write(os.path.basename(final))
-        f.flush()
-        os.fsync(f.fileno())
-    os.rename(ptr_tmp, os.path.join(directory, LATEST))
-    _gc(directory, keep)
+    if update_latest:
+        # Atomic LATEST pointer.
+        ptr_tmp = os.path.join(directory, ".LATEST.tmp")
+        with open(ptr_tmp, "w") as f:
+            f.write(os.path.basename(final))
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(ptr_tmp, os.path.join(directory, LATEST))
+    if keep > 0:
+        _gc(directory, keep)
     return final
 
 
@@ -94,7 +103,8 @@ def latest_step(directory: str) -> Optional[int]:
 
 def restore_checkpoint(directory: str, tree_like: Any,
                        step: Optional[int] = None,
-                       shardings: Any = None) -> Tuple[Any, int]:
+                       shardings: Any = None,
+                       prefix: str = "step_") -> Tuple[Any, int]:
     """Restore into the structure of `tree_like`. If `shardings` (a pytree
     of jax.sharding.Sharding matching tree_like) is given, leaves are
     device_put with those shardings — this is how a checkpoint moves onto a
@@ -103,7 +113,7 @@ def restore_checkpoint(directory: str, tree_like: Any,
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
-    path = os.path.join(directory, f"step_{step:08d}")
+    path = os.path.join(directory, f"{prefix}{step:08d}")
     with open(os.path.join(path, MANIFEST)) as f:
         meta = json.load(f)
     leaves_like, treedef = jax.tree.flatten(tree_like)

@@ -265,3 +265,26 @@ def prob_mass_real(tree: Tree, x: jax.Array) -> jax.Array:
     """Total probability mass on real (non-padding) labels; ~1.0 by
     construction. Test/diagnostic helper."""
     return jnp.exp(jax.nn.logsumexp(log_prob_all(tree, x), axis=-1))
+
+
+def validate(tree: Tree, num_labels: int) -> Tree:
+    """Structural invariants: array shapes and the leaf↔label bijection.
+
+    Cheap O(C) host-side checks run by the :mod:`repro.genfit` assemblers
+    after packing/splicing (a mis-spliced subtree corrupts the permutation
+    long before it shows up in likelihoods). Returns the tree for
+    chaining.
+    """
+    import numpy as np
+
+    c_pad = 1 << tree.depth
+    assert tree.w.shape == (c_pad - 1, tree.feature_dim), tree.w.shape
+    assert tree.b.shape == (c_pad - 1,), tree.b.shape
+    assert tree.label_to_leaf.shape == (num_labels,)
+    assert tree.leaf_to_label.shape == (c_pad,)
+    l2l = np.asarray(tree.label_to_leaf)
+    assert len(np.unique(l2l)) == num_labels, "label->leaf not injective"
+    roundtrip = np.asarray(tree.leaf_to_label)[l2l]
+    assert (roundtrip == np.arange(num_labels)).all(), (
+        "leaf_to_label does not invert label_to_leaf")
+    return tree

@@ -14,6 +14,12 @@ The two steps alternate until the partition is stable (a local optimum),
 then recurse into the children. Runs offline in numpy; the result is packed
 into a jax :class:`~repro.core.tree.Tree`.
 
+This per-node recursion is the **reference oracle**: O(C) sequential phases,
+float64, maximally simple. Production fitting lives in
+:mod:`repro.genfit` — a level-synchronous batched rewrite with O(log C)
+sequential phases whose held-out likelihood the property suite pins against
+this implementation (plus warm-start refresh and sharded subtree fits).
+
 Supports per-example ``sample_weight`` so aggregated data (e.g. bigram counts
 for an LM generator, see DESIGN.md §2) fits without expansion.
 """
@@ -34,6 +40,8 @@ class FitConfig:
     max_newton: int = 25
     newton_tol: float = 1e-8
     seed: int = 0
+    use_kernel: bool = False      # route segment reductions through Pallas
+                                  # (repro.genfit level solver only)
 
 
 def _log_sigmoid(z: np.ndarray) -> np.ndarray:

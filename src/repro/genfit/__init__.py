@@ -1,0 +1,20 @@
+"""repro.genfit — scalable generator fitting (DESIGN.md §3).
+
+The training-side subsystem around the paper's §3 generator: level-parallel
+batched fitting (O(log C) sequential phases; :mod:`~repro.genfit.levels`),
+warm-start/drift-triggered incremental refreshes
+(:mod:`~repro.genfit.incremental`), subtree-sharded fan-out
+(:mod:`~repro.genfit.sharded`), and the non-blocking refresh harness used
+by the training loop (:mod:`~repro.genfit.refresh`).
+:func:`repro.core.tree_fit.fit_tree` remains the sequential reference
+oracle that the property suite pins these against.
+"""
+from repro.genfit.incremental import (label_counts, refit_params,
+                                      refresh_tree, subtree_drift)
+from repro.genfit.levels import fit_tree_levelwise
+from repro.genfit.refresh import AsyncRefresher
+from repro.genfit.sharded import fit_tree_sharded
+
+__all__ = ["AsyncRefresher", "fit_tree_levelwise", "fit_tree_sharded",
+           "label_counts", "refit_params", "refresh_tree",
+           "subtree_drift"]

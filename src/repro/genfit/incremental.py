@@ -1,0 +1,227 @@
+"""Incremental generator refresh: warm-start refits (DESIGN.md §3).
+
+A mid-training refresh rarely needs to re-derive the tree *structure*: the
+label→leaf assignment encodes which labels are confusable, which drifts
+slowly, while the node parameters (w, b) chase the moving hidden-state
+distribution. :func:`refit_params` therefore keeps the previous tree's
+split assignments and re-solves only the per-node logistic parameters —
+one batched warm-started Newton pass per level, no discrete steps, no
+power-iteration inits — typically converging in 1–3 iterations per level.
+
+:func:`refresh_tree` adds drift awareness on top: it compares the snapshot
+label distribution against the previous fit's (conditioned per subtree at
+``split_depth``) and triggers *subtree-local full refits* — discrete steps
+included — only where the distribution actually moved (total-variation
+distance above ``drift_threshold``), splicing the refitted subtrees into
+the warm-refit tree. Both paths are deterministic functions of (previous
+tree, snapshot data, config), which is what lets the training loop replay
+an async refresh bit-exactly after a checkpoint resume.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import PAD_LOGIT, Tree, padded_size
+from repro.core.tree_fit import FitConfig
+from repro.genfit.levels import (_cfg_key, _prep_data, _seg_sum_fn,
+                                 make_newton_pieces, pack_tree,
+                                 run_newton)
+from repro.genfit.sharded import fan_out_subtrees, splice_subtrees
+
+
+@functools.lru_cache(maxsize=512)
+def _get_refit_pieces(n: int, c_pad: int, k: int, level: int,
+                      cfg_key: Tuple):
+    reg, _, max_newton, newton_tol, use_kernel = cfg_key
+    depth = c_pad.bit_length() - 1
+    shift = depth - level
+    nseg = 1 << level
+    d = k + 1
+    seg2 = _seg_sum_fn(use_kernel)
+    newton_pieces = make_newton_pieces(nseg, d, reg, max_newton,
+                                       newton_tol, seg2)
+    leaves = jnp.arange(c_pad, dtype=jnp.int32)
+    node_of_leaf = leaves >> shift
+    side_of_leaf = ((leaves >> (shift - 1)) & 1).astype(jnp.float32)
+
+    @jax.jit
+    def prep(y, wgt, leaf_of_label, real_leaf):
+        leaf_pt = leaf_of_label[y]
+        seg = leaf_pt >> shift
+        zeta = jnp.where((leaf_pt >> (shift - 1)) & 1 == 1, 1.0,
+                         -1.0).astype(jnp.float32)
+        realf = real_leaf.astype(jnp.float32)
+        right_real = jax.ops.segment_sum(realf * side_of_leaf,
+                                         node_of_leaf, num_segments=nseg)
+        left_real = jax.ops.segment_sum(realf * (1.0 - side_of_leaf),
+                                        node_of_leaf, num_segments=nseg)
+        npts = jax.ops.segment_sum((wgt > 0).astype(jnp.float32), seg,
+                                   num_segments=nseg)
+        # Padding-forced nodes keep their forced decision; nodes with no
+        # data keep their previous parameters (better than a cold zero).
+        frozen = (right_real == 0) | (left_real == 0) | (npts == 0)
+        return dict(seg=seg, zeta=zeta, frozen=frozen,
+                    right_real=right_real, left_real=left_real,
+                    has_real=(right_real + left_real) > 0)
+
+    @jax.jit
+    def finalize(theta, right_real, left_real, has_real):
+        w_lvl, b_lvl = theta[:, :k], theta[:, k]
+        force = (right_real == 0) | ((left_real == 0) & has_real)
+        w_lvl = jnp.where(force[:, None], 0.0, w_lvl)
+        b_lvl = jnp.where(right_real == 0, -PAD_LOGIT, b_lvl)
+        b_lvl = jnp.where((left_real == 0) & has_real, PAD_LOGIT, b_lvl)
+        return jnp.concatenate([w_lvl, b_lvl[:, None]], axis=-1)
+
+    return prep, finalize, newton_pieces
+
+
+def real_leaf_mask(tree: Tree, num_labels: int) -> np.ndarray:
+    """(C_pad,) bool: which leaves hold a real label (padding leaves alias
+    label 0 but fail the round-trip)."""
+    l2l = np.asarray(tree.leaf_to_label, np.int64)
+    return np.asarray(tree.label_to_leaf)[l2l] == np.arange(len(l2l))
+
+
+def perm_from_tree(tree: Tree, num_labels: int) -> np.ndarray:
+    """Recover the slot permutation (perm[leaf] = label id, with distinct
+    padding ids ≥ num_labels on padding leaves)."""
+    c_pad = 1 << tree.depth
+    real = real_leaf_mask(tree, num_labels)
+    perm = np.where(real, np.asarray(tree.leaf_to_label, np.int64), -1)
+    perm[~real] = num_labels + np.arange(int((~real).sum()))
+    return perm
+
+
+def refit_params(tree: Tree, features, labels, num_labels: int,
+                 sample_weight=None,
+                 config: Optional[FitConfig] = None) -> Tree:
+    """Warm-start refit: keep the tree structure, re-solve (w, b).
+
+    One batched Newton pass per level, warm-started from the previous
+    parameters — O(log C) phases with no discrete steps. Nodes without
+    data keep their previous parameters; padding forcing is re-derived
+    from the (unchanged) leaf occupancy.
+    """
+    cfg = config or FitConfig()
+    key = _cfg_key(cfg)
+    x, y, wgt = _prep_data(features, labels, num_labels, sample_weight)
+    depth = tree.depth
+    c_pad = 1 << depth
+    assert c_pad >= padded_size(num_labels)
+    k = x.shape[1]
+    assert k == tree.feature_dim, (k, tree.feature_dim)
+
+    xj = jnp.asarray(x, jnp.float32)
+    xb = jnp.concatenate([xj, jnp.ones((len(x), 1), jnp.float32)], -1)
+    d = k + 1
+    outer = (xb[:, :, None] * xb[:, None, :]).reshape(-1, d * d)
+    yj = jnp.asarray(y, jnp.int32)
+    wj = jnp.asarray(wgt, jnp.float32)
+    l2l = jnp.asarray(tree.label_to_leaf, jnp.int32)
+    real_leaf = jnp.asarray(real_leaf_mask(tree, num_labels))
+
+    w_prev = np.asarray(tree.w)
+    b_prev = np.asarray(tree.b)
+    w_all, b_all = w_prev.copy(), b_prev.copy()
+    _, _, max_newton, _, _ = key
+    for level in range(depth):
+        prep, finalize, newton_pieces = _get_refit_pieces(
+            len(x), c_pad, k, level, key)
+        aux = prep(yj, wj, l2l, real_leaf)
+        n_lvl = 1 << level
+        lo = n_lvl - 1
+        theta = jnp.asarray(
+            np.concatenate([w_prev[lo:lo + n_lvl],
+                            b_prev[lo:lo + n_lvl, None]], axis=-1))
+        theta = run_newton(newton_pieces, theta, aux["frozen"], xb, outer,
+                           aux["zeta"], wj, aux["seg"],
+                           np.asarray(aux["seg"]), max_newton)
+        th = np.asarray(finalize(theta, aux["right_real"],
+                                 aux["left_real"], aux["has_real"]))
+        w_all[lo:lo + n_lvl] = th[:, :k]
+        b_all[lo:lo + n_lvl] = th[:, k]
+    return Tree(w=jnp.asarray(w_all), b=jnp.asarray(b_all),
+                label_to_leaf=tree.label_to_leaf,
+                leaf_to_label=tree.leaf_to_label)
+
+
+def label_counts(labels, num_labels: int, sample_weight=None
+                 ) -> np.ndarray:
+    y = np.asarray(labels).reshape(-1)
+    w = (None if sample_weight is None
+         else np.asarray(sample_weight, np.float64).reshape(-1))
+    return np.bincount(y, weights=w, minlength=num_labels).astype(
+        np.float64)
+
+
+def subtree_drift(prev_counts: np.ndarray, counts: np.ndarray, tree: Tree,
+                  split_depth: int) -> np.ndarray:
+    """Total-variation distance between the *conditional* label
+    distributions of each depth-``split_depth`` subtree, previous fit vs
+    now. Empty-then and empty-now subtrees drift 0; newly populated ones
+    drift 1 (they were never fitted on data)."""
+    depth = tree.depth
+    split_depth = max(0, min(split_depth, depth))
+    leaf = np.asarray(tree.label_to_leaf, np.int64)
+    sub = leaf >> (depth - split_depth)
+    n_sub = 1 << split_depth
+    drifts = np.zeros((n_sub,))
+    for j in range(n_sub):
+        sel = sub == j
+        a, b = prev_counts[sel], counts[sel]
+        sa, sb = a.sum(), b.sum()
+        if sa == 0 and sb == 0:
+            continue
+        if sa == 0 or sb == 0:
+            drifts[j] = 1.0
+            continue
+        drifts[j] = 0.5 * np.abs(a / sa - b / sb).sum()
+    return drifts
+
+
+def refresh_tree(prev_tree: Tree, features, labels, num_labels: int,
+                 sample_weight=None,
+                 config: Optional[FitConfig] = None,
+                 prev_counts: Optional[np.ndarray] = None,
+                 drift_threshold: Optional[float] = None,
+                 split_depth: int = 3,
+                 executor=None) -> Tuple[Tree, np.ndarray]:
+    """Incremental refresh: warm parameter refit everywhere, plus full
+    subtree-local refits where the label distribution drifted.
+
+    Returns ``(tree, counts)``; feed ``counts`` back as ``prev_counts``
+    at the next refresh. With ``drift_threshold=None`` (or no
+    ``prev_counts``) this is a pure parameter refit. Deterministic in its
+    inputs, so an interrupted async refresh can be replayed exactly.
+    """
+    cfg = config or FitConfig()
+    tree = refit_params(prev_tree, features, labels, num_labels,
+                        sample_weight=sample_weight, config=cfg)
+    counts = label_counts(labels, num_labels, sample_weight)
+    if drift_threshold is None or prev_counts is None:
+        return tree, counts
+    depth = tree.depth
+    c_pad = 1 << depth
+    split_depth = max(1, min(split_depth, depth))
+    drifts = subtree_drift(prev_counts, counts, tree, split_depth)
+    drifted = [int(j) for j in np.nonzero(drifts > drift_threshold)[0]]
+    if not drifted:
+        return tree, counts
+    x, y, wgt = _prep_data(features, labels, num_labels, sample_weight)
+    perm = perm_from_tree(tree, num_labels)
+    slot_of_label = np.zeros((c_pad,), np.int64)
+    slot_of_label[perm] = np.arange(c_pad)
+    w_all, b_all = np.asarray(tree.w).copy(), np.asarray(tree.b).copy()
+
+    results = fan_out_subtrees(x, y, wgt, perm, slot_of_label, num_labels,
+                               c_pad, split_depth, drifted, cfg,
+                               executor=executor)
+    w_all, b_all, perm = splice_subtrees(w_all, b_all, perm, results,
+                                         split_depth, c_pad, num_labels)
+    return pack_tree(w_all, b_all, perm, num_labels), counts

@@ -1,0 +1,550 @@
+"""Level-parallel generator-tree fitting (DESIGN.md §3).
+
+The reference fit (:func:`repro.core.tree_fit.fit_tree`) is a host-side
+recursion: one Python-stack Newton solve per node, 2C−1 of them, O(C)
+sequential phases. This module re-derives the same alternating
+discrete/continuous optimization as a **level-synchronous batched sweep**:
+every node at one depth is solved in a single vectorized pass, so fitting
+has O(log C) sequential phases and every phase is a handful of
+segment-summed reductions plus one batched (k+1)×(k+1) Newton solve.
+
+Key formulation choices (all load-bearing):
+
+* **Flat slot space.** The label→leaf permutation under construction is a
+  single ``perm`` array of ``C_pad`` slots; node membership at level ``l``
+  is ``slot >> shift`` with ``shift = depth − l``, so per-level state is
+  dense arrays, never per-node Python objects.
+* **Segment-summed sufficient statistics.** The discrete step's Δ_y scores
+  (Eq. 9), the Newton gradient/Hessian (Eq. 8), and the Armijo objective
+  are all ``segment_sum`` reductions over points keyed by node (or label)
+  id — O(N·k) per level regardless of node count. ``FitConfig.use_kernel``
+  routes the 2-D reductions through the Pallas ``segment_stats`` kernel
+  (:mod:`repro.kernels.segment_scores`).
+* **Balanced split as a rank rule.** Sorting slots by ``(node, −Δ)`` with a
+  stable sort makes "top half goes right, padding sinks left, and padding
+  back-fills the right half when fewer than half the labels are real"
+  all collapse to ``rank_within_node < m/2`` (padding Δ = −inf ties keep
+  slot order). This reproduces the reference partition rule exactly.
+* **Batched Newton with per-node damping.** All nodes of a level share one
+  vectorized damped-Newton iteration built to touch (N,)-sized data as few
+  times as possible: per-point logits are carried across iterations, the
+  whole Armijo halving grid is evaluated from one directional pass, and
+  directions are a matvec against a periodically-refreshed inverse Hessian
+  (hand-rolled batched SPD inverse — per-matrix LAPACK dispatch is the CPU
+  bottleneck at 32k nodes). Per-node adaptivity survives batching: nodes
+  freeze individually on stable (or 2-cycling) partitions, frozen nodes'
+  points are compacted out of later sweeps, intermediate alternations run
+  capped solves on (shallow-level) stride-subsampled points, and one
+  full-precision polish fits the final partition per level.
+
+The jitted pieces are compiled once per (N, C_pad, level-width) and cached;
+the level index itself is static per piece, which keeps each piece small.
+The reference recursion stays the oracle: the property suite pins held-out
+tree log-likelihood parity (tests/test_genfit.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import PAD_LOGIT, Tree, padded_size
+from repro.core.tree_fit import FitConfig
+
+# fp32 Newton cannot hit the reference's fp64 1e-8 step tolerance; clamp so
+# converged nodes actually retire instead of oscillating at machine eps.
+_MIN_TOL_F32 = 1e-5
+
+
+def _cfg_key(cfg: FitConfig) -> Tuple:
+    return (float(cfg.reg), int(cfg.max_alternations), int(cfg.max_newton),
+            max(float(cfg.newton_tol), _MIN_TOL_F32),
+            bool(getattr(cfg, "use_kernel", False)))
+
+
+def _seg_sum_fn(use_kernel: bool):
+    """Segment reduction for 2-D (N, D) statistics; kernel-routable."""
+    if use_kernel:
+        from repro.kernels.ops import segment_stats
+
+        def seg2(vals, seg, num_segments):
+            return segment_stats(vals, seg, num_segments)
+        return seg2
+    return lambda vals, seg, num_segments: jax.ops.segment_sum(
+        vals, seg, num_segments=num_segments)
+
+
+# Refresh the inverted Hessian every this many Newton iterations. The
+# per-node objective is concave, so a direction from *any* SPD matrix is
+# an ascent direction and Armijo backtracking keeps monotone ascent — a
+# stale inverse only trades a few extra (cheap) gradient steps for
+# skipping the (N, d²) Hessian reduction + inversion, the two dominant
+# costs.
+_HESS_EVERY = 5
+# Armijo step grid: t = 2^0 … 2^-9. The reference halves sequentially (up
+# to 40×) and takes the first accepted step; evaluating the whole grid in
+# one fused pass picks the same step whenever it lies within 10 halvings
+# (beyond that the node is in its numerical plateau and retires).
+_LS_GRID = 10
+# Intermediate alternations only need an *improved* theta, not a converged
+# one — the partition is about to be re-sorted anyway. Each level runs
+# capped Newton solves between discrete steps and one full-precision
+# polish on the final partition (see _run_level).
+_ALT_NEWTON = 3
+
+
+def batched_inv_psd(a: jax.Array) -> jax.Array:
+    """Batched SPD inverse for small static d, without per-matrix LAPACK.
+
+    ``jnp.linalg.inv/cholesky`` dispatch one LAPACK call per matrix on
+    CPU (~1.5 s for 32k 17×17 matrices); this unrolled Cholesky →
+    triangular-inverse → Lᵀ⁻¹L⁻¹ runs as ~3·d vectorized ops over the
+    batch and is bandwidth-bound instead.
+    """
+    n, d, _ = a.shape
+    # Cholesky, column by column: chol[:, i, j] = L[i, j].
+    chol = jnp.zeros((n, d, 0), a.dtype)
+    for j in range(d):
+        prior = chol[:, j, :]                                  # (n, j)
+        s = a[:, j, j] - jnp.sum(prior * prior, -1)
+        ljj = jnp.sqrt(jnp.maximum(s, 1e-30))
+        rest = a[:, j + 1:, j]
+        if j:
+            rest = rest - jnp.einsum("nik,nk->ni", chol[:, j + 1:, :],
+                                     prior)
+        col = jnp.concatenate(
+            [jnp.zeros((n, j), a.dtype), ljj[:, None],
+             rest / ljj[:, None]], axis=1)
+        chol = jnp.concatenate([chol, col[:, :, None]], axis=2)
+    # Rows of L⁻¹ by forward substitution against the identity.
+    eye = jnp.eye(d, dtype=a.dtype)
+    linv = jnp.zeros((n, 0, d), a.dtype)
+    for i in range(d):
+        row = jnp.broadcast_to(eye[i], (n, d))
+        if i:
+            row = row - jnp.einsum("nk,nkj->nj", chol[:, i, :i], linv)
+        linv = jnp.concatenate(
+            [linv, (row / chol[:, i, i][:, None])[:, None, :]], axis=1)
+    return jnp.einsum("nki,nkj->nij", linv, linv)       # (LLᵀ)⁻¹
+
+
+def make_newton_pieces(nseg: int, d: int, reg: float, max_newton: int,
+                       newton_tol: float, seg2):
+    """Batched damped (quasi-)Newton ascent on the per-node objective
+    (Eq. 8).
+
+    Returns ``(newton_start, refactor, newton_iter)`` jitted closures; the
+    caller drives the outer iteration from the host so it can stop the
+    whole level as soon as every node has retired (slope ≤ 0, line-search
+    grid exhausted, step below ``newton_tol``, or objective plateau),
+    calling ``refactor`` every ``_HESS_EVERY`` iterations.
+
+    The iteration is built to touch (N,)-sized data as few times as
+    possible: the per-point logit ``z = xb·θ[seg]`` is carried across
+    iterations (updated as ``z + t·dz``), the whole Armijo grid is
+    evaluated from one ``dz`` pass (no re-gathers per trial step), and
+    directions are a single batched matvec against the cached inverse
+    Hessian. ``outer`` is the flattened (N, d²) ``xb⊗xb`` table —
+    constant across the whole fit, precomputed once.
+    """
+    eye = jnp.eye(d, dtype=jnp.float32)
+    tgrid = (0.5 ** jnp.arange(_LS_GRID, dtype=jnp.float32))  # (T,)
+
+    @jax.jit
+    def newton_start(theta, xb, zeta, wgt, seg, frozen):
+        z = jnp.sum(xb * theta[seg], axis=-1)
+        per = jax.ops.segment_sum(wgt * jax.nn.log_sigmoid(zeta * z), seg,
+                                  num_segments=nseg)
+        obj = per - reg * jnp.sum(theta * theta, axis=-1)
+        active = ~frozen
+        return z, obj, active, jnp.any(active)
+
+    @jax.jit
+    def refactor(z, outer, zeta, wgt, seg):
+        s = jax.nn.sigmoid(jnp.clip(zeta * z, -60.0, 60.0))
+        hcoef = wgt * s * (1.0 - s)
+        hess = (seg2(hcoef[:, None] * outer, seg, nseg).reshape(nseg, d, d)
+                + (2.0 * reg + 1e-10) * eye)
+        return batched_inv_psd(hess)
+
+    @jax.jit
+    def newton_iter(theta, z, obj, active, inv, xb, zeta, wgt, seg):
+        s = jax.nn.sigmoid(jnp.clip(zeta * z, -60.0, 60.0))
+        gcoef = wgt * zeta * (1.0 - s)
+        grad = seg2(gcoef[:, None] * xb, seg, nseg) - 2.0 * reg * theta
+        direction = jnp.einsum("nij,nj->ni", inv, grad)
+        slope = jnp.sum(grad * direction, axis=-1)
+        act = active & jnp.isfinite(slope) & (slope > 0.0)
+
+        # Whole Armijo grid from one directional-logit pass.
+        dz = jnp.sum(xb * direction[seg], axis=-1)              # (N,)
+        zc = z[:, None] + tgrid[None, :] * dz[:, None]          # (N, T)
+        per = jax.ops.segment_sum(
+            wgt[:, None] * jax.nn.log_sigmoid(zeta[:, None] * zc), seg,
+            num_segments=nseg)                                  # (nseg, T)
+        # ‖θ + t·d‖² expanded to three per-node scalars (avoids the
+        # (nseg, T, d) candidate tensor).
+        th_sq = jnp.sum(theta * theta, -1)
+        th_d = jnp.sum(theta * direction, -1)
+        d_sq = jnp.sum(direction * direction, -1)
+        objc = per - reg * (th_sq[:, None]
+                            + 2.0 * tgrid[None, :] * th_d[:, None]
+                            + (tgrid ** 2)[None, :] * d_sq[:, None])
+        ok = objc >= obj[:, None] + 1e-4 * tgrid[None, :] * slope[:, None]
+        found = jnp.any(ok, axis=-1)
+        first = jnp.argmax(ok, axis=-1)                  # first accepted t
+        t = jnp.where(found, tgrid[first], 0.0)
+        obj_new = jnp.take_along_axis(objc, first[:, None], 1)[:, 0]
+        act = act & found
+        upd = act & found
+        theta = jnp.where(upd[:, None], theta + t[:, None] * direction,
+                          theta)
+        z = jnp.where(upd[seg], z + t[seg] * dz, z)
+        new_obj = jnp.where(upd, obj_new, obj)
+        step_inf = jnp.max(jnp.abs(t[:, None] * direction), axis=-1)
+        act = act & (step_inf >= newton_tol)
+        # fp32 plateau stop: once the accepted step no longer moves the
+        # objective by a relative 1e-6, further iterations only crawl on
+        # rounding noise — retire the node.
+        act = act & ((new_obj - obj) >= 1e-6 * (jnp.abs(obj) + 1.0))
+        return theta, z, new_obj, act, jnp.any(act)
+
+    return newton_start, refactor, newton_iter
+
+
+class _LevelPieces:
+    """Jitted per-level building blocks; one instance per
+    (N, C_pad, k, level) problem shape. ``num_labels`` is a *traced*
+    argument so subtree fits with varying real-label counts share these
+    compiled pieces."""
+
+    def __init__(self, n: int, c_pad: int, k: int,
+                 level: int, cfg_key: Tuple):
+        reg, _, max_newton, newton_tol, use_kernel = cfg_key
+        depth = c_pad.bit_length() - 1
+        shift = depth - level
+        nseg = 1 << level
+        m = c_pad >> level
+        half = m >> 1
+        d = k + 1
+        seg2 = _seg_sum_fn(use_kernel)
+        self.nseg, self.m = nseg, m
+        slots = jnp.arange(c_pad, dtype=jnp.int32)
+        node_of_slot = slots >> shift
+        (self.newton_start, self.refactor,
+         self.newton_iter) = make_newton_pieces(
+            nseg, d, reg, max_newton, newton_tol, seg2)
+
+        @jax.jit
+        def prep(y, wgt, perm, slot_of_label, num_labels):
+            node_of_point = (slot_of_label >> shift)[y]
+            is_pad_slot = perm >= num_labels
+            n_real = jax.ops.segment_sum(
+                (~is_pad_slot).astype(jnp.float32), node_of_slot,
+                num_segments=nseg)
+            # Count only positively-weighted points: zero-weight rows are
+            # no-ops in every reduction (the subtree fitters pad point
+            # counts to pow-2 buckets with weight-0 rows).
+            npts = jax.ops.segment_sum((wgt > 0).astype(jnp.float32),
+                                       node_of_point, num_segments=nseg)
+            # Trivial nodes (all padding, or real labels but no data) keep
+            # the natural slot-order split and never iterate.
+            trivial = (n_real == 0) | (npts == 0)
+            natural = (slots & (m - 1)) >= half
+            split0 = jnp.where(trivial[node_of_slot], natural, False)
+            return dict(node_of_point=node_of_point,
+                        is_pad_slot=is_pad_slot, n_real=n_real,
+                        trivial=trivial, split0=split0)
+
+        @jax.jit
+        def init_theta(s_lab, perm, trivial, v0, v_restart):
+            # Per-node dominant eigvec of the centered per-label
+            # feature-sum matrix (power iteration, batched over nodes).
+            s_slot = s_lab[perm]
+            mean = jax.ops.segment_sum(
+                s_slot, node_of_slot, num_segments=nseg) / float(m)
+            sc = s_slot - mean[node_of_slot]
+
+            def pi_body(_, v):
+                t = jnp.sum(sc * v[node_of_slot], axis=-1)
+                u = jax.ops.segment_sum(t[:, None] * sc, node_of_slot,
+                                        num_segments=nseg)
+                nrm = jnp.linalg.norm(u, axis=-1, keepdims=True)
+                return jnp.where(nrm < 1e-12, 0.01 * v_restart,
+                                 u / jnp.maximum(nrm, 1e-30))
+
+            v = v0 / (jnp.linalg.norm(v0, axis=-1, keepdims=True) + 1e-12)
+            v = jax.lax.fori_loop(0, 20, pi_body, v)
+            theta0 = jnp.concatenate(
+                [v, jnp.zeros((nseg, 1), jnp.float32)], axis=-1)
+            return jnp.where(trivial[:, None], 0.0, theta0)
+
+        @jax.jit
+        def discrete(theta, split, split_prev, frozen, xb, y, wgt, perm,
+                     slot_of_label, node_of_point, is_pad_slot):
+            # Δ_y = Σ_{x∈D_y} (w·x + b) (Eq. 9); top half goes right.
+            z = jnp.sum(xb * theta[node_of_point], axis=-1)
+            delta = seg2((wgt * z)[:, None], y, c_pad)[:, 0]
+            delta_slot = jnp.where(is_pad_slot, -jnp.inf, delta[perm])
+            o1 = jnp.argsort(-delta_slot, stable=True)
+            order = o1[jnp.argsort(node_of_slot[o1], stable=True)]
+            new_split = jnp.zeros((c_pad,), bool).at[order].set(
+                (slots & (m - 1)) < half)
+            new_split = jnp.where(frozen[node_of_slot], split, new_split)
+            # Freeze on a stable partition (the reference's per-node break)
+            # OR on a 2-cycle (new == two alternations ago): oscillating
+            # nodes would otherwise burn every remaining alternation
+            # flip-flopping between two equal-quality partitions.
+            changed1 = jax.ops.segment_sum(
+                (new_split != split).astype(jnp.int32), node_of_slot,
+                num_segments=nseg) > 0
+            changed2 = jax.ops.segment_sum(
+                (new_split != split_prev).astype(jnp.int32), node_of_slot,
+                num_segments=nseg) > 0
+            frozen = frozen | ~changed1 | ~changed2
+            side_pt = new_split[slot_of_label][y]
+            zeta = jnp.where(side_pt, 1.0, -1.0).astype(jnp.float32)
+            return new_split, frozen, zeta, jnp.all(frozen)
+
+        @jax.jit
+        def finalize(theta, split, perm, is_pad_slot, n_real):
+            # Force decisions away from padding-only children (paper §3).
+            right_real = jax.ops.segment_sum(
+                (~is_pad_slot & split).astype(jnp.float32), node_of_slot,
+                num_segments=nseg)
+            left_real = jax.ops.segment_sum(
+                (~is_pad_slot & ~split).astype(jnp.float32), node_of_slot,
+                num_segments=nseg)
+            has_real = n_real > 0
+            w_lvl, b_lvl = theta[:, :k], theta[:, k]
+            force = (right_real == 0) | ((left_real == 0) & has_real)
+            w_lvl = jnp.where(force[:, None], 0.0, w_lvl)
+            b_lvl = jnp.where(right_real == 0, -PAD_LOGIT, b_lvl)
+            b_lvl = jnp.where((left_real == 0) & has_real, PAD_LOGIT,
+                              b_lvl)
+            # Permute slots: left-side labels first, stable within side
+            # (matches the reference's concat([lab[~ζ], lab[ζ]]) order).
+            o1p = jnp.argsort(split.astype(jnp.int32), stable=True)
+            order2 = o1p[jnp.argsort(node_of_slot[o1p], stable=True)]
+            new_perm = perm[order2]
+            new_slot = jnp.zeros((c_pad,), jnp.int32).at[new_perm].set(
+                slots)
+            theta_out = jnp.concatenate([w_lvl, b_lvl[:, None]], axis=-1)
+            return theta_out, new_perm, new_slot
+
+        self.prep, self.init_theta = prep, init_theta
+        self.discrete, self.finalize = discrete, finalize
+
+
+@functools.lru_cache(maxsize=512)
+def _get_pieces(n: int, c_pad: int, k: int, level: int,
+                cfg_key: Tuple) -> _LevelPieces:
+    return _LevelPieces(n, c_pad, k, level, cfg_key)
+
+
+def _compact(n_total: int, idx: np.ndarray, xb, outer, zeta, wgt, seg):
+    """Gather the points of still-active nodes into a padded pow-4 bucket.
+
+    Newton sweeps then touch only those points: segment sums are over the
+    same point subsequence in the same order, so active nodes' statistics
+    are bit-identical to the uncompacted sweep, while frozen nodes' points
+    stop costing O(N) per iteration. Padding rows carry weight 0 (they
+    contribute exactly 0 to every reduction). Pow-4 buckets bound the
+    number of jit retraces to ≤ 4 per level.
+    """
+    n_b = n_total
+    while n_b // 4 >= max(len(idx), 1024):
+        n_b //= 4
+    if n_b >= n_total:
+        return None
+    pad = n_b - len(idx)
+    idx_j = jnp.asarray(np.concatenate([idx, np.zeros(pad, np.int64)]),
+                        jnp.int32)
+    valid = jnp.arange(n_b) < len(idx)
+    return (jnp.take(xb, idx_j, 0), jnp.take(outer, idx_j, 0),
+            jnp.take(zeta, idx_j, 0),
+            jnp.where(valid, jnp.take(wgt, idx_j, 0), 0.0),
+            jnp.take(seg, idx_j, 0))
+
+
+# Intermediate (capped) Newton solves subsample shallow levels down to
+# this many points per node: a split hyperplane fitted on 4k points is
+# statistically indistinguishable from one fitted on 128k, and the final
+# partition is polished on the full data anyway.
+_SUB_TARGET = 4096
+
+
+def run_newton(newton_pieces, theta, frozen, xb, outer, zeta, wgt, seg,
+               seg_host: np.ndarray, max_newton: int,
+               subsample_target: int = 0):
+    """Drive one batched Newton solve from the host: compact away frozen
+    nodes' points, then iterate (refreshing the Hessian factor every
+    ``_HESS_EVERY`` steps) until every node retires or ``max_newton``.
+
+    ``subsample_target > 0`` stride-samples the active points down to
+    ~``subsample_target`` per node (weights scaled by the stride so the
+    data/ridge balance is preserved) — used for intermediate alternation
+    solves at shallow levels, never for the polish.
+    """
+    newton_start, refactor, newton_iter = newton_pieces
+    n_total = seg_host.shape[0]
+    active_pts = ~np.asarray(frozen)[seg_host]
+    idx = np.nonzero(active_pts)[0]
+    stride = 1
+    if subsample_target:
+        # Level width (not the active-node count) keeps the stride
+        # deterministic and conservative.
+        stride = max(1, len(idx) // (int(frozen.shape[0])
+                                     * subsample_target))
+    packed = None
+    if stride > 1:
+        packed = _compact(n_total, idx[::stride], xb, outer, zeta,
+                          wgt * np.float32(stride), seg)
+    if packed is None:
+        packed = _compact(n_total, idx, xb, outer, zeta, wgt, seg)
+    xb_a, outer_a, zeta_a, wgt_a, seg_a = (
+        packed if packed is not None else (xb, outer, zeta, wgt, seg))
+    z, obj, active, any_active = newton_start(
+        theta, xb_a, zeta_a, wgt_a, seg_a, frozen)
+    it = 0
+    inv = None
+    while bool(any_active) and it < max_newton:
+        if it % _HESS_EVERY == 0:
+            inv = refactor(z, outer_a, zeta_a, wgt_a, seg_a)
+        theta, z, obj, active, any_active = newton_iter(
+            theta, z, obj, active, inv, xb_a, zeta_a, wgt_a, seg_a)
+        it += 1
+    return theta
+
+
+def _run_level(pieces: _LevelPieces, xb, outer, y, wgt, s_lab, perm,
+               slot_of_label, num_labels, v0, v_restart, cfg_key: Tuple):
+    """Host-driven alternation for one level: discrete re-partition, then
+    batched Newton until every node retires (early exit on host)."""
+    _, max_alt, max_newton, _, _ = cfg_key
+    aux = pieces.prep(y, wgt, perm, slot_of_label, num_labels)
+    theta = pieces.init_theta(s_lab, perm, aux["trivial"], v0, v_restart)
+    split, frozen = aux["split0"], aux["trivial"]
+    split_prev = split
+    seg = aux["node_of_point"]
+    seg_host = np.asarray(seg)
+    newton_pieces = (pieces.newton_start, pieces.refactor,
+                     pieces.newton_iter)
+    zeta = None
+    for _ in range(max_alt):
+        new_split, frozen, zeta, all_frozen = pieces.discrete(
+            theta, split, split_prev, frozen, xb, y, wgt, perm,
+            slot_of_label, seg, aux["is_pad_slot"])
+        split_prev, split = split, new_split
+        if bool(all_frozen):
+            break
+        # Capped solve: intermediate alternations only need improvement.
+        theta = run_newton(newton_pieces, theta, frozen, xb, outer, zeta,
+                           wgt, seg, seg_host,
+                           min(_ALT_NEWTON, max_newton),
+                           subsample_target=_SUB_TARGET)
+    if zeta is not None:
+        # Full-precision polish of every data-carrying node on the final
+        # partition (the capped intermediate solves leave theta improved
+        # but not converged).
+        theta = run_newton(newton_pieces, theta, aux["trivial"], xb,
+                           outer, zeta, wgt, seg, seg_host, max_newton)
+    return pieces.finalize(theta, split, perm, aux["is_pad_slot"],
+                           aux["n_real"])
+
+
+def _prep_data(features, labels, num_labels, sample_weight):
+    x = np.asarray(features, np.float32)
+    y = np.asarray(labels, np.int64)
+    assert x.ndim == 2 and y.shape == (x.shape[0],)
+    assert y.size == 0 or (0 <= y.min() and y.max() < num_labels)
+    wgt = (np.ones(len(y), np.float32) if sample_weight is None
+           else np.asarray(sample_weight, np.float32))
+    return x, y, wgt
+
+
+def _fit_levels(x, y, wgt, num_labels: int, c_pad: int, cfg: FitConfig,
+                n_levels: int, perm0=None):
+    """Run the level sweep for ``n_levels`` levels from the root.
+
+    Returns host arrays ``(w_all, b_all, perm, slot_of_label)`` with node
+    rows beyond the fitted levels left at zero (the sharded fitter fills
+    them from subtree fits).
+    """
+    k = x.shape[1]
+    key = _cfg_key(cfg)
+    rng = np.random.default_rng(cfg.seed)
+
+    xj = jnp.asarray(x, jnp.float32)
+    xb = jnp.concatenate([xj, jnp.ones((x.shape[0], 1), jnp.float32)],
+                         axis=-1)
+    d = k + 1
+    # xb⊗xb, flattened: the Hessian's per-point table, constant across the
+    # whole fit — computed once instead of once per Newton iteration.
+    outer = (xb[:, :, None] * xb[:, None, :]).reshape(-1, d * d)
+    yj = jnp.asarray(y, jnp.int32)
+    wj = jnp.asarray(wgt, jnp.float32)
+    # Per-label weighted feature sums: level-independent, computed once.
+    s_lab = jax.ops.segment_sum(xj * wj[:, None], yj, num_segments=c_pad)
+    perm = (jnp.arange(c_pad, dtype=jnp.int32) if perm0 is None
+            else jnp.asarray(perm0, jnp.int32))
+    slot_of_label = jnp.zeros((c_pad,), jnp.int32).at[perm].set(
+        jnp.arange(c_pad, dtype=jnp.int32))
+
+    w_all = np.zeros((c_pad - 1, k), np.float32)
+    b_all = np.zeros((c_pad - 1,), np.float32)
+    for level in range(n_levels):
+        pieces = _get_pieces(x.shape[0], c_pad, k, level, key)
+        n_lvl = 1 << level
+        v0 = jnp.asarray(rng.standard_normal((n_lvl, k)), jnp.float32)
+        v_restart = jnp.asarray(rng.standard_normal((n_lvl, k)),
+                                jnp.float32)
+        theta, perm, slot_of_label = _run_level(
+            pieces, xb, outer, yj, wj, s_lab, perm, slot_of_label,
+            jnp.int32(num_labels), v0, v_restart, key)
+        th = np.asarray(theta)
+        w_all[n_lvl - 1:2 * n_lvl - 1] = th[:, :k]
+        b_all[n_lvl - 1:2 * n_lvl - 1] = th[:, k]
+    return (w_all, b_all, np.array(perm, np.int64),
+            np.array(slot_of_label, np.int64))
+
+
+def pack_tree(w_all, b_all, perm, num_labels: int) -> Tree:
+    """Assemble a :class:`Tree` from level arrays + final slot
+    permutation (``perm[leaf] = label``, padding ids ≥ num_labels)."""
+    from repro.core.tree import validate
+
+    label_to_leaf = np.zeros((num_labels,), np.int64)
+    label_to_leaf[perm[perm < num_labels]] = np.nonzero(
+        perm < num_labels)[0]
+    leaf_to_label = np.where(perm < num_labels, perm, 0)
+    return validate(Tree(
+        w=jnp.asarray(w_all, jnp.float32),
+        b=jnp.asarray(b_all, jnp.float32),
+        label_to_leaf=jnp.asarray(label_to_leaf, jnp.int32),
+        leaf_to_label=jnp.asarray(leaf_to_label, jnp.int32),
+    ), num_labels)
+
+
+def fit_tree_levelwise(features, labels, num_labels: int,
+                       sample_weight=None,
+                       config: Optional[FitConfig] = None,
+                       c_pad: Optional[int] = None) -> Tree:
+    """Level-parallel fit — same objective/partition rules as
+    :func:`repro.core.tree_fit.fit_tree`, O(log C) sequential phases.
+
+    ``c_pad`` forces the padded leaf count (a power of two
+    ≥ ``padded_size(num_labels)``); the sharded/incremental fitters use it
+    to fit subtrees whose leaf count exceeds their real-label count.
+    """
+    cfg = config or FitConfig()
+    x, y, wgt = _prep_data(features, labels, num_labels, sample_weight)
+    c_pad = c_pad or padded_size(num_labels)
+    assert c_pad >= padded_size(num_labels) and (c_pad & (c_pad - 1)) == 0
+    depth = c_pad.bit_length() - 1
+    w_all, b_all, perm, _ = _fit_levels(x, y, wgt, num_labels, c_pad, cfg,
+                                        n_levels=depth)
+    return pack_tree(w_all, b_all, perm, num_labels)

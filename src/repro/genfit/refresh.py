@@ -1,0 +1,113 @@
+"""Non-blocking generator refresh (DESIGN.md §3).
+
+The training loop must not stall every accelerator for the duration of a
+generator fit (the paper's "Step 1"), but it also must stay *bit-exact
+recoverable*: a run that checkpoints and resumes mid-refresh has to end up
+with exactly the parameters of an uninterrupted run. The protocol:
+
+1. **Submit** at a schedule-determined step ``s``: the loop snapshots the
+   (immutable) train state, persists it as a ``gensnap_<s>`` artifact next
+   to the checkpoints, and hands the fit to a background thread. Training
+   continues on the stale generator.
+2. **Swap** at the *recorded* step ``s + gen_swap_delay``: the loop blocks
+   (usually a no-op — the fit finished long ago) and installs the new head
+   state. The swap step is a pure function of the config, never of thread
+   timing, so data/rng streams are unaffected by how long the fit took.
+3. **Resume**: if a restart lands inside the (submit, swap] window, the
+   loop reloads the ``gensnap`` artifact and re-runs the fit — the fit
+   functions in :mod:`repro.genfit` are deterministic in (state, config),
+   so the replayed swap installs bit-identical parameters at the same
+   step.
+
+``AsyncRefresher`` is the small thread harness behind step 1/2; the
+orchestration lives in :func:`repro.train.loop.run_loop`.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Optional, Tuple
+
+SNAP_PREFIX = "gensnap_"
+
+
+class AsyncRefresher:
+    """One-in-flight background fit with exception propagation.
+
+    ``submit(state, step)`` starts ``fit_fn(state)`` on a worker thread;
+    ``result()`` joins and returns (or re-raises the worker's exception at
+    the swap point, where the caller can actually handle it). jax arrays
+    are immutable, so the snapshot needs no copying; XLA releases the GIL
+    during execution, so training steps overlap the fit on CPU too.
+    """
+
+    def __init__(self, fit_fn: Callable[[Any], Any]):
+        self._fit_fn = fit_fn
+        self._thread: Optional[threading.Thread] = None
+        self._result: Any = None
+        self._error: Optional[BaseException] = None
+        self._submit_step: Optional[int] = None
+
+    @property
+    def in_flight(self) -> bool:
+        return self._thread is not None
+
+    @property
+    def submit_step(self) -> Optional[int]:
+        return self._submit_step
+
+    def submit(self, state, step: int) -> None:
+        assert self._thread is None, "refresh already in flight"
+        self._result, self._error, self._submit_step = None, None, step
+
+        def work():
+            try:
+                self._result = self._fit_fn(state)
+            except BaseException as e:        # re-raised at the swap
+                self._error = e
+
+        self._thread = threading.Thread(
+            target=work, name=f"gen-refresh@{step}", daemon=True)
+        self._thread.start()
+
+    def ready(self) -> bool:
+        return self._thread is not None and not self._thread.is_alive()
+
+    def result(self) -> Tuple[Any, int]:
+        """Join the worker and return (head_state, submit_step)."""
+        assert self._thread is not None, "no refresh in flight"
+        self._thread.join()
+        self._thread = None
+        if self._error is not None:
+            raise self._error
+        return self._result, self._submit_step
+
+
+def snapshot_path_exists(directory: str, step: int) -> bool:
+    import os
+
+    from repro.checkpoint.checkpoint import MANIFEST
+    return os.path.exists(os.path.join(
+        directory, f"{SNAP_PREFIX}{step:08d}", MANIFEST))
+
+
+def save_snapshot(directory: str, step: int, pytree) -> str:
+    """Persist the submit-time state under ``gensnap_<step>`` (atomic,
+    ignored by checkpoint GC and the LATEST pointer)."""
+    from repro.checkpoint import save_checkpoint
+    return save_checkpoint(directory, step, pytree, keep=0,
+                           prefix=SNAP_PREFIX, update_latest=False)
+
+
+def load_snapshot(directory: str, step: int, tree_like):
+    from repro.checkpoint import restore_checkpoint
+    state, _ = restore_checkpoint(directory, tree_like, step=step,
+                                  prefix=SNAP_PREFIX)
+    return state
+
+
+def drop_snapshot(directory: str, step: int) -> None:
+    """Remove a consumed ``gensnap`` artifact (post-swap cleanup)."""
+    import os
+    import shutil
+    shutil.rmtree(os.path.join(directory, f"{SNAP_PREFIX}{step:08d}"),
+                  ignore_errors=True)

@@ -14,6 +14,7 @@ import jax
 from repro.kernels import ref as ref_lib
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gather_scores import gather_scores as _gather
+from repro.kernels.segment_scores import segment_stats as _segstats
 from repro.kernels.tree_logprob import tree_logprob_all as _treelp
 
 _STATE = {"use_pallas": True, "interpret": None}
@@ -51,3 +52,11 @@ def gather_scores(w, b, h, ids):
     if not _STATE["use_pallas"]:
         return ref_lib.gather_scores_ref(w, b, h, ids)
     return _gather(w, b, h, ids, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def segment_stats(vals, seg, num_segments: int):
+    """Segment-summed fit statistics (repro.genfit hot reduction)."""
+    if not _STATE["use_pallas"]:
+        return ref_lib.segment_stats_ref(vals, seg, num_segments)
+    return _segstats(vals, seg, num_segments, interpret=_interpret())

@@ -50,6 +50,13 @@ def tree_logprob_all_ref(w, b, x):
     return logp
 
 
+def segment_stats_ref(vals, seg, num_segments: int):
+    """Segment-summed statistics: vals (N,D), seg (N,) int ->
+    (num_segments, D) fp32. Out-of-range ids are dropped (padding)."""
+    return jax.ops.segment_sum(vals.astype(jnp.float32), seg,
+                               num_segments=num_segments)
+
+
 def gather_scores_ref(w, b, h, ids):
     """Sampled-head scores: w: (C,K), b: (C,), h: (T,K), ids: (T,n) ->
     (T,n) fp32."""

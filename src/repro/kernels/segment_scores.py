@@ -1,0 +1,89 @@
+"""Batched segment-reduction Pallas TPU kernel (generator-fit hot spot).
+
+The level-parallel generator fit (repro.genfit.levels) is built from one
+primitive: *segment-summed sufficient statistics* — per-node/per-label
+reductions of per-point score rows (the Δ_y Eq. 9 scores, the Newton
+gradient rows, the flattened Hessian rows). On TPU an XLA scatter-add
+serializes badly; this kernel instead casts the reduction as a sequence of
+small one-hot matmuls: the grid walks point blocks (TPU grids execute
+sequentially per core), each step builds the (blk_n, S) membership
+one-hot with an iota compare — VPU work — and accumulates
+``one_hotᵀ @ vals`` into the full (S, D) output block, which stays
+resident in VMEM across grid steps (same output block every step). That
+turns an irregular scatter into MXU-shaped dot_generals with a single
+VMEM-resident accumulator.
+
+Scope: S·D must fit in VMEM (the fit's segment counts per level are
+≤ C_pad/2 nodes with D = k+1 or (k+1)² stats — a few MB at production
+sizes; the wrapper asserts). Caller-visible semantics match
+``jax.ops.segment_sum(vals, seg, num_segments)`` for int32 ``seg`` in
+[0, S); out-of-range ids (the wrapper's padding rows) contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# VMEM budget for the resident (S, D) accumulator (fp32 bytes).
+_ACC_BYTES_MAX = 8 * 1024 * 1024
+
+
+def _kernel(seg_ref, vals_ref, out_ref, *, blk_n: int, s: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    seg = seg_ref[...]                                   # (blk_n, 1)
+    vals = vals_ref[...].astype(jnp.float32)             # (blk_n, D)
+    seg_ids = jax.lax.broadcasted_iota(jnp.int32, (blk_n, s), 1)
+    onehot = (seg == seg_ids).astype(jnp.float32)        # (blk_n, S)
+    out_ref[...] += jax.lax.dot_general(
+        onehot, vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (S, D)
+
+
+def segment_stats(vals, seg, num_segments: int, *, blk_n: int = 512,
+                  interpret: bool = False):
+    """segment_sum(vals, seg) → (num_segments, D) fp32.
+
+    vals: (N, D); seg: (N,) int32 in [0, num_segments) — rows with ids
+    outside the range (used for padding) are dropped.
+    """
+    n, d = vals.shape
+    assert seg.shape == (n,), (seg.shape, n)
+    assert num_segments * d * 4 <= _ACC_BYTES_MAX, (
+        f"accumulator (S={num_segments}, D={d}) exceeds the VMEM budget")
+    if n == 0:
+        # A zero-step grid would skip the init branch and return an
+        # uninitialized buffer; match segment_sum's zeros.
+        return jnp.zeros((num_segments, d), jnp.float32)
+    blk_n = min(blk_n, max(n, 1))
+    pad = (-n) % blk_n
+    if pad:
+        # Padding rows point at segment id S (matches nothing).
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((pad, d), vals.dtype)], axis=0)
+        seg = jnp.concatenate(
+            [seg, jnp.full((pad,), num_segments, jnp.int32)], axis=0)
+    n_pad = n + pad
+
+    kernel = functools.partial(_kernel, blk_n=blk_n, s=num_segments)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_pad // blk_n,),
+        in_specs=[
+            pl.BlockSpec((blk_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk_n, d), lambda i: (i, 0)),
+        ],
+        # Every grid step maps the same output block: the accumulator
+        # stays VMEM-resident across the (sequential) grid.
+        out_specs=pl.BlockSpec((num_segments, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), jnp.float32),
+        interpret=interpret,
+    )(seg.astype(jnp.int32)[:, None], vals)

@@ -23,7 +23,7 @@ from repro.optim import OptimizerConfig
 from repro.parallel import batch_shardings, train_state_shardings
 from repro.train import (LoopConfig, init_train_state, make_train_step,
                          run_loop)
-from repro.train.generator_fit import fit_lm_generator
+from repro.train.generator_fit import make_gen_fit_fn
 
 
 def build(args):
@@ -53,6 +53,14 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--gen-warmup", type=int, default=0)
+    ap.add_argument("--gen-refresh", type=int, default=0,
+                    help="refit the generator every N steps (0 = once)")
+    ap.add_argument("--gen-async", action="store_true",
+                    help="fit in a background thread; swap at the "
+                         "recorded step (submit + --gen-swap-delay)")
+    ap.add_argument("--gen-swap-delay", type=int, default=4)
+    ap.add_argument("--gen-method", default="levelwise",
+                    choices=("levelwise", "sequential", "sharded"))
     args = ap.parse_args()
 
     from repro.launch.mesh import make_host_mesh
@@ -80,14 +88,17 @@ def main():
     gen_cb = None
     if args.gen_warmup and args.head in ("adversarial_ns", "nce",
                                          "sampled_softmax", "freq_ns"):
-        gen_cb = lambda st: fit_lm_generator(          # noqa: E731
-            st.params, cfg, (make(10_000 + i) for i in range(8)),
-            kind=args.head, max_tokens=8192)
+        gen_cb = make_gen_fit_fn(
+            cfg, lambda s: {k: jnp.asarray(v) for k, v in make(s).items()},
+            kind=args.head, max_tokens=8192, method=args.gen_method)
 
     loop = LoopConfig(total_steps=args.steps,
                       checkpoint_every=max(args.steps // 2, 1),
                       checkpoint_dir=args.ckpt,
-                      gen_warmup_steps=args.gen_warmup)
+                      gen_warmup_steps=args.gen_warmup,
+                      gen_refresh_steps=args.gen_refresh,
+                      gen_async=args.gen_async,
+                      gen_swap_delay=args.gen_swap_delay)
     state, hist = run_loop(
         state, train_step, batch_fn, loop, jax.random.PRNGKey(1),
         gen_fit_fn=gen_cb,

@@ -4,8 +4,10 @@ from repro.parallel.sharding import (batch_shardings, cache_shardings,
                                      mesh_axes, paged_cache_shardings,
                                      param_spec, params_shardings,
                                      replicated, train_state_shardings)
+from repro.parallel.work import merge_disjoint, round_robin_shard
 
 __all__ = ["AxisType", "ensure_partitionable_rng", "make_mesh",
            "batch_shardings", "cache_shardings", "mesh_axes",
-           "paged_cache_shardings", "param_spec",
-           "params_shardings", "replicated", "train_state_shardings"]
+           "merge_disjoint", "paged_cache_shardings", "param_spec",
+           "params_shardings", "replicated", "round_robin_shard",
+           "train_state_shardings"]

@@ -230,4 +230,5 @@ def train_state_shardings(cfg: ModelConfig, mesh: Mesh, state_abstract):
         step=NamedSharding(mesh, P()),
         params=p_sh,
         opt_state=opt_mirror(state_abstract.opt_state),
-        head_state=replicated(mesh, state_abstract.head_state))
+        head_state=replicated(mesh, state_abstract.head_state),
+        gen_fit_step=NamedSharding(mesh, P()))

@@ -1,0 +1,41 @@
+"""Host-level work partitioning for embarrassingly-parallel fit tasks.
+
+The generator fit's subtrees (repro.genfit.sharded) are independent
+problems with tiny results (node parameter rows + a leaf permutation
+slice), so multi-host fitting is plain round-robin work division plus one
+merge of disjoint arrays — no in-graph collectives needed. These helpers
+keep that policy in one place; ``shard_index/shard_count`` default to the
+JAX distributed runtime's process coordinates so the same call works
+single-host and on a pod.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def round_robin_shard(n_items: int, shard_index: Optional[int] = None,
+                      shard_count: Optional[int] = None) -> List[int]:
+    """Item ids owned by this shard: ``[i for i in range(n) if i % count
+    == index]``. Defaults to ``jax.process_index()/process_count()``."""
+    if shard_index is None:
+        shard_index = jax.process_index()
+    if shard_count is None:
+        shard_count = jax.process_count()
+    assert 0 <= shard_index < shard_count, (shard_index, shard_count)
+    return [i for i in range(n_items) if i % shard_count == shard_index]
+
+
+def merge_disjoint(parts: Sequence[np.ndarray],
+                   fill: float = 0.0) -> np.ndarray:
+    """Merge per-shard arrays whose written entries are disjoint (unwritten
+    entries hold ``fill``). Used to combine sharded subtree-fit outputs
+    after an all-gather (or any out-of-band exchange)."""
+    assert parts, "nothing to merge"
+    out = np.full_like(parts[0], fill)
+    for p in parts:
+        written = p != fill
+        out[written] = p[written]
+    return out

@@ -3,15 +3,23 @@
 The paper fits the tree on fixed input features. An LM's features evolve, so
 we fit the generator on a *frozen snapshot*: run the current model over a few
 batches, collect (hidden state, next token) pairs, PCA-project the hiddens to
-k dims (paper §3 'Technical Details'), and run the paper's greedy
-Newton/balanced-split fit. The resulting (proj, tree) pair replaces
-``LMHeadState``; the discriminator trains against it until the next refresh.
-Overhead is sub-leading, as the paper requires: a handful of forward passes
-plus an O(N·k·log C) tree fit.
+k dims (paper §3 'Technical Details'), and fit the tree. The resulting
+(proj, tree) pair replaces ``LMHeadState``; the discriminator trains against
+it until the next refresh. Overhead is sub-leading, as the paper requires: a
+handful of forward passes plus an O(N·k·log C)-phase tree fit.
+
+Fitting goes through :mod:`repro.genfit` (level-parallel by default, with
+the sequential recursion and the subtree-sharded fitter as options), and
+:func:`refresh_lm_generator` implements the warm-start path for mid-training
+refreshes: the projection is *kept* (so the previous tree's split
+assignments stay meaningful in the unchanged feature space) and only node
+parameters are re-solved — optionally with drift-triggered subtree refits
+(DESIGN.md §3). Every path is a deterministic function of (params/state,
+batches, config), which the async-refresh protocol relies on.
 """
 from __future__ import annotations
 
-from typing import Iterable, Optional
+from typing import Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,34 +28,90 @@ import numpy as np
 from repro.core import heads as heads_lib
 from repro.core.heads import Generator
 from repro.core.tree_fit import FitConfig, fit_tree, pca_projection
+from repro.genfit import (fit_tree_levelwise, fit_tree_sharded,
+                          refresh_tree)
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.models.lm_head import LMHeadState
 
+_FITTERS = {
+    "levelwise": fit_tree_levelwise,
+    "sequential": fit_tree,
+    "sharded": fit_tree_sharded,
+}
+
 
 def collect_features(params, cfg: ModelConfig, batches: Iterable[dict],
                      max_tokens: int = 200_000):
-    """Run the model; return (hiddens (N, d) fp32, labels (N,))."""
+    """Run the model; return (hiddens (N, d) fp32, labels (N,)), N ≤
+    ``max_tokens``.
+
+    The jitted forward is traced once, for the first batch's shape: a
+    ragged final batch (smaller batch/seq dims) is zero-padded up to that
+    shape and only its valid region is collected — causal models give
+    bit-identical hiddens for the real tokens, and the padding rows never
+    reach the fit. Collection stops *requesting* batches once the cap is
+    reached, and each batch is truncated to the remaining budget instead
+    of materializing everything and slicing at the end.
+    """
     hs, ys = [], []
-    total = 0
+    remaining = int(max_tokens)
     fwd = jax.jit(lambda p, t: transformer.forward(p, cfg, t)[0])
+    shape0 = None
     for batch in batches:
-        h = fwd(params, jnp.asarray(batch["tokens"]))
-        h = np.asarray(h, np.float32).reshape(-1, cfg.d_model)
-        y = np.asarray(batch["labels"]).reshape(-1)
-        hs.append(h)
-        ys.append(y)
-        total += len(y)
-        if total >= max_tokens:
+        if remaining <= 0:
             break
-    return np.concatenate(hs)[:max_tokens], np.concatenate(ys)[:max_tokens]
+        tok = np.asarray(batch["tokens"])
+        lab = np.asarray(batch["labels"])
+        if shape0 is None:
+            shape0 = tok.shape
+        b = min(tok.shape[0], shape0[0])
+        s = min(tok.shape[1], shape0[1])
+        if tok.shape != shape0:
+            pad_tok = np.zeros(shape0, tok.dtype)
+            pad_tok[:b, :s] = tok[:b, :s]
+            tok = pad_tok
+        h = np.asarray(fwd(params, jnp.asarray(tok)),
+                       np.float32)[:b, :s].reshape(-1, cfg.d_model)
+        y = lab[:b, :s].reshape(-1)
+        take = min(len(y), remaining)
+        hs.append(h[:take])
+        ys.append(y[:take])
+        remaining -= take
+    assert hs, "collect_features: no batches"
+    return np.concatenate(hs), np.concatenate(ys)
+
+
+def _fit_projected_tree(feats, labels, cfg: ModelConfig,
+                        fit_config: Optional[FitConfig],
+                        method: str):
+    """PCA-project, fit, fold the centering into the node biases."""
+    proj_np, mean = pca_projection(feats, cfg.gen_feature_dim)
+    x_gen = (feats - mean) @ proj_np
+    fitter = _FITTERS[method]
+    tree = fitter(x_gen, labels, cfg.vocab_size,
+                  config=fit_config or FitConfig(reg=0.1))
+    # The tree was fitted on centered features (h - mean) @ proj, but at
+    # train time we compute h @ proj. Fold the centering into the node
+    # biases: z = w.((h - mean) @ proj) + b = w.(h @ proj) + (b - w.(mean
+    # @ proj)). Padding-forcing nodes have w = 0, so their +/-PAD_LOGIT
+    # biases are untouched.
+    offset = jnp.asarray(-(mean @ proj_np), jnp.float32)
+    shifted = tree._replace(b=tree.b + tree.w @ offset)
+    return shifted, jnp.asarray(proj_np)
 
 
 def fit_lm_generator(params, cfg: ModelConfig, batches: Iterable[dict],
                      kind: str = "adversarial_ns",
                      fit_config: Optional[FitConfig] = None,
-                     max_tokens: int = 200_000) -> LMHeadState:
-    """Snapshot-fit the generator; returns a fresh LMHeadState."""
+                     max_tokens: int = 200_000,
+                     method: str = "levelwise") -> LMHeadState:
+    """Snapshot-fit the generator; returns a fresh LMHeadState.
+
+    ``method`` selects the fitter: ``levelwise`` (default; O(log C)
+    sequential phases), ``sequential`` (the reference recursion), or
+    ``sharded`` (subtree fan-out).
+    """
     feats, labels = collect_features(params, cfg, batches, max_tokens)
     if kind == "freq_ns":
         counts = np.bincount(labels, minlength=cfg.vocab_size).astype(
@@ -55,16 +119,65 @@ def fit_lm_generator(params, cfg: ModelConfig, batches: Iterable[dict],
         gen = heads_lib.make_freq_generator(jnp.asarray(counts))
         proj = jnp.zeros((cfg.d_model, cfg.gen_feature_dim), jnp.float32)
         return LMHeadState(gen=gen, proj=proj)
-    proj_np, mean = pca_projection(feats, cfg.gen_feature_dim)
-    x_gen = (feats - mean) @ proj_np
-    tree = fit_tree(x_gen, labels, cfg.vocab_size,
-                    config=fit_config or FitConfig(reg=0.1))
-    # The tree was fitted on centered features (h - mean) @ proj, but at
-    # train time we compute h @ proj. Fold the centering into the node
-    # biases: z = w.((h - mean) @ proj) + b = w.(h @ proj) + (b - w.(mean @
-    # proj)). Padding-forcing nodes have w = 0, so their +/-PAD_LOGIT biases
-    # are untouched.
-    offset = jnp.asarray(-(mean @ proj_np), jnp.float32)
-    shifted = tree._replace(b=tree.b + tree.w @ offset)
-    return LMHeadState(gen=Generator(tree=shifted),
-                       proj=jnp.asarray(proj_np))
+    tree, proj = _fit_projected_tree(feats, labels, cfg, fit_config,
+                                     method)
+    return LMHeadState(gen=Generator(tree=tree), proj=proj)
+
+
+def refresh_lm_generator(prev: LMHeadState, params, cfg: ModelConfig,
+                         batches: Iterable[dict],
+                         fit_config: Optional[FitConfig] = None,
+                         max_tokens: int = 200_000,
+                         prev_counts: Optional[np.ndarray] = None,
+                         drift_threshold: Optional[float] = None
+                         ) -> Tuple[LMHeadState, np.ndarray]:
+    """Warm-start generator refresh (incremental path, DESIGN.md §3).
+
+    Keeps ``prev.proj`` — the feature space stays fixed, so the previous
+    tree's split assignments remain meaningful — and re-solves only node
+    parameters from a fresh snapshot (plus drift-triggered subtree refits
+    when ``drift_threshold`` and ``prev_counts`` are given). Returns
+    ``(head_state, label_counts)``; feed the counts back at the next
+    refresh for drift detection.
+    """
+    assert prev.gen.tree is not None, "no tree to warm-start from"
+    feats, labels = collect_features(params, cfg, batches, max_tokens)
+    x_gen = feats @ np.asarray(prev.proj, np.float32)
+    tree, counts = refresh_tree(
+        prev.gen.tree, x_gen, labels, cfg.vocab_size,
+        config=fit_config or FitConfig(reg=0.1),
+        prev_counts=prev_counts, drift_threshold=drift_threshold)
+    return LMHeadState(gen=Generator(tree=tree), proj=prev.proj), counts
+
+
+def make_gen_fit_fn(cfg: ModelConfig, batch_fn, kind: str,
+                    fit_config: Optional[FitConfig] = None,
+                    max_tokens: int = 16_384, n_batches: int = 8,
+                    batch_offset: int = 10_000,
+                    method: str = "levelwise",
+                    warm_refresh: bool = True):
+    """Build the ``gen_fit_fn(state) -> LMHeadState`` used by ``run_loop``.
+
+    The first fit (``state.gen_fit_step < 0``) is a full fit; later
+    refreshes warm-start from the in-state tree when ``warm_refresh``.
+    Because the decision reads only checkpointed state, a resumed run
+    replays exactly the fit the uninterrupted run performed.
+    """
+
+    def batches():
+        return (batch_fn(batch_offset + i) for i in range(n_batches))
+
+    def gen_fit(state):
+        first = int(jax.device_get(state.gen_fit_step)) < 0
+        if (first or not warm_refresh or kind != "adversarial_ns"
+                or state.head_state.gen.tree is None):
+            return fit_lm_generator(state.params, cfg, batches(),
+                                    kind=kind, fit_config=fit_config,
+                                    max_tokens=max_tokens, method=method)
+        head, _ = refresh_lm_generator(state.head_state, state.params,
+                                       cfg, batches(),
+                                       fit_config=fit_config,
+                                       max_tokens=max_tokens)
+        return head
+
+    return gen_fit

@@ -12,7 +12,13 @@ Production behaviours, all exercised by tests:
     only needs the step counter;
   * generator refresh: the adversarial tree is (re)fitted from a model
     snapshot every ``gen_refresh_steps`` (0 = fit once at
-    ``gen_warmup_steps``).
+    ``gen_warmup_steps``). With ``gen_async`` the fit runs in a background
+    thread (repro.genfit.refresh) while training continues on the stale
+    generator, and the new generator is swapped in at the *recorded* step
+    ``submit + gen_swap_delay`` — a pure function of the config, so
+    checkpoint/resume replays the exact swap and stays bit-exact (the
+    submit-time state is persisted as a ``gensnap`` artifact and the fit,
+    being deterministic, is re-run on resume if it was in flight).
 """
 from __future__ import annotations
 
@@ -22,9 +28,13 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.genfit.refresh import (AsyncRefresher, drop_snapshot,
+                                  load_snapshot, save_snapshot,
+                                  snapshot_path_exists)
 from repro.train.state import TrainState
 
 
@@ -39,6 +49,24 @@ class LoopConfig:
     ewma_alpha: float = 0.1
     gen_warmup_steps: int = 0       # fit generator after this many steps
     gen_refresh_steps: int = 0      # 0 = never refresh after warmup
+    gen_async: bool = False         # fit in a background thread
+    gen_swap_delay: int = 0         # steps between submit and swap (async)
+
+    def gen_due(self, step: int) -> bool:
+        return (step == self.gen_warmup_steps
+                or bool(self.gen_refresh_steps
+                        and step > self.gen_warmup_steps
+                        and (step - self.gen_warmup_steps)
+                        % self.gen_refresh_steps == 0))
+
+    def last_submit_before(self, step: int) -> Optional[int]:
+        """Latest refresh-submit step < ``step`` (None if none yet)."""
+        if step <= self.gen_warmup_steps:
+            return None
+        if not self.gen_refresh_steps:
+            return self.gen_warmup_steps
+        k = (step - 1 - self.gen_warmup_steps) // self.gen_refresh_steps
+        return self.gen_warmup_steps + k * self.gen_refresh_steps
 
 
 class StragglerMonitor:
@@ -94,6 +122,11 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
     preemption = preemption or Preemption()
     monitor = StragglerMonitor(cfg.straggler_factor, cfg.ewma_alpha)
     history: Dict[str, list] = {"loss": [], "step": []}
+    if cfg.gen_async and cfg.gen_refresh_steps:
+        if cfg.gen_swap_delay >= cfg.gen_refresh_steps:
+            raise ValueError(
+                "gen_swap_delay must be < gen_refresh_steps (one refresh "
+                "in flight at a time)")
 
     # ---- auto-resume ----------------------------------------------------
     start_step = int(state.step)
@@ -105,6 +138,37 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
             state = TrainState(**state)
             start_step = int(jax.device_get(state.step))
 
+    # ---- re-establish an async refresh that was in flight ---------------
+    refresher: Optional[AsyncRefresher] = None
+    pending_swap: Optional[int] = None
+    use_async = (gen_fit_fn is not None and cfg.gen_async
+                 and cfg.gen_swap_delay > 0)
+    if use_async:
+        refresher = AsyncRefresher(gen_fit_fn)
+        s_sub = cfg.last_submit_before(start_step)
+        if (s_sub is not None
+                and start_step <= s_sub + cfg.gen_swap_delay
+                and s_sub + cfg.gen_swap_delay < cfg.total_steps):
+            # Resumed inside a (submit, swap] window: replay the fit from
+            # the persisted submit-time snapshot. The fit is deterministic
+            # in (state, config), so the swap installs bit-identical
+            # parameters at the recorded step.
+            snap_state = state
+            if (cfg.checkpoint_dir
+                    and snapshot_path_exists(cfg.checkpoint_dir, s_sub)):
+                snap = load_snapshot(cfg.checkpoint_dir, s_sub,
+                                     state.as_pytree())
+                snap_state = TrainState(**snap)
+            refresher.submit(snap_state, s_sub)
+            pending_swap = s_sub + cfg.gen_swap_delay
+
+    # Consumed gensnap artifacts are dropped only once a *durable*
+    # checkpoint from beyond their swap step exists: a resume always loads
+    # the latest checkpoint, and any checkpoint labeled <= swap_step
+    # re-enters the replay window and needs the snapshot (a hard kill
+    # right after the swap must not lose the replay source).
+    snaps_to_drop: List[tuple] = []
+
     def maybe_checkpoint(step, force=False):
         if not cfg.checkpoint_dir:
             return
@@ -112,17 +176,46 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                      and step % cfg.checkpoint_every == 0 and step > 0):
             save_checkpoint(cfg.checkpoint_dir, step, state.as_pytree(),
                             keep=cfg.keep_checkpoints)
+            for s_sub, s_swap in list(snaps_to_drop):
+                if step > s_swap:
+                    drop_snapshot(cfg.checkpoint_dir, s_sub)
+                    snaps_to_drop.remove((s_sub, s_swap))
 
     for step in range(start_step, cfg.total_steps):
         # -- generator warmup / refresh (the paper's Step 1) --
         if gen_fit_fn is not None:
-            due = (step == cfg.gen_warmup_steps
-                   or (cfg.gen_refresh_steps
-                       and step > cfg.gen_warmup_steps
-                       and (step - cfg.gen_warmup_steps)
-                       % cfg.gen_refresh_steps == 0))
-            if due:
-                state = state._replace(head_state=gen_fit_fn(state))
+            if pending_swap is not None and step == pending_swap:
+                # Recorded swap point: install the background fit (blocks
+                # only if the fit is still running — by construction the
+                # step is config-determined, never timing-determined).
+                head, s_sub = refresher.result()
+                state = state._replace(
+                    head_state=head,
+                    gen_fit_step=jnp.asarray(s_sub, jnp.int32))
+                pending_swap = None
+                history.setdefault("gen_swap_steps", []).append(step)
+                if cfg.checkpoint_dir:
+                    snaps_to_drop.append((s_sub, step))
+            if cfg.gen_due(step):
+                # An async fit whose swap step cannot land inside the run
+                # would never be installed — fit blocking instead (still a
+                # pure function of the config, so resume stays exact).
+                if use_async and step + cfg.gen_swap_delay < cfg.total_steps:
+                    if refresher.in_flight:
+                        raise RuntimeError(
+                            f"generator refresh submitted at step {step} "
+                            f"while one is in flight")
+                    if cfg.checkpoint_dir:
+                        save_snapshot(cfg.checkpoint_dir, step,
+                                      state.as_pytree())
+                    refresher.submit(state, step)
+                    pending_swap = step + cfg.gen_swap_delay
+                    history.setdefault("gen_submit_steps", []).append(step)
+                else:
+                    state = state._replace(
+                        head_state=gen_fit_fn(state),
+                        gen_fit_step=jnp.asarray(step, jnp.int32))
+                    history.setdefault("gen_swap_steps", []).append(step)
 
         t0 = time.perf_counter()
         batch = batch_fn(step)

@@ -15,6 +15,10 @@ class TrainState(NamedTuple):
     params: Any
     opt_state: Any
     head_state: LMHeadState
+    # Step at which the current generator was (re)fitted; -1 before the
+    # first fit. Checkpointed so a resumed run knows which refresh window
+    # it is in (repro.genfit.refresh) and swaps are replayed bit-exactly.
+    gen_fit_step: jax.Array
 
     def as_pytree(self):
         return self._asdict()

@@ -53,7 +53,8 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
         metrics.update(opt_metrics)
         return TrainState(step=state.step + 1, params=new_params,
                           opt_state=new_opt,
-                          head_state=state.head_state), metrics
+                          head_state=state.head_state,
+                          gen_fit_step=state.gen_fit_step), metrics
 
     return train_step
 
@@ -224,4 +225,5 @@ def init_train_state(rng, cfg: ModelConfig, opt_cfg: OptimizerConfig,
         step=jnp.zeros((), jnp.int32),
         params=params,
         opt_state=init_opt_state(opt_cfg, params),
-        head_state=lm_head.default_head_state(k_h, cfg, head_kind))
+        head_state=lm_head.default_head_state(k_h, cfg, head_kind),
+        gen_fit_step=jnp.full((), -1, jnp.int32))

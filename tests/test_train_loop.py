@@ -98,3 +98,142 @@ def test_generator_refresh_changes_head_state():
     after = state.head_state.gen.tree.w
     assert before.shape == after.shape
     assert not np.allclose(np.asarray(before), np.asarray(after))
+
+
+def _gen_fit_fn(cfg):
+    """Deterministic snapshot fit (levelwise first, warm-start after)."""
+    from repro.train.generator_fit import make_gen_fit_fn
+    make = lm_batch_fn(cfg.vocab_size, global_batch=4, seq_len=16, seed=9)
+    batch_fn = lambda s: {k: jnp.asarray(v)                  # noqa: E731
+                          for k, v in make(s).items()}
+    return make_gen_fit_fn(cfg, batch_fn, kind="adversarial_ns",
+                           max_tokens=128, n_batches=2)
+
+
+def test_async_refresh_swaps_at_recorded_step(tmp_path):
+    """Async refresh: the loop keeps stepping between submit and swap, the
+    head state changes exactly at the recorded swap step, and
+    TrainState.gen_fit_step records the submit step."""
+    cfg, state, step_fn, batch_fn = _setup()
+    gen_fit = _gen_fit_fn(cfg)
+    seen = {}
+
+    def on_step(step, metrics):
+        pass
+
+    loop = LoopConfig(total_steps=12, gen_warmup_steps=3,
+                      gen_refresh_steps=6, gen_async=True,
+                      gen_swap_delay=2,
+                      checkpoint_dir=str(tmp_path / "ck"),
+                      checkpoint_every=4)
+    state, hist = run_loop(state, step_fn, batch_fn, loop,
+                           jax.random.PRNGKey(0), gen_fit_fn=gen_fit,
+                           on_step=on_step)
+    assert hist["gen_submit_steps"] == [3, 9]
+    assert hist["gen_swap_steps"] == [5, 11]
+    assert int(jax.device_get(state.gen_fit_step)) == 9
+    # every step ran: no stall window
+    assert hist["step"] == list(range(12))
+
+
+def test_async_refresh_resume_bit_exact(tmp_path):
+    """Preempt with an async refresh in flight (inside the submit→swap
+    window); the resumed run must re-establish the fit from the persisted
+    snapshot and end bit-identical to an uninterrupted run."""
+    def build(tag):
+        cfg, state, step_fn, batch_fn = _setup(seed=3)
+        loop = LoopConfig(total_steps=14, checkpoint_every=3,
+                          checkpoint_dir=str(tmp_path / tag),
+                          gen_warmup_steps=4, gen_refresh_steps=0,
+                          gen_async=True, gen_swap_delay=4)
+        return cfg, state, step_fn, batch_fn, loop
+
+    # Run A: uninterrupted (submit at 4, swap recorded at 8).
+    cfg, state_a, step_fn, batch_fn, loop_a = build("a")
+    gen_fit = _gen_fit_fn(cfg)
+    state_a, hist_a = run_loop(state_a, step_fn, batch_fn, loop_a,
+                               jax.random.PRNGKey(7), gen_fit_fn=gen_fit)
+    assert hist_a["gen_swap_steps"] == [8]
+
+    # Run B: preempt at step 6 — after the submit (4), before the swap (8).
+    cfg, state_b, step_fn, batch_fn, loop_b = build("b")
+    pre = Preemption()
+
+    def trigger(step, metrics):
+        if step == 5:
+            pre.trigger()
+
+    state_b1, hist_b = run_loop(state_b, step_fn, batch_fn, loop_b,
+                                jax.random.PRNGKey(7), gen_fit_fn=gen_fit,
+                                preemption=pre, on_step=trigger)
+    assert hist_b["preempted_at"] == 6
+    assert "gen_swap_steps" not in hist_b   # swap had not happened yet
+
+    # Fresh process resumes from the checkpoint: the in-flight fit must be
+    # replayed from the gensnap artifact and swapped at step 8.
+    _, state_b2, _, _ = _setup(seed=3)
+    state_b2, hist_b2 = run_loop(state_b2, step_fn, batch_fn, loop_b,
+                                 jax.random.PRNGKey(7), gen_fit_fn=gen_fit)
+    assert hist_b2["gen_swap_steps"] == [8]
+    for a, b in zip(jax.tree.leaves(state_a.as_pytree()),
+                    jax.tree.leaves(state_b2.as_pytree())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_refresh_does_not_stall_steps():
+    """A slow background fit must not spike the step time above the
+    straggler threshold while it is in flight (the loop blocks only at
+    the recorded swap step)."""
+    import time as _time
+    cfg, state, step_fn, batch_fn = _setup()
+    base_fit = _gen_fit_fn(cfg)
+
+    def slow_fit(st):
+        _time.sleep(1.0)
+        return base_fit(st)
+
+    loop = LoopConfig(total_steps=10, gen_warmup_steps=2,
+                      gen_refresh_steps=0, gen_async=True,
+                      gen_swap_delay=7)
+    times = {}
+
+    def on_step(step, metrics):
+        times[step] = metrics["step_time"]
+
+    state, hist = run_loop(state, step_fn, batch_fn, loop,
+                           jax.random.PRNGKey(1), gen_fit_fn=slow_fit,
+                           on_step=on_step)
+    assert hist["gen_swap_steps"] == [9]
+    # Steps 3..8 overlap the 1s background fit; none may absorb it.
+    in_flight = [times[s] for s in range(3, 9)]
+    assert max(in_flight) < 0.9, in_flight
+
+
+def test_collect_features_cap_and_ragged_batches():
+    """collect_features stops requesting batches at the cap, and a ragged
+    final batch is padded to the traced shape — its valid rows match an
+    unpadded forward bit-for-bit (causal models ignore trailing pad)."""
+    import itertools
+
+    from repro.train.generator_fit import collect_features
+    cfg, state, _, _ = _setup()
+    make = lm_batch_fn(cfg.vocab_size, global_batch=4, seq_len=16, seed=2)
+    b0 = {k: np.asarray(v) for k, v in make(0).items()}
+    ragged = {k: v[:2] for k, v in b0.items()}      # smaller final batch
+
+    h, y = collect_features(state.params, cfg, [b0, ragged],
+                            max_tokens=80)
+    assert h.shape == (80, cfg.d_model) and y.shape == (80,)
+    h_full, _ = collect_features(state.params, cfg, [b0], max_tokens=64)
+    np.testing.assert_array_equal(h[:64], h_full)
+    h_rag, y_rag = collect_features(state.params, cfg, [ragged],
+                                    max_tokens=32)
+    np.testing.assert_array_equal(h[64:80], h_rag[:16])
+    np.testing.assert_array_equal(y[64:80], y_rag[:16])
+
+    # An endless stream must stop at the cap, truncating mid-batch.
+    stream = ({k: np.asarray(v) for k, v in make(i).items()}
+              for i in itertools.count())
+    h_cap, y_cap = collect_features(state.params, cfg, stream,
+                                    max_tokens=100)
+    assert h_cap.shape == (100, cfg.d_model) and y_cap.shape == (100,)
