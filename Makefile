@@ -11,13 +11,18 @@
 #   make bench-tree-fit - generator fitting at scale: sequential oracle vs
 #                       level-parallel vs warm-start refresh + held-out
 #                       log-likelihood (writes BENCH_tree_fit.json)
+#   make bench-heads  - head TRAIN-step cost vs C: dense O(C·K) autodiff
+#                       update vs sparse O(B·K·n_neg) touched-row update
+#                       (writes BENCH_heads.json)
+#   make bench-smoke  - CI guard: one tiny C per benchmark, schema
+#                       asserted, no timings (benchmark scripts can't rot)
 #   make bench        - the full benchmark harness CSV
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-serve bench-serve bench-engine \
-        bench-tree-fit bench
+        bench-tree-fit bench-heads bench-smoke bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -36,6 +41,12 @@ bench-engine:
 
 bench-tree-fit:
 	$(PYTHON) -m benchmarks.bench_tree_fit
+
+bench-heads:
+	$(PYTHON) -m benchmarks.bench_heads
+
+bench-smoke:
+	$(PYTHON) -m benchmarks.smoke
 
 bench:
 	$(PYTHON) -m benchmarks.run

@@ -4,9 +4,20 @@ The paper's central cost claim (§1/§2): softmax gradients cost O(K·C);
 negative sampling costs O(K) plus O(k·log C) for adversarial sample
 generation. This sweep measures wall-time per step for each head as C grows
 — the table behind the 'order of magnitude' speedup (paper Table 1 scale).
+
+``run_train_bench`` is the *training-step* sweep (DESIGN.md §8): a full
+loss → gradient → Adagrad step, dense autodiff vs the sparse touched-row
+path, C up to 2M. The dense path pays O(C·K) three times over (the
+scatter-add gradient buffer, the optimizer sweep, the accumulator sweep);
+the sparse path is O(B·K·n_neg) end to end. Writes tracked
+``BENCH_heads.json`` (env ``BENCH_HEADS_JSON`` overrides) via
+``make bench-heads``.
 """
 from __future__ import annotations
 
+import functools
+import json
+import os
 import time
 
 import jax
@@ -15,6 +26,7 @@ import jax.numpy as jnp
 from repro.core import heads as heads_lib
 from repro.core import tree as tree_lib
 from repro.core.heads import Generator, HeadConfig
+from repro.optim import OptimizerConfig, apply_updates, init_opt_state
 
 
 def _time_fn(fn, *args, iters=20, warmup=3):
@@ -67,8 +79,140 @@ def run(csv_rows: list, c_values=(1024, 4096, 16384, 65536),
     return csv_rows
 
 
+def _time_steps(step_fn, make_state0, iters, warmup=5):
+    """Time a (params, opt, rng) -> (params, opt) step; returns us/step.
+
+    ``step_fn`` donates (params, opt) — the production calling convention
+    (repro.launch.train): without donation XLA must copy the full (C, K)
+    param + accumulator buffers to build the functional scatter output,
+    which would bill an O(C·K) memcpy to the O(U·K) sparse update.
+    ``make_state0`` returns fresh buffers (the previous timing's state was
+    consumed by donation).
+    """
+    params, opt = make_state0()
+    for i in range(warmup):
+        params, opt = step_fn(params, opt, jax.random.PRNGKey(1000 + i))
+    jax.block_until_ready(params)
+    t0 = time.perf_counter()
+    for i in range(iters):
+        params, opt = step_fn(params, opt, jax.random.PRNGKey(i))
+    jax.block_until_ready(params)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run_train_bench(csv_rows: list,
+                    c_values=(8192, 65536, 524288, 2097152),
+                    batch=256, kdim=64, k_gen=16, n_neg=1,
+                    kind="adversarial_ns", iters=10, kernel_c=65536,
+                    json_path=None, write_json=True) -> dict:
+    """Full train-step sweep: dense vs sparse head update vs C.
+
+    Per C: loss → head gradient → Adagrad update, jitted end to end.
+    ``grad_bytes`` is the gradient-carrier footprint the optimizer sees —
+    (C·K + C)·4 dense vs the SparseRows (ids, dw, db) buffers. At
+    ``kernel_c`` the sparse step is also timed through the fused Pallas
+    kernel (interpret mode on CPU — correctness execution, not TPU
+    performance; the ref-vs-kernel wall-time ratio is recorded honestly).
+    Returns (and optionally writes) the BENCH_heads.json report.
+    """
+    opt_cfg = OptimizerConfig(name="adagrad", learning_rate=0.1)
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (batch, kdim))
+    xg = jax.random.normal(key, (batch, k_gen))
+    results = []
+
+    def setup(c):
+        y = jax.random.randint(key, (batch,), 0, c)
+        gen = Generator(tree=tree_lib.init_tree(key, c, k_gen, scale=0.1))
+        cfg = HeadConfig(num_labels=c, kind=kind, n_neg=n_neg)
+
+        def make_state0():
+            params = heads_lib.init_head_params(key, c, kdim)
+            return params, init_opt_state(opt_cfg, params)
+
+        return y, gen, cfg, make_state0
+
+    def make_step(cfg, gen, y, path):
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def step(p, opt, rng):
+            if path == "dense":
+                grads = jax.grad(lambda pp: heads_lib.head_loss(
+                    cfg, pp, gen, h, xg, y, rng)[0])(p)
+            else:
+                _, _, grads, _ = heads_lib.sparse_head_loss(
+                    cfg, p, gen, h, xg, y, rng,
+                    use_kernel=(path == "sparse_kernel"))
+            p2, opt2, _ = apply_updates(opt_cfg, p, grads, opt)
+            return p2, opt2
+        return step
+
+    t_slots = batch * (1 + n_neg)
+    sparse_bytes = 4 * (t_slots * kdim + 2 * t_slots)
+
+    # The sparse sweep runs as one pass BEFORE any dense step executes:
+    # the dense path churns multi-GB gradient/accumulator buffers at large
+    # C, and that allocator/page-cache pressure would otherwise bleed into
+    # the O(U·K) sparse timings (4x iters for the same reason — the step
+    # is cheap enough that one page-fault spike would dominate the mean).
+    for c in c_values:
+        y, gen, cfg, make_state0 = setup(c)
+        us_s = _time_steps(make_step(cfg, gen, y, "sparse"), make_state0,
+                           4 * iters)
+        results.append(dict(c=c, path="sparse", us_per_step=round(us_s, 1),
+                            grad_bytes=sparse_bytes))
+        csv_rows.append((f"head_train/sparse/C={c}", us_s,
+                         f"grad_bytes={sparse_bytes}"))
+
+    for c in c_values:
+        y, gen, cfg, make_state0 = setup(c)
+        n_iters = max(2, iters // 4) if c > 600_000 else iters
+        dense_bytes = 4 * (c * kdim + c)
+        us_d = _time_steps(make_step(cfg, gen, y, "dense"), make_state0,
+                           n_iters)
+        results.append(dict(c=c, path="dense", us_per_step=round(us_d, 1),
+                            grad_bytes=dense_bytes))
+        csv_rows.append((f"head_train/dense/C={c}", us_d,
+                         f"grad_bytes={dense_bytes}"))
+        if c == kernel_c:
+            us_k = _time_steps(make_step(cfg, gen, y, "sparse_kernel"),
+                               make_state0, max(2, iters // 2))
+            results.append(dict(
+                c=c, path="sparse_kernel", us_per_step=round(us_k, 1),
+                grad_bytes=sparse_bytes,
+                note="pallas interpret mode on CPU (correctness "
+                     "execution; per-row loads run in the interpreter)"))
+            csv_rows.append((f"head_train/sparse_kernel/C={c}", us_k,
+                             "interpret"))
+
+    def _us(path, c):
+        return next(r["us_per_step"] for r in results
+                    if r["path"] == path and r["c"] == c)
+
+    lo, hi = min(c_values), max(c_values)
+    report = {
+        "meta": dict(batch=batch, kdim=kdim, k_gen=k_gen, n_neg=n_neg,
+                     kind=kind, optimizer="adagrad",
+                     platform=jax.devices()[0].platform,
+                     device_count=jax.device_count()),
+        "train_step": results,
+        "growth": {
+            "c_lo": lo, "c_hi": hi,
+            "sparse": round(_us("sparse", hi) / _us("sparse", lo), 2),
+            "dense": round(_us("dense", hi) / _us("dense", lo), 2),
+        },
+    }
+    if write_json:     # reduced sweeps (benchmarks.run) must not clobber
+        path = json_path or os.environ.get("BENCH_HEADS_JSON",
+                                           "BENCH_heads.json")
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        csv_rows.append(("head_train/json", 0.0, path))
+    return report
+
+
 if __name__ == "__main__":
     rows = []
     run(rows)
+    run_train_bench(rows)
     for r in rows:
         print(",".join(str(x) for x in r))

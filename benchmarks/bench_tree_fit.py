@@ -117,23 +117,23 @@ def run(csv_rows: list, c_values=(1024, 8192, 65536), k: int = 16,
             (("seq", dt_seq), ("lvl", dt_lvl), ("sharded", dt_sh),
              ("refresh", dt_ref)) if dt is not None), flush=True)
 
+    blob = dict(config=dict(k=k, pts_per_label=pts_per_label,
+                            seed=seed,
+                            fit_config=dict(reg=cfg.reg,
+                                            max_alternations=cfg.
+                                            max_alternations,
+                                            max_newton=cfg.max_newton),
+                            note=("level-parallel times are "
+                                  "steady-state (post-jit); 2-CPU-"
+                                  "core container — the segment-"
+                                  "reduction formulation is "
+                                  "accelerator-shaped")),
+                points=points)
     if write_json:
-        blob = dict(config=dict(k=k, pts_per_label=pts_per_label,
-                                seed=seed,
-                                fit_config=dict(reg=cfg.reg,
-                                                max_alternations=cfg.
-                                                max_alternations,
-                                                max_newton=cfg.max_newton),
-                                note=("level-parallel times are "
-                                      "steady-state (post-jit); 2-CPU-"
-                                      "core container — the segment-"
-                                      "reduction formulation is "
-                                      "accelerator-shaped")),
-                    points=points)
         with open(JSON_PATH, "w") as f:
             json.dump(blob, f, indent=1)
         print(f"wrote {JSON_PATH}")
-    return csv_rows
+    return blob
 
 
 if __name__ == "__main__":

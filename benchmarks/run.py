@@ -1,7 +1,9 @@
 """Benchmark harness — one module per paper table/claim.
 
   bench_heads        — per-step gradient cost vs C     (paper §1/§2: O(KC)
-                       softmax vs O(K) negative sampling)
+                       softmax vs O(K) negative sampling) + the train-step
+                       dense-vs-sparse-update sweep (BENCH_heads.json via
+                       `make bench-heads`)
   bench_tree         — generator costs                 (paper §3: O(k log C))
   bench_convergence  — heads race, steps-to-accuracy   (paper Fig. 1)
   bench_snr          — eta-bar vs noise distribution   (paper Thm 2 / Eq. 15)
@@ -37,6 +39,10 @@ def main() -> None:
     if "heads" in wanted:
         from benchmarks import bench_heads
         bench_heads.run(rows)
+        # Reduced train-step sweep; no JSON so the tracked full-sweep
+        # BENCH_heads.json (from `make bench-heads`) survives.
+        bench_heads.run_train_bench(rows, c_values=(8192, 65536),
+                                    iters=5, write_json=False)
     if "tree" in wanted:
         from benchmarks import bench_tree
         bench_tree.run(rows)

@@ -1,0 +1,76 @@
+"""CI smoke for the benchmark scripts: one tiny C per JSON-emitting bench,
+schema assertions, NO timing assertions.
+
+Benchmarks rot silently: they are not imported by the test suite, so a
+refactor can break them and nobody notices until the next tracked run.
+``make bench-smoke`` (run in CI) executes each bench's entry point at the
+smallest size it supports with ``write_json=False`` (the tracked
+BENCH_*.json artifacts must never be clobbered by reduced sweeps) and
+asserts the *shape* of the report each would have written.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def _check(name: str, report: dict, required_keys, row_key: str,
+           row_fields):
+    assert isinstance(report, dict), name
+    missing = [k for k in required_keys if k not in report]
+    assert not missing, f"{name}: missing top-level keys {missing}"
+    rows = report[row_key]
+    assert isinstance(rows, list) and rows, f"{name}: empty {row_key}"
+    for row in rows:
+        gone = [f for f in row_fields if f not in row]
+        assert not gone, f"{name}: row {row} missing {gone}"
+    print(f"smoke: {name} OK ({len(rows)} rows)")
+
+
+def smoke_heads():
+    from benchmarks import bench_heads
+    report = bench_heads.run_train_bench(
+        [], c_values=(1024, 2048), batch=32, kdim=16, iters=2,
+        kernel_c=2048, write_json=False)
+    _check("bench_heads", report, ("meta", "train_step", "growth"),
+           "train_step", ("c", "path", "us_per_step", "grad_bytes"))
+    paths = {r["path"] for r in report["train_step"]}
+    assert paths == {"dense", "sparse", "sparse_kernel"}, paths
+    assert set(report["growth"]) >= {"sparse", "dense"}
+
+
+def smoke_engine():
+    from benchmarks import bench_engine
+    report = bench_engine.run([], c_values=(1024,), n_requests=4,
+                              write_json=False)
+    assert report["sweep"], "bench_engine: empty sweep"
+    for c, entry in report["sweep"].items():
+        for key in ("lockstep-dense", "engine-beam",
+                    "beam_vs_lockstep_dense_speedup", "lockstep_match",
+                    "paged-vs-monolithic"):
+            assert key in entry, f"bench_engine[{c}]: missing {key}"
+        assert entry["lockstep_match"], f"bench_engine[{c}]: mismatch"
+        assert "throughput_rps" in entry["lockstep-dense"]
+    print(f"smoke: bench_engine OK ({len(report['sweep'])} C values)")
+
+
+def smoke_tree_fit():
+    from benchmarks import bench_tree_fit
+    report = bench_tree_fit.run([], c_values=(256,), write_json=False)
+    _check("bench_tree_fit", report, ("config", "points"), "points",
+           ("C", "N", "fit_levelwise_s", "refresh_warm_s",
+            "ll_levelwise", "ll_seq"))
+
+
+def main():
+    wanted = set(sys.argv[1:]) or {"heads", "engine", "tree_fit"}
+    if "heads" in wanted:
+        smoke_heads()
+    if "engine" in wanted:
+        smoke_engine()
+    if "tree_fit" in wanted:
+        smoke_tree_fit()
+    print("bench smoke: all OK")
+
+
+if __name__ == "__main__":
+    main()

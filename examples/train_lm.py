@@ -54,6 +54,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--profile", default="demo", choices=PROFILES)
     ap.add_argument("--head", default="adversarial_ns")
+    ap.add_argument("--head-update", default="auto",
+                    choices=("auto", "dense", "sparse"),
+                    help="head-gradient path (DESIGN.md §8): sparse = "
+                         "O(B·K·n_neg) touched-row updates, independent "
+                         "of vocab size; dense = O(C·K) autodiff. auto "
+                         "picks sparse for sampled heads.")
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--gen-refresh", type=int, default=None,
                     help="refresh the generator every N steps "
@@ -77,7 +83,19 @@ def main():
     hcfg = lm_head.head_config(cfg, args.head, n_neg=1, reg=1e-4)
     opt = OptimizerConfig(name="adagrad", learning_rate=0.05, clip_norm=1.0)
     state = init_train_state(jax.random.PRNGKey(0), cfg, opt, args.head)
-    train_step = jax.jit(make_train_step(cfg, hcfg, opt))
+    from repro.train.step import resolve_head_update
+    head_update = resolve_head_update(args.head_update, args.head)
+    desc = ("O(B·K·n_neg) touched-row updates, independent of C"
+            if head_update == "sparse"
+            else "dense O(C·K) gradient + optimizer sweep")
+    print(f"head update: {head_update} ({desc})")
+    # Donate the state so sparse row scatters run in place (no (C, K)
+    # copy per step) — unsafe only with --gen-async, where a background
+    # fit still reads the submitted state while training keeps stepping.
+    donate = () if args.gen_async else (0,)
+    train_step = jax.jit(make_train_step(cfg, hcfg, opt,
+                                         head_update=head_update),
+                         donate_argnums=donate)
     eval_step = jax.jit(make_eval_step(cfg, hcfg))
 
     make = lm_batch_fn(cfg.vocab_size, p["batch"], p["seq"], seed=0)
@@ -129,6 +147,12 @@ def main():
                 f"  step {s:4d} loss={m['loss']:.4f} "
                 f"({m['step_time']*1e3:.0f} ms)"))
         print(f"stragglers flagged: {hist['stragglers']}")
+        times = hist.get("step_times", [])
+        if times:
+            tail = times[len(times) // 2:]       # skip compile/warmup half
+            print(f"step time ({head_update} head update): "
+                  f"{1e3 * sum(tail) / len(tail):.1f} ms "
+                  f"(median-half mean over {len(tail)} steps)")
         if fit_log:
             print(f"generator fits: {len(fit_log)} "
                   f"(first {fit_log[0]*1e3:.0f} ms full, refresh "

@@ -28,9 +28,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tree as tree_lib
+from repro.kernels.sampled_loss import SAMPLED_KINDS, loss_and_coeffs
+from repro.optim.sparse import SparseRows, accumulate_rows
 
-HEAD_KINDS = ("softmax", "uniform_ns", "freq_ns", "adversarial_ns", "nce",
-              "sampled_softmax", "ove", "augment_reduce")
+HEAD_KINDS = ("softmax",) + SAMPLED_KINDS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,84 +201,133 @@ def head_loss(cfg: HeadConfig, params: HeadParams, gen: Generator,
         metrics["pos_score"] = mean(pos)
         return loss, metrics
 
+    # Sampled strategies share one candidate layout (slot 0 = positive) and
+    # one objective definition: `kernels.sampled_loss.loss_and_coeffs` is
+    # the per-strategy math (Eq. 2/6 logistic, NCE, logQ sampled softmax,
+    # OVE, A&R), used here under autodiff for the dense gradient path and
+    # re-used coefficient-for-coefficient by the sparse path
+    # (:func:`sparse_head_loss`) and the fused Pallas kernel.
     y = y.astype(jnp.int32)
-    pos_scores = score_fn(params, h, y[..., None])[..., 0]        # (...)
+    ids, slot_logp, acc_hit = _sample_candidates(cfg, gen, x_gen, y, rng)
+    scores = score_fn(params, h, ids)                  # (..., 1 + n_neg)
+    loss_vec, _, xi = loss_and_coeffs(
+        scores, slot_logp, acc_hit, kind=cfg.kind,
+        num_labels=cfg.num_labels, reg=cfg.reg, softcap=0.0,
+        mask_accidental=cfg.mask_accidental)
+    loss = mean(loss_vec)
+    metrics.update(_sampled_metrics(cfg, xi, mean))
+    return loss, metrics
 
+
+def _sample_candidates(cfg: HeadConfig, gen: Generator, x_gen: jax.Array,
+                       y: jax.Array, rng: jax.Array):
+    """Candidate slots for a sampled strategy: ids (..., 1+n) with the
+    positive in slot 0, stop-grad noise log-probs per slot (zeros where the
+    strategy ignores them), and the accidental-hit mask."""
+    neg_ids, neg_logp = sample_negatives(cfg, gen, x_gen, rng, y.shape)
+    neg_ids = jax.lax.stop_gradient(neg_ids)
+    neg_logp = jax.lax.stop_gradient(neg_logp)
+    need_pos_logp = (cfg.kind in ("nce", "sampled_softmax")
+                     or (cfg.reg and cfg.kind in ("uniform_ns", "freq_ns",
+                                                  "adversarial_ns")))
+    pos_logp = (jax.lax.stop_gradient(noise_log_prob(cfg, gen, x_gen, y))
+                if need_pos_logp else jnp.zeros(y.shape, jnp.float32))
+    ids = jnp.concatenate([y[..., None], neg_ids], axis=-1)
+    slot_logp = jnp.concatenate([pos_logp[..., None], neg_logp], axis=-1)
+    acc_hit = jnp.concatenate(
+        [jnp.zeros(y.shape + (1,), bool), neg_ids == y[..., None]], axis=-1)
+    return ids, slot_logp, acc_hit
+
+
+def resolve_head_update(head_update: str, kind: str) -> str:
+    """'auto' → sparse for sampled heads, dense for the softmax baseline.
+
+    The single definition of the head-update policy — shared by the LM
+    train step (repro.train.step) and the linear-XC trainer
+    (repro.core.xc_train) so the two stacks cannot drift.
+    """
+    if head_update == "auto":
+        return "dense" if kind == "softmax" else "sparse"
+    assert head_update in ("dense", "sparse"), head_update
+    if head_update == "sparse":
+        assert kind != "softmax", "softmax has no sampled candidate set"
+    return head_update
+
+
+def _sampled_metrics(cfg: HeadConfig, xi: jax.Array, mean) -> dict:
+    metrics = {"pos_score": mean(xi[..., 0])}
     if cfg.kind in ("uniform_ns", "freq_ns", "adversarial_ns", "nce"):
-        neg_ids, neg_logp = sample_negatives(cfg, gen, x_gen, rng,
-                                             batch_shape)
-        neg_ids = jax.lax.stop_gradient(neg_ids)
-        neg_logp = jax.lax.stop_gradient(neg_logp)
-        neg_scores = score_fn(params, h, neg_ids)                 # (..., n)
-        if cfg.kind == "nce":
-            # NCE: discriminator sees xi - log(nu * p_n); learns full scores.
-            ln_nu = jnp.log(float(cfg.n_neg))
-            pos_logp = jax.lax.stop_gradient(
-                noise_log_prob(cfg, gen, x_gen, y))
-            u_pos = pos_scores - pos_logp - ln_nu
-            u_neg = neg_scores - neg_logp - ln_nu
-            loss = mean(-jax.nn.log_sigmoid(u_pos)
-                        - jnp.sum(jax.nn.log_sigmoid(-u_neg), axis=-1))
-        else:
-            # Eq. 2 (n_neg-sample generalization; paper: n_neg = 1).
-            loss = mean(-jax.nn.log_sigmoid(pos_scores)
-                        - jnp.mean(jax.nn.log_sigmoid(-neg_scores), axis=-1))
-            if cfg.reg:
-                # Eq. 6: regularize the *unbiased* scores xi + log p_n.
-                pos_logp = jax.lax.stop_gradient(
-                    noise_log_prob(cfg, gen, x_gen, y))
-                r = ((pos_scores + pos_logp) ** 2
-                     + jnp.mean((neg_scores + neg_logp) ** 2, axis=-1))
-                loss = loss + cfg.reg * mean(r)
-        metrics["pos_score"] = mean(pos_scores)
-        metrics["neg_score"] = mean(jnp.mean(neg_scores, axis=-1))
-        return loss, metrics
+        metrics["neg_score"] = mean(jnp.mean(xi[..., 1:], axis=-1))
+    return metrics
 
-    if cfg.kind == "sampled_softmax":
-        neg_ids, neg_logp = sample_negatives(cfg, gen, x_gen, rng,
-                                             batch_shape)
-        neg_ids = jax.lax.stop_gradient(neg_ids)
-        neg_logp = jax.lax.stop_gradient(neg_logp)
-        pos_logp = jax.lax.stop_gradient(noise_log_prob(cfg, gen, x_gen, y))
-        neg_scores = score_fn(params, h, neg_ids)
-        # logQ-corrected logits over the candidate set {y} U negatives.
-        cand = jnp.concatenate([(pos_scores - pos_logp)[..., None],
-                                neg_scores - neg_logp], axis=-1)
-        if cfg.mask_accidental:
-            hit = (neg_ids == y[..., None])
-            cand = cand.at[..., 1:].set(
-                jnp.where(hit, -jnp.inf, cand[..., 1:]))
-        loss = mean(jax.nn.logsumexp(cand, axis=-1) - cand[..., 0])
-        metrics["pos_score"] = mean(pos_scores)
-        return loss, metrics
 
-    if cfg.kind == "ove":
-        # One-vs-Each bound: -log p(y) <= sum_{y' != y} softplus(xi_y'-xi_y);
-        # stochastic estimate with n uniform negatives scaled by (C-1)/n.
-        neg_ids, _ = sample_negatives(cfg, gen, x_gen, rng, batch_shape)
-        neg_ids = jax.lax.stop_gradient(neg_ids)
-        neg_scores = score_fn(params, h, neg_ids)
-        scale = (cfg.num_labels - 1) / cfg.n_neg
-        pair = jax.nn.softplus(neg_scores - pos_scores[..., None])
-        pair = pair * (neg_ids != y[..., None])   # exclude accidental y'=y
-        loss = mean(scale * jnp.mean(pair, axis=-1))
-        metrics["pos_score"] = mean(pos_scores)
-        return loss, metrics
+def sparse_head_loss(cfg: HeadConfig, params: HeadParams, gen: Generator,
+                     h: jax.Array, x_gen: jax.Array, y: jax.Array,
+                     rng: jax.Array, mask: Optional[jax.Array] = None,
+                     softcap: float = 0.0, use_kernel: bool = False):
+    """Sampled-head loss with O(B·K·n_neg) analytic gradients — no dense
+    (C, K) buffer anywhere (DESIGN.md §8).
 
-    if cfg.kind == "augment_reduce":
-        # A&R softmax bound with a stochastic 'reduce' step: importance-
-        # sampled partition estimate log(e^{xi_y} + (C-1) mean_j e^{xi_j}).
-        neg_ids, _ = sample_negatives(cfg, gen, x_gen, rng, batch_shape)
-        neg_ids = jax.lax.stop_gradient(neg_ids)
-        neg_scores = score_fn(params, h, neg_ids)
-        ln_rest = (jax.nn.logsumexp(neg_scores, axis=-1)
-                   + jnp.log((cfg.num_labels - 1) / cfg.n_neg))
-        logz = jnp.logaddexp(pos_scores, ln_rest)
-        loss = mean(logz - pos_scores)
-        metrics["pos_score"] = mean(pos_scores)
-        return loss, metrics
+    Same sampling/rng stream, objective, and metrics as :func:`head_loss`
+    (the equivalence is pinned by tests/test_sparse_update.py), but instead
+    of relying on autodiff — whose backward through the candidate gather
+    scatter-adds into a zero-initialized dense (C, K) array — the per-slot
+    score gradients ``coeff`` come from the shared closed forms
+    (`kernels.sampled_loss.loss_and_coeffs`), and the head gradient is
+    assembled as deduplicated per-unique-row sums of the rank-1 terms
+    ``coeff · h`` (``repro.optim.sparse.accumulate_rows``).
 
-    raise ValueError(cfg.kind)
+    Returns ``(loss, metrics, SparseRows, dh)``: loss/metrics as
+    :func:`head_loss`; ``SparseRows`` the head gradient over touched rows
+    (drop-in leaf for ``optim.apply_updates``); ``dh`` = dL/dh for the
+    trunk backward. ``softcap`` applies the final-logit softcap (its chain
+    rule is folded into ``coeff``, so the gradients stay exact);
+    ``use_kernel`` routes the gather→loss→coefficient chain through the
+    fused Pallas kernel (``ops.sampled_head_loss``).
+    """
+    assert cfg.kind != "softmax", "softmax has no sampled candidate set"
+    batch_shape = y.shape
+    if mask is None:
+        mask = jnp.ones(batch_shape, jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+
+    y = y.astype(jnp.int32)
+    ids, slot_logp, acc_hit = _sample_candidates(cfg, gen, x_gen, y, rng)
+    m = ids.shape[-1]
+    kdim = h.shape[-1]
+    h2 = h.reshape(-1, kdim)
+    ids2 = ids.reshape(-1, m)
+
+    if use_kernel:
+        from repro.kernels import ops
+        loss_vec, coeff, xi, dh2 = ops.sampled_head_loss(
+            params.w, params.b, h2, ids2, slot_logp.reshape(-1, m),
+            kind=cfg.kind, num_labels=cfg.num_labels, reg=cfg.reg,
+            softcap=softcap, mask_accidental=cfg.mask_accidental)
+    else:
+        scores = candidate_scores(params, h2, ids2)
+        loss_vec, coeff, xi = loss_and_coeffs(
+            scores, slot_logp.reshape(-1, m), acc_hit.reshape(-1, m),
+            kind=cfg.kind, num_labels=cfg.num_labels, reg=cfg.reg,
+            softcap=softcap, mask_accidental=cfg.mask_accidental)
+        dh2 = jnp.einsum("tn,tnk->tk", coeff,
+                         params.w[ids2].astype(jnp.float32))
+
+    wmask = (mask.reshape(-1) / denom).astype(jnp.float32)
+    loss = jnp.sum(loss_vec * wmask)
+    coeff = coeff * wmask[:, None]
+
+    def mean(v):
+        return jnp.sum(v.reshape(batch_shape) * mask) / denom
+
+    metrics = _sampled_metrics(cfg, xi.reshape(batch_shape + (m,)), mean)
+    grads = accumulate_rows(
+        ids2.reshape(-1), coeff.reshape(-1),
+        jnp.broadcast_to(h2[:, None, :], h2.shape[:1] + (m, kdim)
+                         ).reshape(-1, kdim),
+        num_rows=params.w.shape[0])
+    dh = (dh2 * wmask[:, None]).reshape(h.shape).astype(jnp.float32)
+    return loss, metrics, grads, dh
 
 
 # ---------------------------------------------------------------------------

@@ -8,6 +8,7 @@ comparing at one shared rho mis-ranks the methods in either direction.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -15,41 +16,59 @@ import jax.numpy as jnp
 
 from repro.core import heads as heads_lib
 from repro.core.heads import Generator, HeadConfig
+from repro.optim import OptimizerConfig, apply_updates, init_opt_state
 
 
 def train_linear_head(cfg: HeadConfig, gen: Generator, x, xg, y,
                       lr: float, steps: int, seed: int = 0,
                       batch_size: int = 256,
-                      callback=None):
+                      callback=None, head_update: str = "auto"):
     """Minibatch Adagrad on the head loss; returns trained params.
 
     Minibatching matters for fidelity: with full-batch steps every label
     receives uniform negatives each step and the SNR gap the paper exploits
     collapses. The paper's regime is C >> batch*n_neg coverage per step.
-    ``callback(step, params)`` is invoked every 10 steps if given.
+    ``callback(step, params)`` is invoked every 10 steps if given; consume
+    ``params`` synchronously (e.g. ``float(acc_fn(params))``) — the step
+    donates its buffers, so a retained reference is invalidated by the
+    next training step and later reads raise.
+
+    ``head_update`` (DESIGN.md §8): ``sparse`` (default for sampled heads)
+    computes the analytic per-touched-row gradient and applies O(U·K)
+    Adagrad row updates via ``optim.apply_updates`` — per-step cost
+    independent of ``cfg.num_labels``; ``dense`` is the O(C·K) autodiff
+    path (and the only option for `softmax`). Both run the same Adagrad
+    math, so the trained params match on every touched row.
     """
+    opt_cfg = OptimizerConfig(name="adagrad", learning_rate=lr, eps=1e-8)
     params = heads_lib.init_head_params(jax.random.PRNGKey(seed),
                                         cfg.num_labels, x.shape[-1])
-    accum = jax.tree.map(jnp.zeros_like, params)
+    opt_state = init_opt_state(opt_cfg, params)
     n = x.shape[0]
+    head_update = heads_lib.resolve_head_update(head_update, cfg.kind)
 
-    @jax.jit
-    def step(p, acc, key):
+    # Donation lets the sparse path's row scatters update the (C, K)
+    # param/accumulator buffers in place — the step is O(U·K), not an
+    # O(C·K) functional copy. (params, opt_state) thread linearly here.
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(p, opt, key):
         k_idx, k_neg = jax.random.split(key)
         idx = jax.random.randint(k_idx, (batch_size,), 0, n)
         xb, xgb, yb = x[idx], xg[idx], y[idx]
-        loss, g = jax.value_and_grad(
-            lambda pp: heads_lib.head_loss(cfg, pp, gen, xb, xgb, yb,
-                                           k_neg)[0])(p)
-        acc = jax.tree.map(lambda a, gg: a + gg * gg, acc, g)
-        p = jax.tree.map(
-            lambda a, gg, ac: a - lr * gg / (jnp.sqrt(ac) + 1e-8),
-            p, g, acc)
-        return p, acc, loss
+        if head_update == "sparse":
+            loss, _, grads, _ = heads_lib.sparse_head_loss(
+                cfg, p, gen, xb, xgb, yb, k_neg)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda pp: heads_lib.head_loss(cfg, pp, gen, xb, xgb, yb,
+                                               k_neg)[0])(p)
+        p, opt, _ = apply_updates(opt_cfg, p, grads, opt)
+        return p, opt, loss
 
     base = jax.random.PRNGKey(seed + 1)
     for s in range(steps):
-        params, accum, _ = step(params, accum, jax.random.fold_in(base, s))
+        params, opt_state, _ = step(params, opt_state,
+                                    jax.random.fold_in(base, s))
         if callback is not None and (s + 1) % 10 == 0:
             callback(s + 1, params)
     return params

@@ -64,3 +64,23 @@ def gather_scores_ref(w, b, h, ids):
     return (jnp.einsum("tnk,tk->tn", rows.astype(jnp.float32),
                        h.astype(jnp.float32))
             + b[ids].astype(jnp.float32))
+
+
+def sampled_head_loss_ref(w, b, h, ids, slot_logp, *, kind: str,
+                          num_labels: int, reg: float = 0.0,
+                          softcap: float = 0.0, mask_accidental: bool = True):
+    """The fused sampled-loss chain, unfused: gather (materializes the
+    (T, m, K) rows) → einsum → per-token loss/coefficients → second gather
+    for dh. Same contract as ``sampled_loss.sampled_head_loss``:
+    (loss_vec (T,), coeff (T,m), xi (T,m), dh (T,K)) fp32; slot 0 is the
+    positive."""
+    from repro.kernels.sampled_loss import loss_and_coeffs
+
+    scores = gather_scores_ref(w, b, h, ids)
+    acc_hit = ids == ids[:, :1]
+    acc_hit = acc_hit.at[:, 0].set(False)
+    loss, coeff, xi = loss_and_coeffs(
+        scores, slot_logp, acc_hit, kind=kind, num_labels=num_labels,
+        reg=reg, softcap=softcap, mask_accidental=mask_accidental)
+    dh = jnp.einsum("tn,tnk->tk", coeff, w[ids].astype(jnp.float32))
+    return loss, coeff, xi, dh

@@ -49,6 +49,15 @@ def main():
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--reg", type=float, default=1e-4)
     ap.add_argument("--n-neg", type=int, default=1)
+    ap.add_argument("--head-update", default="auto",
+                    choices=("auto", "dense", "sparse"),
+                    help="head-gradient path (DESIGN.md §8): sparse = "
+                         "O(B·K·n_neg) touched-row updates (default for "
+                         "sampled heads), dense = O(C·K) autodiff "
+                         "(default/required for softmax)")
+    ap.add_argument("--head-kernel", action="store_true",
+                    help="route the sparse head loss through the fused "
+                         "Pallas sampled_head_loss kernel")
     ap.add_argument("--optimizer", default="adagrad")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--model-axis", type=int, default=1)
@@ -77,9 +86,22 @@ def main():
     batch_abs = jax.eval_shape(lambda: {k: jnp.asarray(v)
                                         for k, v in make(0).items()})
     batch_sh = batch_shardings(cfg, mesh, batch_abs)
-    train_step = jax.jit(make_train_step(cfg, hcfg, opt),
+    # Sparse head updates run shard-local against the vocab-sharded head
+    # (each model shard applies only the rows it owns — no all-gather).
+    # Donating the TrainState lets XLA scatter the touched rows in place
+    # instead of copying the (C, K) param/accumulator buffers to build the
+    # functional update — without it the O(U·K) sparse step pays an
+    # O(C·K) memcpy. Not safe with --gen-async: the background fit reads
+    # the submitted state while training keeps stepping (donation would
+    # invalidate its buffers mid-fit).
+    donate = () if args.gen_async else (0,)
+    train_step = jax.jit(make_train_step(cfg, hcfg, opt,
+                                         head_update=args.head_update,
+                                         head_kernel=args.head_kernel,
+                                         mesh=mesh),
                          in_shardings=(state_sh, batch_sh, None),
-                         out_shardings=(state_sh, None))
+                         out_shardings=(state_sh, None),
+                         donate_argnums=donate)
 
     def batch_fn(step):
         return jax.device_put({k: jnp.asarray(v)

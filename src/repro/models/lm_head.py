@@ -123,6 +123,21 @@ def lm_head_loss(cfg: ModelConfig, hcfg: HeadConfig, params: HeadParams,
                                rng, score_fn=score_fn, mask=mask)
 
 
+def lm_sparse_head_loss(cfg: ModelConfig, hcfg: HeadConfig,
+                        params: HeadParams, state: LMHeadState,
+                        h: jax.Array, labels: jax.Array, rng: jax.Array,
+                        mask: Optional[jax.Array] = None,
+                        use_kernel: bool = False):
+    """Sampled-head loss with O(B·K·n_neg) analytic gradients (DESIGN.md
+    §8): same loss/metrics stream as :func:`lm_head_loss` (softcap folded
+    into the coefficients), plus the deduped ``SparseRows`` head gradient
+    and the trunk cotangent ``dh``. Returns (loss, metrics, sparse, dh)."""
+    x_gen = gen_features(state, h)
+    return heads_lib.sparse_head_loss(
+        hcfg, params, state.gen, h, x_gen, labels.astype(jnp.int32), rng,
+        mask=mask, softcap=cfg.final_logit_softcap, use_kernel=use_kernel)
+
+
 def lm_predictive_topk(cfg: ModelConfig, hcfg: HeadConfig,
                        params: HeadParams, state: LMHeadState, h: jax.Array,
                        topk: int, beam: Optional[int] = None,

@@ -3,8 +3,9 @@ from repro.optim.compression import (EFState, compress_with_error_feedback,
 from repro.optim.optimizers import (OptimizerConfig, OptState, apply_updates,
                                     clip_by_global_norm, global_norm,
                                     init_opt_state, schedule)
+from repro.optim.sparse import SparseRows, accumulate_rows
 
 __all__ = ["EFState", "compress_with_error_feedback", "decompress",
            "init_ef_state", "OptimizerConfig", "OptState", "apply_updates",
            "clip_by_global_norm", "global_norm", "init_opt_state",
-           "schedule"]
+           "schedule", "SparseRows", "accumulate_rows"]

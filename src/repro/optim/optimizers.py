@@ -1,6 +1,17 @@
 """Optimizers (pure-jax, optax-free): Adagrad (paper §5), AdamW, global-norm
 clipping, LR schedules. State is a pytree mirroring params, so it inherits
 param sharding under pjit (ZeRO-style optimizer-state sharding for free).
+
+Gradient pytrees may carry :class:`repro.optim.sparse.SparseRows` leaves in
+place of a ``{"w": (C, K), "b": (C,)}`` subtree (the sampled-head path,
+DESIGN.md §8). Those are applied as O(U·K) row updates — gather the touched
+rows of param + accumulator state, run the *same* per-leaf update math the
+dense path uses, scatter back — so Adagrad/SGD match the dense update
+exactly on touched rows (untouched rows have zero gradient, hence zero
+dense update) while AdamW gets the standard lazy-row treatment (momentum
+decay and weight decay are applied only when a row is touched). Global-norm
+clipping accounts for the sparse leaves' true norm (rows are deduped, so
+their sum of squares equals the dense gradient's).
 """
 from __future__ import annotations
 
@@ -9,6 +20,9 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.optim import sparse as sparse_lib
+from repro.optim.sparse import SparseRows
 
 Params = Any
 Grads = Any
@@ -63,61 +77,156 @@ def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
 
 
 def global_norm(grads: Grads) -> jax.Array:
-    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
-              for g in jax.tree.leaves(grads)]
-    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+    leaves = jax.tree.leaves(grads, is_leaf=sparse_lib.is_sparse)
+    sq = [sparse_lib.sq_norm(g) if sparse_lib.is_sparse(g)
+          else jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves]
+    return jnp.sqrt(jnp.sum(jnp.stack(sq)))
 
 
 def clip_by_global_norm(grads: Grads, max_norm: float
                         ) -> Tuple[Grads, jax.Array]:
     norm = global_norm(grads)
-    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
-    return jax.tree.map(lambda g: g * scale, grads), norm
+    scl = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    clipped = jax.tree.map(
+        lambda g: sparse_lib.scale(g, scl) if sparse_lib.is_sparse(g)
+        else g * scl, grads, is_leaf=sparse_lib.is_sparse)
+    return clipped, norm
+
+
+def _leaf_update(cfg: OptimizerConfig, lr, t, p, g, m, n):
+    """The per-leaf update rule, shared verbatim by the dense path (whole
+    arrays) and the sparse path (gathered rows): returns (p', m', n')."""
+    g32 = g.astype(jnp.float32)
+    if cfg.name == "adagrad":
+        n2 = n + jnp.square(g32)
+        u = -lr * g32 / (jnp.sqrt(n2) + cfg.eps)
+        m2 = None
+    elif cfg.name == "adamw":
+        m2 = cfg.beta1 * m + (1 - cfg.beta1) * g32
+        n2 = cfg.beta2 * n + (1 - cfg.beta2) * jnp.square(g32)
+        bc1 = 1.0 - cfg.beta1 ** t
+        bc2 = 1.0 - cfg.beta2 ** t
+        u = -lr * ((m2 / bc1) / (jnp.sqrt(n2 / bc2) + cfg.eps)
+                   + cfg.weight_decay * p.astype(jnp.float32))
+    elif cfg.name == "sgd":
+        u = -lr * g32
+        m2 = n2 = None
+    else:
+        raise ValueError(cfg.name)
+    return (p.astype(jnp.float32) + u).astype(p.dtype), m2, n2
+
+
+def _sparse_node_update(cfg: OptimizerConfig, lr, t, sparse: SparseRows,
+                        leaves, moments_m, moments_n, mesh=None):
+    """O(U·K) row update for the {w, b} pair touched by a SparseRows grad.
+
+    One gather → :func:`_leaf_update` on the rows → one scatter, covering
+    BOTH leaves and their accumulators in a single pass (under a mesh,
+    a single shard_map — repro.parallel.collectives.sharded_rows_update,
+    shard-local, no all-gather). Sentinel ids (== C, the dedupe fill)
+    clamp on the gather and drop on the scatter; their coefficients are
+    zero so they never contaminate state. ``leaves``/``moments_*`` are
+    (w_like, b_like) pairs; moment entries are None when the optimizer
+    has no such state. Returns (new_leaves, new_m, new_n) pairs.
+    """
+    vals = (sparse.dw, sparse.db)
+
+    def row_math(rows, vals_l):
+        # rows order: [p for each leaf] + [m ...] + [n ...] (None-skipped).
+        rows = list(rows)
+        p_r = [rows.pop(0) for _ in leaves]
+        m_r = [rows.pop(0) if m is not None else None for m in moments_m]
+        n_r = [rows.pop(0) if n is not None else None for n in moments_n]
+        out = [_leaf_update(cfg, lr, t, p, v, m, n)
+               for p, v, m, n in zip(p_r, vals_l, m_r, n_r)]
+        return tuple(x for group in zip(*out) for x in group
+                     if x is not None)
+
+    dense = ([p for p in leaves]
+             + [m for m in moments_m if m is not None]
+             + [n for n in moments_n if n is not None])
+    tp = mesh.shape["model"] if mesh is not None else 1
+    if mesh is not None and all(d.shape[0] % tp == 0 for d in dense):
+        from repro.parallel.collectives import sharded_rows_update
+        out = sharded_rows_update(mesh, row_math, sparse.ids, vals, dense)
+    else:
+        rows = tuple(d[sparse.ids] for d in dense)
+        new_rows = row_math(rows, vals)
+        out = tuple(d.at[sparse.ids].set(r.astype(d.dtype), mode="drop")
+                    for d, r in zip(dense, new_rows))
+
+    out = list(out)
+    new_p = [out.pop(0) for _ in leaves]
+    new_m = [out.pop(0) if m is not None else None for m in moments_m]
+    new_n = [out.pop(0) if n is not None else None for n in moments_n]
+    return new_p, new_m, new_n
 
 
 def apply_updates(cfg: OptimizerConfig, params: Params, grads: Grads,
-                  state: OptState) -> Tuple[Params, OptState, dict]:
-    """One optimizer step. Returns (params, state, metrics)."""
+                  state: OptState, mesh=None) -> Tuple[Params, OptState,
+                                                       dict]:
+    """One optimizer step. Returns (params, state, metrics).
+
+    ``grads`` may carry SparseRows leaves in place of a {"w", "b"} param
+    subtree (see module docstring); ``mesh`` routes their row updates
+    shard-local when the touched table is vocab-sharded over 'model'.
+    """
     metrics = {}
     if cfg.clip_norm:
         grads, norm = clip_by_global_norm(grads, cfg.clip_norm)
         metrics["grad_norm"] = norm
     lr = schedule(cfg, state.step)
     metrics["lr"] = lr
+    t = (state.step + 1).astype(jnp.float32)
 
-    if cfg.name == "adagrad":
-        nu = jax.tree.map(
-            lambda n, g: n + jnp.square(g.astype(jnp.float32)),
-            state.nu, grads)
-        updates = jax.tree.map(
-            lambda g, n: -lr * g.astype(jnp.float32)
-            / (jnp.sqrt(n) + cfg.eps), grads, nu)
-        new_state = OptState(step=state.step + 1, mu=None, nu=nu)
-    elif cfg.name == "adamw":
-        t = (state.step + 1).astype(jnp.float32)
-        mu = jax.tree.map(
-            lambda m, g: cfg.beta1 * m
-            + (1 - cfg.beta1) * g.astype(jnp.float32), state.mu, grads)
-        nu = jax.tree.map(
-            lambda n, g: cfg.beta2 * n
-            + (1 - cfg.beta2) * jnp.square(g.astype(jnp.float32)),
-            state.nu, grads)
-        bc1 = 1.0 - cfg.beta1 ** t
-        bc2 = 1.0 - cfg.beta2 ** t
-        updates = jax.tree.map(
-            lambda m, n, p: -lr * ((m / bc1)
-                                   / (jnp.sqrt(n / bc2) + cfg.eps)
-                                   + cfg.weight_decay
-                                   * p.astype(jnp.float32)),
-            mu, nu, params)
-        new_state = OptState(step=state.step + 1, mu=mu, nu=nu)
-    elif cfg.name == "sgd":
-        updates = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
-        new_state = OptState(step=state.step + 1, mu=None, nu=None)
-    else:
-        raise ValueError(cfg.name)
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree_util.tree_flatten_with_path(
+        grads, is_leaf=sparse_lib.is_sparse)[0]
+    # mu/nu mirror params exactly, so index i lines up across all three.
+    flat_m = (jax.tree.leaves(state.mu) if state.mu is not None
+              else [None] * len(flat_p))
+    flat_n = (jax.tree.leaves(state.nu) if state.nu is not None
+              else [None] * len(flat_p))
+    idx_of = {path: i for i, (path, _) in enumerate(flat_p)}
 
-    new_params = jax.tree.map(
-        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
-        params, updates)
-    return new_params, new_state, metrics
+    new_p = [leaf for _, leaf in flat_p]
+    new_m = list(flat_m)
+    new_n = list(flat_n)
+    covered = set()
+    for path, g in flat_g:
+        if not sparse_lib.is_sparse(g):
+            i = idx_of[path]
+            new_p[i], new_m[i], new_n[i] = _leaf_update(
+                cfg, lr, t, flat_p[i][1], g, flat_m[i], flat_n[i])
+            covered.add(i)
+            continue
+        # SparseRows stands in for a {"w": (C, K), "b": (C,)} subtree:
+        # locate its two dense leaves by path prefix, match by rank.
+        sub = [idx_of[p2] for p2, _ in flat_p if p2[:len(path)] == path]
+        assert len(sub) == 2, (path, sub)
+        i_w, i_b = ((sub[0], sub[1]) if flat_p[sub[0]][1].ndim == 2
+                    else (sub[1], sub[0]))
+        p2, m2, n2 = _sparse_node_update(
+            cfg, lr, t, g,
+            (flat_p[i_w][1], flat_p[i_b][1]),
+            (flat_m[i_w], flat_m[i_b]), (flat_n[i_w], flat_n[i_b]),
+            mesh=mesh)
+        for j, i in enumerate((i_w, i_b)):
+            new_p[i], new_m[i], new_n[i] = p2[j], m2[j], n2[j]
+            covered.add(i)
+    # Fail loud on a partial gradient tree (the pre-rewrite tree.map
+    # raised on structure mismatch; silently frozen params would train
+    # on with no error).
+    if len(covered) != len(flat_p):
+        missing = [flat_p[i][0] for i in range(len(flat_p))
+                   if i not in covered]
+        raise ValueError(f"grads cover {len(covered)}/{len(flat_p)} "
+                         f"param leaves; missing {missing[:5]}")
+
+    unflatten = jax.tree_util.tree_unflatten
+    mu = (unflatten(jax.tree.structure(state.mu), new_m)
+          if state.mu is not None else None)
+    nu = (unflatten(jax.tree.structure(state.nu), new_n)
+          if state.nu is not None else None)
+    new_state = OptState(step=state.step + 1, mu=mu, nu=nu)
+    return unflatten(treedef, new_p), new_state, metrics

@@ -1,0 +1,93 @@
+"""SparseRows: the O(B·K·n_neg) head-gradient carrier (DESIGN.md §8).
+
+A sampled-head training step touches at most ``B·(1 + n_neg)`` rows of the
+(C, K) output embedding, yet dense autodiff materializes the full (C, K)
+gradient (the candidate-score gather backprops as a scatter-add into a
+zero-initialized dense array) and the optimizer then walks every row.
+``SparseRows`` replaces that dense leaf in the gradient pytree: deduplicated
+touched-row ids plus the per-row ``(dw, db)`` coefficients, so the optimizer
+can apply O(U·K) row updates (repro.optim.optimizers) and the whole update
+cost is independent of C.
+
+Invariants:
+  * ``ids`` are unique; slots beyond the number of distinct touched rows
+    carry the sentinel ``num_rows`` (out of range — every consumer scatters
+    with ``mode="drop"`` / relies on their zero coefficients).
+  * duplicate occurrences (a negative drawn twice, or colliding with the
+    positive) have been *summed* into one row, so ``to_dense`` equals the
+    dense autodiff gradient and ``sq_norm`` is the true global-norm
+    contribution (untouched rows have exactly zero dense gradient).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SparseRows(NamedTuple):
+    """Sparse head gradient: ``dL/dw[ids] = dw``, ``dL/db[ids] = db``.
+
+    ids: (U,) int32, unique; sentinel ``num_rows`` marks dead slots.
+    dw:  (U, K) fp32 row gradients (zero on dead slots).
+    db:  (U,)   fp32 bias gradients (zero on dead slots).
+    """
+    ids: jax.Array
+    dw: jax.Array
+    db: jax.Array
+
+    @property
+    def num_rows_hint(self) -> int:
+        # Sentinel value == the row count the producer saw; only used by
+        # tests/debug helpers (consumers scatter with mode="drop").
+        return int(self.ids.shape[0])
+
+
+def is_sparse(x) -> bool:
+    return isinstance(x, SparseRows)
+
+
+def accumulate_rows(ids: jax.Array, coeff: jax.Array, h: jax.Array,
+                    num_rows: int) -> SparseRows:
+    """Dedupe occurrence-level gradients into per-unique-row sums.
+
+    Per-occurrence t the head gradient is a rank-1 term
+    ``dL/dw[ids[t]] += coeff[t] * h[t]``, ``dL/db[ids[t]] += coeff[t]``.
+    ids: (T,) int32 (duplicates allowed); coeff: (T,); h: (T, K);
+    ``num_rows`` = row count of the dense table (the sentinel id).
+
+    Returns a SparseRows with U = T slots (the static worst case); unused
+    slots carry id ``num_rows`` and zero coefficients, so the result is
+    exactly the dense gradient restricted to its nonzero rows.
+    """
+    t = ids.shape[0]
+    uniq, inv = jnp.unique(ids.astype(jnp.int32), size=t,
+                           fill_value=num_rows, return_inverse=True)
+    inv = inv.reshape(-1)
+    coeff = coeff.astype(jnp.float32)
+    db = jax.ops.segment_sum(coeff, inv, num_segments=t)
+    dw = jax.ops.segment_sum(coeff[:, None] * h.astype(jnp.float32), inv,
+                             num_segments=t)
+    return SparseRows(ids=uniq.astype(jnp.int32), dw=dw, db=db)
+
+
+def to_dense(sparse: SparseRows, w_shape: Tuple[int, ...]
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Materialize the (C, K) / (C,) dense gradients (tests/fallbacks)."""
+    c = w_shape[0]
+    dw = jnp.zeros(w_shape, jnp.float32).at[sparse.ids].add(
+        sparse.dw, mode="drop")
+    db = jnp.zeros((c,), jnp.float32).at[sparse.ids].add(
+        sparse.db, mode="drop")
+    return dw, db
+
+
+def sq_norm(sparse: SparseRows) -> jax.Array:
+    """Sum of squares == the dense gradient's (rows are deduped)."""
+    return (jnp.sum(jnp.square(sparse.dw))
+            + jnp.sum(jnp.square(sparse.db)))
+
+
+def scale(sparse: SparseRows, s: jax.Array) -> SparseRows:
+    return SparseRows(ids=sparse.ids, dw=sparse.dw * s, db=sparse.db * s)

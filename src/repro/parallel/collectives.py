@@ -10,6 +10,11 @@ versions used by the perf iterations and by the gradient-compression path:
 - ``compressed_grad_allreduce``: int8 error-feedback gradient all-reduce over
   the data axes (distributed-optimization trick for the pod-level DP
   collective; see repro.optim.compression).
+- ``sharded_rows_update``: apply a per-row transform (the sparse-head
+  optimizer update, DESIGN.md §8) at sampled ids of vocab-sharded arrays —
+  each model shard gathers/updates only the rows it owns; replicated ids,
+  no all-gather, no cross-shard traffic at all (the row ownership logic of
+  ``sharded_candidate_scores``, reused for the write path).
 """
 from __future__ import annotations
 
@@ -53,6 +58,56 @@ def sharded_candidate_scores(mesh: Mesh, w, b, h, ids):
         in_specs=(P(model, None), P(model), P(*([None] * h.ndim)),
                   P(*([None] * ids.ndim))),
         out_specs=P(*([None] * ids.ndim)))(w, b, h, ids)
+
+
+def sharded_rows_update(mesh: Mesh, fn, ids, vals, dense_arrays):
+    """Row-local transform of vocab-sharded arrays at sampled ``ids``.
+
+    dense_arrays: sequence of (V, ...) arrays sharded over 'model' on dim 0
+    (params + optimizer accumulators); ids: (U,) int32, replicated, deduped
+    (sentinel ids >= V are dropped); vals: sequence of (U, ...) replicated
+    per-row gradient coefficients. ``fn(rows_tuple, vals_tuple) ->
+    new_rows_tuple`` is the per-row optimizer math — ONE call covers every
+    array touched by the update (w + b + their accumulators), so the whole
+    sparse optimizer step is a single shard_map. Each shard resolves
+    ``ids`` against the row range it owns (same ownership arithmetic as
+    :func:`sharded_candidate_scores`), gathers only its rows, applies
+    ``fn``, and scatters back — O(U·K) work per shard and zero collective
+    traffic: non-owned and sentinel ids clamp on the gather and drop on
+    the scatter.
+    """
+    dp_axes, model = mesh_axes(mesh)
+    n_shards = mesh.shape[model]
+    n_vals = len(vals)
+    for d in dense_arrays:
+        assert d.shape[0] % n_shards == 0, (d.shape, n_shards)
+
+    def local(ids_l, *rest):
+        vals_l, dense_l = rest[:n_vals], rest[n_vals:]
+        me = jax.lax.axis_index(model)
+        out = []
+        rows, shard_rows = [], []
+        for d in dense_l:
+            n_rows = d.shape[0]
+            loc = ids_l - me * n_rows
+            safe = jnp.clip(loc, 0, n_rows - 1)
+            rows.append(d[safe])
+            shard_rows.append((loc, n_rows))
+        new_rows = fn(tuple(rows), tuple(vals_l))
+        for d, r, (loc, n_rows) in zip(dense_l, new_rows, shard_rows):
+            mine = (loc >= 0) & (loc < n_rows)
+            tgt = jnp.where(mine, jnp.clip(loc, 0, n_rows - 1),
+                            n_rows)                  # non-mine -> dropped
+            out.append(d.at[tgt].set(r.astype(d.dtype), mode="drop"))
+        return tuple(out)
+
+    rep = lambda a: P(*([None] * a.ndim))            # noqa: E731
+    dense_spec = tuple(P(model, *([None] * (d.ndim - 1)))
+                       for d in dense_arrays)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(rep(ids),) + tuple(rep(v) for v in vals) + dense_spec,
+        out_specs=dense_spec)(ids, *vals, *dense_arrays)
 
 
 def compressed_grad_allreduce(mesh: Mesh, grads_stacked: Any, ef_stacked):

@@ -11,7 +11,9 @@ Policy (baseline; §Perf iterates on it):
   * embedding + head: vocab over 'model' — GSPMD partitions the token
     gather as masked-local-gather + all-reduce (verified), which is exactly
     the paper-head-friendly layout: candidate score gathers touch only the
-    owning shard
+    owning shard, and the sparse-head optimizer update (SparseRows leaves,
+    DESIGN.md §8) writes shard-local through
+    collectives.sharded_rows_update — no all-gather on read or write
   * optimizer state mirrors parameter sharding (ZeRO-style for free)
   * KV cache: batch over data axes; sequence over 'model' (decode attends
     with sharded-S logits; softmax reductions become psums). long-context

@@ -232,6 +232,7 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
             raise FloatingPointError(f"non-finite loss at step {step}")
         history["loss"].append(loss)
         history["step"].append(step)
+        history.setdefault("step_times", []).append(dt)
         if on_step is not None:
             on_step(step, {**{k: float(jax.device_get(v))
                               for k, v in metrics.items()},

@@ -14,7 +14,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.heads import HeadConfig, HeadParams
+from repro.core.heads import (HeadConfig, HeadParams,
+                              resolve_head_update)  # noqa: F401 (re-export)
 from repro.models import lm_head, transformer
 from repro.models.config import ModelConfig
 from repro.optim import OptimizerConfig, apply_updates, init_opt_state
@@ -41,15 +42,71 @@ def loss_fn(params, cfg: ModelConfig, hcfg: HeadConfig, head_state,
 
 
 def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
-                    opt_cfg: OptimizerConfig):
-    """Returns train_step(state, batch, rng) -> (state, metrics)."""
+                    opt_cfg: OptimizerConfig, head_update: str = "auto",
+                    head_kernel: bool = False, mesh=None):
+    """Returns train_step(state, batch, rng) -> (state, metrics).
 
-    def train_step(state: TrainState, batch, rng):
+    ``head_update`` picks the head-gradient path (DESIGN.md §8):
+
+    * ``dense`` — ``jax.value_and_grad`` end to end: autodiff scatter-adds
+      the candidate-score backward into a dense (C, K) gradient and the
+      optimizer walks every row. O(C·K) per step regardless of sampling.
+    * ``sparse`` — the trunk still backprops through ``jax.vjp`` (driven
+      by the analytic head cotangent ``dh``), but the head gradient is a
+      ``SparseRows`` leaf over the ≤ B·(1+n_neg) touched rows and the
+      optimizer applies O(U·K) row updates. Identical math on the touched
+      rows (exact for Adagrad/SGD, lazy-decay AdamW), cost independent
+      of C.
+    * ``auto`` (default) — sparse for sampled heads, dense for `softmax`.
+
+    ``head_kernel`` routes the sparse path's gather→loss→coefficient chain
+    through the fused Pallas kernel. ``mesh`` lets the sparse optimizer
+    update run shard-local on a vocab-sharded head (each model shard
+    applies only the rows it owns — ``parallel.collectives``).
+    """
+    mode = resolve_head_update(head_update, hcfg.kind)
+    assert not (head_kernel and mode == "dense"), (
+        "head_kernel routes the SPARSE path through the fused Pallas "
+        "kernel; the resolved head_update here is 'dense', which would "
+        "silently ignore it")
+
+    def dense_step(state: TrainState, batch, rng):
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
         (loss, metrics), grads = grad_fn(state.params, cfg, hcfg,
                                          state.head_state, batch, rng)
+        return grads, metrics
+
+    def sparse_step(state: TrainState, batch, rng):
+        trunk = {k: v for k, v in state.params.items() if k != "head"}
+
+        def trunk_fwd(tp):
+            h, _, fwd_metrics = transformer.forward(
+                tp, cfg, batch["tokens"],
+                positions=batch.get("positions"),
+                vision_embeds=batch.get("vision_embeds"))
+            return h, fwd_metrics
+
+        h, trunk_vjp, fwd_metrics = jax.vjp(trunk_fwd, trunk, has_aux=True)
+        labels = batch["labels"]
+        n_vis = 0
+        if cfg.modality == "vision" and labels.shape[1] != h.shape[1]:
+            n_vis = h.shape[1] - labels.shape[1]
+        loss, head_metrics, sparse, dh = lm_head.lm_sparse_head_loss(
+            cfg, hcfg, HeadParams(**state.params["head"]), state.head_state,
+            h[:, n_vis:] if n_vis else h, labels, rng,
+            mask=batch.get("mask"), use_kernel=head_kernel)
+        if n_vis:   # vision prefix carries no next-token loss
+            dh = jnp.pad(dh, ((0, 0), (n_vis, 0), (0, 0)))
+        (trunk_grads,) = trunk_vjp(dh.astype(h.dtype))
+        grads = {**trunk_grads, "head": sparse}
+        metrics = {"loss": loss, **fwd_metrics, **head_metrics}
+        return grads, metrics
+
+    def train_step(state: TrainState, batch, rng):
+        grads, metrics = (dense_step if mode == "dense"
+                          else sparse_step)(state, batch, rng)
         new_params, new_opt, opt_metrics = apply_updates(
-            opt_cfg, state.params, grads, state.opt_state)
+            opt_cfg, state.params, grads, state.opt_state, mesh=mesh)
         metrics.update(opt_metrics)
         return TrainState(step=state.step + 1, params=new_params,
                           opt_state=new_opt,

@@ -8,6 +8,7 @@ from repro.core import tree as tree_lib
 from repro.kernels import ref as ref_lib
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gather_scores import gather_scores
+from repro.kernels.sampled_loss import SAMPLED_KINDS, sampled_head_loss
 from repro.kernels.segment_scores import segment_stats
 from repro.kernels.tree_logprob import tree_logprob_all
 
@@ -141,6 +142,99 @@ class TestGatherScores:
         ref = ref_lib.gather_scores_ref(w, b, h, ids)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=3e-2, atol=3e-2)
+
+
+class TestSampledLoss:
+    """The fused sampled-head loss kernel (fwd + bwd in one row pass) vs
+    the unfused gather→einsum→loss→coefficient oracle."""
+
+    def _inputs(self, c, kdim, t, m, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        w = jax.random.normal(ks[0], (c, kdim))
+        b = jax.random.normal(ks[1], (c,))
+        h = jax.random.normal(ks[2], (t, kdim))
+        ids = jax.random.randint(ks[3], (t, m), 0, c)
+        lp = -jnp.abs(jax.random.normal(ks[4], (t, m)))
+        return w, b, h, ids, lp
+
+    @pytest.mark.parametrize("kind", SAMPLED_KINDS)
+    def test_all_kinds_vs_ref(self, kind):
+        c, kdim, t, m = 64, 16, 32, 3
+        w, b, h, ids, lp = self._inputs(c, kdim, t, m)
+        kw = dict(kind=kind, num_labels=c, reg=1e-3, softcap=25.0)
+        out = sampled_head_loss(w, b, h, ids, lp, blk_t=8, interpret=True,
+                                **kw)
+        ref = ref_lib.sampled_head_loss_ref(w, b, h, ids, lp, **kw)
+        for o, r, name in zip(out, ref, ["loss", "coeff", "xi", "dh"]):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{kind}/{name}")
+
+    @pytest.mark.parametrize("t,blk_t", [(30, 8), (7, 16), (64, 64)])
+    def test_ragged_t_padding(self, t, blk_t):
+        """T not divisible by blk_t: padded rows must not leak into the
+        sliced outputs."""
+        c, kdim, m = 32, 8, 2
+        w, b, h, ids, lp = self._inputs(c, kdim, t, m, seed=1)
+        kw = dict(kind="adversarial_ns", num_labels=c)
+        out = sampled_head_loss(w, b, h, ids, lp, blk_t=blk_t,
+                                interpret=True, **kw)
+        ref = ref_lib.sampled_head_loss_ref(w, b, h, ids, lp, **kw)
+        for o, r in zip(out, ref):
+            assert o.shape == r.shape
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_accidental_hit_masking(self):
+        """sampled_softmax: a negative equal to the positive is masked out
+        of the candidate set — zero coefficient in kernel and ref."""
+        c, kdim, t, m = 16, 8, 8, 3
+        w, b, h, ids, lp = self._inputs(c, kdim, t, m, seed=2)
+        ids = ids.at[:, 1].set(ids[:, 0])           # force collisions
+        kw = dict(kind="sampled_softmax", num_labels=c)
+        out = sampled_head_loss(w, b, h, ids, lp, blk_t=8, interpret=True,
+                                **kw)
+        ref = ref_lib.sampled_head_loss_ref(w, b, h, ids, lp, **kw)
+        np.testing.assert_allclose(np.asarray(out[1][:, 1]), 0.0)
+        for o, r in zip(out, ref):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_sparse_head_loss_kernel_routing(self):
+        """heads.sparse_head_loss(use_kernel=True) == the jnp path, and
+        ops.use_pallas(False) A/B routes to the reference."""
+        from repro.core import heads as heads_lib
+        from repro.core.heads import Generator, HeadConfig
+        from repro.kernels import ops
+
+        c, kdim, kg, bsz = 32, 16, 4, 24
+        tr = tree_lib.init_tree(jax.random.PRNGKey(0), c, kg, scale=0.5)
+        cfg = HeadConfig(num_labels=c, kind="adversarial_ns", n_neg=3,
+                         reg=1e-3)
+        params = heads_lib.init_head_params(jax.random.PRNGKey(1), c,
+                                            kdim, scale=0.3)
+        h = jax.random.normal(jax.random.PRNGKey(2), (bsz, kdim))
+        xg = jax.random.normal(jax.random.PRNGKey(3), (bsz, kg))
+        y = jax.random.randint(jax.random.PRNGKey(4), (bsz,), 0, c)
+        rng = jax.random.PRNGKey(6)
+        args = (cfg, params, Generator(tree=tr), h, xg, y, rng)
+        jnp_path = heads_lib.sparse_head_loss(*args, softcap=30.0)
+        ker_path = heads_lib.sparse_head_loss(*args, softcap=30.0,
+                                              use_kernel=True)
+        ops.use_pallas(False)
+        try:
+            ref_path = heads_lib.sparse_head_loss(*args, softcap=30.0,
+                                                  use_kernel=True)
+        finally:
+            ops.use_pallas(True)
+        for a, b2 in ((jnp_path, ker_path), (ref_path, ker_path)):
+            np.testing.assert_allclose(float(a[0]), float(b2[0]),
+                                       rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(a[2].dw),
+                                       np.asarray(b2[2].dw),
+                                       rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(a[3]), np.asarray(b2[3]),
+                                       rtol=1e-4, atol=1e-5)
 
 
 class TestSegmentStats:
