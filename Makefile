@@ -14,6 +14,9 @@
 #   make bench-heads  - head TRAIN-step cost vs C: dense O(C·K) autodiff
 #                       update vs sparse O(B·K·n_neg) touched-row update
 #                       (writes BENCH_heads.json)
+#   make bench-snr    - gradient-SNR table for every fitted NegativeSampler
+#                       (tree/uniform/unigram/lsh/rff) + the same-objective
+#                       convergence race (writes BENCH_snr.json)
 #   make bench-smoke  - CI guard: one tiny C per benchmark, schema
 #                       asserted, no timings (benchmark scripts can't rot)
 #   make bench        - the full benchmark harness CSV
@@ -22,7 +25,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-serve bench-serve bench-engine \
-        bench-tree-fit bench-heads bench-smoke bench
+        bench-tree-fit bench-heads bench-snr bench-smoke bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -44,6 +47,9 @@ bench-tree-fit:
 
 bench-heads:
 	$(PYTHON) -m benchmarks.bench_heads
+
+bench-snr:
+	$(PYTHON) -m benchmarks.bench_snr
 
 bench-smoke:
 	$(PYTHON) -m benchmarks.smoke

@@ -1,13 +1,29 @@
 """Benchmark: gradient SNR vs noise distribution (paper Theorem 2 / Eq. 15).
 
 Closed-form eta-bar for p_n in {uniform, marginal, mixtures, p_D}: the table
-shows eta rising monotonically toward the adversarial optimum."""
+shows eta rising monotonically toward the adversarial optimum
+(:func:`run`), plus the *fitted-sampler* head-to-head
+(:func:`run_sampler_bench`): every ``core.samplers`` proposal is fitted
+from the same (feature, label) snapshot of a synthetic conditional
+problem, its exact p_n(·|x) table is read back via ``log_prob_all``, and
+closed-form + streamed-empirical eta and signal mass are tabulated per
+sampler — Theorem 2 predicts the tree (the proposal actually fitted to
+approximate p_D(y|x)) wins. The companion convergence race
+(bench_convergence.run_samplers) rides along, and the combined report is
+written to BENCH_snr.json (tracked)."""
 from __future__ import annotations
 
+import json
+import os
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import snr as snr_lib
+
+REPORT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_snr.json")
 
 
 def run(csv_rows: list, n=16, c=32, seed=0):
@@ -32,8 +48,95 @@ def run(csv_rows: list, n=16, c=32, seed=0):
     return csv_rows
 
 
+def run_sampler_bench(csv_rows: list, n_ctx=24, c=256, kdim=8,
+                      n_pairs=8_000, tau=2.0, n_samples=4_000_000, seed=0,
+                      write_json=True, convergence_kwargs=None) -> dict:
+    """Fitted-sampler SNR table + convergence race → BENCH_snr.json.
+
+    Synthetic conditional problem with a known p_D: ``n_ctx`` context
+    vectors, p_D(·|x) = softmax(tau · x @ emb.T). Each sampler is fitted
+    from ``n_pairs`` (x, y ~ p_D) draws — the same snapshot the training
+    loop would hand it — and evaluated at the nonparametric optimum
+    (Eq. 15 closed form + the streamed Eq. A8 estimator), so the table
+    isolates proposal quality from optimization noise.
+
+    ``n_samples`` is deliberately large: eta is the *reciprocal* of a mean
+    of heavy-tailed per-draw ratios, so small draw budgets bias the
+    empirical column high (Jensen). The streamed accumulator makes
+    millions of draws cheap.
+    """
+    from repro.core import samplers as samplers_lib
+
+    rng = np.random.default_rng(seed)
+    ctx = rng.standard_normal((n_ctx, kdim)).astype(np.float32)
+    emb = rng.standard_normal((c, kdim)).astype(np.float32)
+    logits = tau * ctx @ emb.T
+    p_d_np = np.exp(logits - logits.max(-1, keepdims=True))
+    p_d_np /= p_d_np.sum(-1, keepdims=True)
+    p_d = jnp.asarray(p_d_np)
+
+    xs = rng.integers(0, n_ctx, n_pairs)
+    u = rng.random((n_pairs, 1))
+    ys = (p_d_np[xs].cumsum(-1) < u).sum(-1).clip(0, c - 1)
+    x_gen = jnp.asarray(ctx[xs])
+    labels = jnp.asarray(ys, jnp.int32)
+
+    snr_rows = []
+    for kind in samplers_lib.SAMPLER_KINDS:
+        sampler = samplers_lib.fit_sampler(kind, x_gen, labels, c,
+                                           seed=seed)
+        p_n = np.exp(np.asarray(jax.device_get(
+            sampler.log_prob_all(jnp.asarray(ctx))), np.float64))
+        # log_prob_all is exact up to float32 roundoff; renormalize so the
+        # closed form sees a strictly row-stochastic table.
+        p_n = jnp.asarray(p_n / p_n.sum(-1, keepdims=True), jnp.float32)
+        eta_cf = float(snr_lib.snr_closed_form(p_d, p_n))
+        eta_emp = float(snr_lib.snr_empirical(p_d, p_n,
+                                              jax.random.PRNGKey(seed + 1),
+                                              n_samples=n_samples))
+        mass = float(jnp.mean(jnp.sum(snr_lib.alpha(p_d, p_n), -1)))
+        csv_rows.append((f"snr_sampler/{kind}", eta_cf * 1e6,
+                         f"X={n_ctx},C={c},eta*1e6,"
+                         f"eta_emp*1e6={eta_emp * 1e6:.3f},"
+                         f"signal_mass={mass:.4f}"))
+        snr_rows.append({"sampler": kind,
+                         "eta_closed_form": eta_cf,
+                         "eta_empirical": eta_emp,
+                         "signal_mass": mass})
+
+    from benchmarks import bench_convergence
+    convergence = bench_convergence.run_samplers(
+        csv_rows, **(convergence_kwargs or {}))
+
+    report = {
+        "meta": {"n_ctx": n_ctx, "num_labels": c, "feature_dim": kdim,
+                 "n_pairs": n_pairs, "tau": tau, "n_samples": n_samples,
+                 "seed": seed,
+                 "note": "eta at the nonparametric optimum (Eq. 15 closed "
+                         "form / streamed Eq. A8 Monte Carlo); signal "
+                         "mass = mean_x sum_y alpha, max 1/2 at p_n=p_D "
+                         "(Theorem 2). Rank on eta_closed_form and "
+                         "signal_mass: eta_empirical is a consistency "
+                         "check, biased high at this X*C by the "
+                         "reciprocal of a heavy-tailed mean (worst for "
+                         "conditioning-free proposals, whose alpha tail "
+                         "is heaviest), and eta itself is dominated by "
+                         "the C term in Eq. 15 — the per-proposal signal "
+                         "lives in signal_mass"},
+        "snr": snr_rows,
+        "convergence": convergence,
+    }
+    if write_json:
+        with open(REPORT_PATH, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+    return report
+
+
 if __name__ == "__main__":
     rows = []
     run(rows)
+    run_sampler_bench(rows, write_json=True)
     for r in rows:
         print(",".join(str(x) for x in r))
+    print(f"report -> {REPORT_PATH}")

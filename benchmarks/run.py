@@ -7,6 +7,8 @@
   bench_tree         — generator costs                 (paper §3: O(k log C))
   bench_convergence  — heads race, steps-to-accuracy   (paper Fig. 1)
   bench_snr          — eta-bar vs noise distribution   (paper Thm 2 / Eq. 15)
+                       + fitted NegativeSampler head-to-head (SNR table and
+                       convergence race; BENCH_snr.json via `make bench-snr`)
   bench_kernels      — Pallas kernels vs jnp refs      (interpret mode)
   bench_serve        — per-token serving cost vs C     (dense vs beam path)
                        + fitted-vs-random generator beam/dense agreement
@@ -49,6 +51,14 @@ def main() -> None:
     if "snr" in wanted:
         from benchmarks import bench_snr
         bench_snr.run(rows)
+        # Reduced fitted-sampler head-to-head; no JSON so the tracked
+        # BENCH_snr.json (from `make bench-snr`) survives.
+        bench_snr.run_sampler_bench(
+            rows, n_ctx=12, c=64, n_pairs=2500, n_samples=40_000,
+            write_json=False,
+            convergence_kwargs=dict(c=128, kdim=16, k_gen=4, steps=60,
+                                    checkpoints=(20, 60), n_train=2500,
+                                    n_test=500, lr_grid=(0.1,)))
     if "kernels" in wanted:
         from benchmarks import bench_kernels
         bench_kernels.run(rows)

@@ -61,14 +61,32 @@ def smoke_tree_fit():
             "ll_levelwise", "ll_seq"))
 
 
+def smoke_snr():
+    from benchmarks import bench_snr
+    report = bench_snr.run_sampler_bench(
+        [], n_ctx=8, c=48, kdim=4, n_pairs=1500, n_samples=20_000,
+        write_json=False,
+        convergence_kwargs=dict(c=64, kdim=8, k_gen=4, steps=30,
+                                checkpoints=(10, 30), n_train=1200,
+                                n_test=300, lr_grid=(0.1,)))
+    _check("bench_snr", report, ("meta", "snr", "convergence"), "snr",
+           ("sampler", "eta_closed_form", "eta_empirical", "signal_mass"))
+    kinds = {r["sampler"] for r in report["snr"]}
+    from repro.core.samplers import SAMPLER_KINDS
+    assert kinds == set(SAMPLER_KINDS), kinds
+    assert set(report["convergence"]) == set(SAMPLER_KINDS)
+
+
 def main():
-    wanted = set(sys.argv[1:]) or {"heads", "engine", "tree_fit"}
+    wanted = set(sys.argv[1:]) or {"heads", "engine", "tree_fit", "snr"}
     if "heads" in wanted:
         smoke_heads()
     if "engine" in wanted:
         smoke_engine()
     if "tree_fit" in wanted:
         smoke_tree_fit()
+    if "snr" in wanted:
+        smoke_snr()
     print("bench smoke: all OK")
 
 

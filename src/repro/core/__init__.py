@@ -3,6 +3,7 @@
 - :mod:`repro.core.tree`      — probabilistic decision-tree generator (§3)
 - :mod:`repro.core.tree_fit`  — greedy Newton / balanced-split fitting (§3)
 - :mod:`repro.core.heads`     — adversarial NS + all baseline heads (§2, §5)
+- :mod:`repro.core.samplers`  — NegativeSampler protocol + proposals (§2)
 - :mod:`repro.core.snr`       — gradient SNR, Theorem 2 validation (§4)
 """
 from repro.core.heads import (Generator, HeadConfig, HeadParams, head_loss,
@@ -10,6 +11,11 @@ from repro.core.heads import (Generator, HeadConfig, HeadParams, head_loss,
                               make_tree_generator, predictive_accuracy,
                               predictive_log_likelihood, predictive_scores,
                               predictive_topk)
+from repro.core.samplers import (LshSampler, NegativeSampler, RffSampler,
+                                 TreeSampler, UniformSampler, UnigramSampler,
+                                 fit_lsh_sampler, fit_rff_sampler,
+                                 fit_sampler, sampler_from_config,
+                                 unigram_from_counts)
 from repro.core.tree import (Tree, beam_search, init_tree, log_prob,
                              log_prob_all, sample)
 from repro.core.tree_fit import FitConfig, fit_tree, pca_projection
@@ -18,6 +24,9 @@ __all__ = [
     "Generator", "HeadConfig", "HeadParams", "head_loss", "init_head_params",
     "make_freq_generator", "make_tree_generator", "predictive_accuracy",
     "predictive_log_likelihood", "predictive_scores", "predictive_topk",
+    "LshSampler", "NegativeSampler", "RffSampler", "TreeSampler",
+    "UniformSampler", "UnigramSampler", "fit_lsh_sampler", "fit_rff_sampler",
+    "fit_sampler", "sampler_from_config", "unigram_from_counts",
     "Tree", "beam_search", "init_tree", "log_prob", "log_prob_all", "sample",
     "FitConfig", "fit_tree", "pca_projection",
 ]

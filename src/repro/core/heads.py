@@ -27,7 +27,9 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import samplers as samplers_lib
 from repro.core import tree as tree_lib
+from repro.core.samplers import NegativeSampler
 from repro.kernels.sampled_loss import SAMPLED_KINDS, loss_and_coeffs
 from repro.optim.sparse import SparseRows, accumulate_rows
 
@@ -71,10 +73,16 @@ def init_head_params(rng: jax.Array, num_labels: int, feature_dim: int,
 
 
 def make_freq_generator(label_counts: jax.Array) -> Generator:
-    """Generator for `freq_ns`: empirical label frequencies (§2.2)."""
-    counts = jnp.asarray(label_counts, jnp.float32) + 1e-12
-    p = counts / counts.sum()
-    return Generator(freq_log=jnp.log(p), freq_cdf=jnp.cumsum(p))
+    """Generator for `freq_ns`: empirical label frequencies (§2.2).
+
+    ``freq_log`` carries 1e-12 smoothing (debiasing an observed label must
+    stay finite even at count 0); ``freq_cdf`` is built from the raw
+    counts so zero-count labels own an empty sampling interval — see
+    :func:`repro.core.samplers.unigram_from_counts`, the single
+    definition both paths share.
+    """
+    s = samplers_lib.unigram_from_counts(label_counts)
+    return Generator(freq_log=s.freq_log, freq_cdf=s.freq_cdf)
 
 
 def make_tree_generator(tree: tree_lib.Tree) -> Generator:
@@ -86,43 +94,30 @@ def make_tree_generator(tree: tree_lib.Tree) -> Generator:
 # ---------------------------------------------------------------------------
 
 def sample_negatives(cfg: HeadConfig, gen: Generator, x_gen: jax.Array,
-                     rng: jax.Array, batch_shape: Tuple[int, ...]
+                     rng: jax.Array, batch_shape: Tuple[int, ...],
+                     sampler: Optional[NegativeSampler] = None
                      ) -> Tuple[jax.Array, jax.Array]:
     """Draw (ids, log_pn) with shapes batch_shape + (n_neg,).
 
-    Costs: uniform O(1); freq O(log C) (inverse-CDF); adversarial/nce/
-    sampled_softmax O(k log C) (tree ancestral sampling, paper §3).
+    The proposal is a :class:`~repro.core.samplers.NegativeSampler`;
+    with ``sampler=None`` (the compat shim) ``cfg.kind`` picks the
+    proposal it historically hard-wired: uniform O(1) for
+    uniform_ns/ove/augment_reduce, the unigram inverse-CDF O(log C) for
+    freq_ns, tree ancestral sampling O(k log C) (paper §3) for
+    adversarial_ns/nce/sampled_softmax.
     """
-    shape = batch_shape + (cfg.n_neg,)
-    c = cfg.num_labels
-    if cfg.kind in ("uniform_ns", "ove", "augment_reduce"):
-        ids = jax.random.randint(rng, shape, 0, c)
-        return ids, jnp.full(shape, -jnp.log(float(c)))
-    if cfg.kind == "freq_ns":
-        u = jax.random.uniform(rng, shape)
-        ids = jnp.searchsorted(gen.freq_cdf, u).astype(jnp.int32)
-        ids = jnp.clip(ids, 0, c - 1)
-        return ids, gen.freq_log[ids]
-    if cfg.kind in ("adversarial_ns", "nce", "sampled_softmax"):
-        xg = jnp.broadcast_to(x_gen[..., None, :],
-                              batch_shape + (cfg.n_neg, x_gen.shape[-1]))
-        ids, logp = tree_lib.sample(gen.tree, xg, rng)
-        return ids, logp
-    raise ValueError(f"{cfg.kind} draws no negatives")
+    if sampler is None:
+        sampler = samplers_lib.sampler_from_config(cfg, gen)
+    return sampler.sample(rng, x_gen, batch_shape + (cfg.n_neg,))
 
 
 def noise_log_prob(cfg: HeadConfig, gen: Generator, x_gen: jax.Array,
-                   y: jax.Array) -> jax.Array:
-    """log p_n(y|x) for given labels under the strategy's noise dist."""
-    if cfg.kind in ("uniform_ns", "ove", "augment_reduce"):
-        return jnp.full(y.shape, -jnp.log(float(cfg.num_labels)))
-    if cfg.kind == "freq_ns":
-        return gen.freq_log[y]
-    if cfg.kind in ("adversarial_ns", "nce", "sampled_softmax"):
-        xg = jnp.broadcast_to(x_gen[..., None, :] if y.ndim == x_gen.ndim
-                              else x_gen, y.shape + (x_gen.shape[-1],))
-        return tree_lib.log_prob(gen.tree, xg, y)
-    raise ValueError(cfg.kind)
+                   y: jax.Array,
+                   sampler: Optional[NegativeSampler] = None) -> jax.Array:
+    """log p_n(y|x) for given labels under the proposal distribution."""
+    if sampler is None:
+        sampler = samplers_lib.sampler_from_config(cfg, gen)
+    return sampler.log_prob(x_gen, y)
 
 
 def candidate_scores(params: HeadParams, h: jax.Array, ids: jax.Array
@@ -176,11 +171,14 @@ def kernel_score_fn() -> ScoreFn:
 def head_loss(cfg: HeadConfig, params: HeadParams, gen: Generator,
               h: jax.Array, x_gen: jax.Array, y: jax.Array, rng: jax.Array,
               score_fn: ScoreFn = candidate_scores,
-              mask: Optional[jax.Array] = None):
+              mask: Optional[jax.Array] = None,
+              sampler: Optional[NegativeSampler] = None):
     """Per-strategy training loss, mean over batch. Returns (loss, metrics).
 
     h: (..., K); x_gen: (..., k); y: (...,) int labels; mask: (...,) in
     {0,1} — masked-out positions (e.g. padding tokens) contribute 0.
+    ``sampler`` overrides the proposal distribution (default: the one
+    ``cfg.kind`` implies — see :func:`sample_negatives`).
     """
     batch_shape = y.shape
     if mask is None:
@@ -208,7 +206,8 @@ def head_loss(cfg: HeadConfig, params: HeadParams, gen: Generator,
     # re-used coefficient-for-coefficient by the sparse path
     # (:func:`sparse_head_loss`) and the fused Pallas kernel.
     y = y.astype(jnp.int32)
-    ids, slot_logp, acc_hit = _sample_candidates(cfg, gen, x_gen, y, rng)
+    ids, slot_logp, acc_hit = _sample_candidates(cfg, gen, x_gen, y, rng,
+                                                 sampler=sampler)
     scores = score_fn(params, h, ids)                  # (..., 1 + n_neg)
     loss_vec, _, xi = loss_and_coeffs(
         scores, slot_logp, acc_hit, kind=cfg.kind,
@@ -220,17 +219,20 @@ def head_loss(cfg: HeadConfig, params: HeadParams, gen: Generator,
 
 
 def _sample_candidates(cfg: HeadConfig, gen: Generator, x_gen: jax.Array,
-                       y: jax.Array, rng: jax.Array):
+                       y: jax.Array, rng: jax.Array,
+                       sampler: Optional[NegativeSampler] = None):
     """Candidate slots for a sampled strategy: ids (..., 1+n) with the
     positive in slot 0, stop-grad noise log-probs per slot (zeros where the
     strategy ignores them), and the accidental-hit mask."""
-    neg_ids, neg_logp = sample_negatives(cfg, gen, x_gen, rng, y.shape)
+    neg_ids, neg_logp = sample_negatives(cfg, gen, x_gen, rng, y.shape,
+                                         sampler=sampler)
     neg_ids = jax.lax.stop_gradient(neg_ids)
     neg_logp = jax.lax.stop_gradient(neg_logp)
     need_pos_logp = (cfg.kind in ("nce", "sampled_softmax")
                      or (cfg.reg and cfg.kind in ("uniform_ns", "freq_ns",
                                                   "adversarial_ns")))
-    pos_logp = (jax.lax.stop_gradient(noise_log_prob(cfg, gen, x_gen, y))
+    pos_logp = (jax.lax.stop_gradient(
+        noise_log_prob(cfg, gen, x_gen, y, sampler=sampler))
                 if need_pos_logp else jnp.zeros(y.shape, jnp.float32))
     ids = jnp.concatenate([y[..., None], neg_ids], axis=-1)
     slot_logp = jnp.concatenate([pos_logp[..., None], neg_logp], axis=-1)
@@ -258,13 +260,24 @@ def _sampled_metrics(cfg: HeadConfig, xi: jax.Array, mean) -> dict:
     metrics = {"pos_score": mean(xi[..., 0])}
     if cfg.kind in ("uniform_ns", "freq_ns", "adversarial_ns", "nce"):
         metrics["neg_score"] = mean(jnp.mean(xi[..., 1:], axis=-1))
+    # Online proxy of the Eq. A8/15 signal mass Σ_y α(x,y): at the
+    # nonparametric optimum E_{y~p_D}[σ(-ξ)] and E_{y~p_n}[σ(ξ)] both
+    # equal Σα (Eq. 13), which attains its Jensen bound 1/2 exactly when
+    # p_n = p_D (Theorem 2) and decays as the proposal drifts off the data
+    # distribution. Averaging the two one-sample estimates reuses the ξ
+    # the sampled loss already computed — a refresh-trigger-grade signal,
+    # not an η estimator (DESIGN.md §9).
+    metrics["snr_proxy"] = 0.5 * (
+        mean(jax.nn.sigmoid(-xi[..., 0]))
+        + mean(jnp.mean(jax.nn.sigmoid(xi[..., 1:]), axis=-1)))
     return metrics
 
 
 def sparse_head_loss(cfg: HeadConfig, params: HeadParams, gen: Generator,
                      h: jax.Array, x_gen: jax.Array, y: jax.Array,
                      rng: jax.Array, mask: Optional[jax.Array] = None,
-                     softcap: float = 0.0, use_kernel: bool = False):
+                     softcap: float = 0.0, use_kernel: bool = False,
+                     sampler: Optional[NegativeSampler] = None):
     """Sampled-head loss with O(B·K·n_neg) analytic gradients — no dense
     (C, K) buffer anywhere (DESIGN.md §8).
 
@@ -292,7 +305,8 @@ def sparse_head_loss(cfg: HeadConfig, params: HeadParams, gen: Generator,
     denom = jnp.maximum(mask.sum(), 1.0)
 
     y = y.astype(jnp.int32)
-    ids, slot_logp, acc_hit = _sample_candidates(cfg, gen, x_gen, y, rng)
+    ids, slot_logp, acc_hit = _sample_candidates(cfg, gen, x_gen, y, rng,
+                                                 sampler=sampler)
     m = ids.shape[-1]
     kdim = h.shape[-1]
     h2 = h.reshape(-1, kdim)
@@ -335,7 +349,9 @@ def sparse_head_loss(cfg: HeadConfig, params: HeadParams, gen: Generator,
 # ---------------------------------------------------------------------------
 
 def predictive_scores(cfg: HeadConfig, params: HeadParams, gen: Generator,
-                      h: jax.Array, x_gen: jax.Array) -> jax.Array:
+                      h: jax.Array, x_gen: jax.Array,
+                      sampler: Optional[NegativeSampler] = None
+                      ) -> jax.Array:
     """Unbiased predictive scores over all C labels.
 
     For `adversarial_ns` this is Theorem 1 / Eq. 5:
@@ -343,10 +359,15 @@ def predictive_scores(cfg: HeadConfig, params: HeadParams, gen: Generator,
     with log p_n evaluated densely for all labels in O(C·k) via the
     level-recursive tree pass. For `freq_ns` the correction is the constant-
     per-label log-frequency. Uniform corrections are argmax-irrelevant.
+    A head trained against an explicit ``sampler`` is debiased by *that*
+    proposal's ``log_prob_all`` — Eq. 5 holds for any proposal with full
+    support, which every NegativeSampler guarantees.
     """
     scores = full_logits(params, h)
     if not cfg.debias:
         return scores
+    if sampler is not None:
+        return scores + sampler.log_prob_all(x_gen)
     if cfg.kind == "adversarial_ns" and gen.tree is not None:
         return scores + tree_lib.log_prob_all(gen.tree, x_gen)
     if cfg.kind == "freq_ns":
@@ -377,7 +398,8 @@ def rescore_candidates(cfg: HeadConfig, params: HeadParams, h: jax.Array,
 def predictive_topk(cfg: HeadConfig, params: HeadParams, gen: Generator,
                     h: jax.Array, x_gen: jax.Array, topk: int,
                     beam: Optional[int] = None,
-                    score_fn: ScoreFn = candidate_scores
+                    score_fn: ScoreFn = candidate_scores,
+                    sampler: Optional[NegativeSampler] = None
                     ) -> Tuple[jax.Array, jax.Array]:
     """Top-``topk`` unbiased predictive (scores, labels) without any O(C) pass.
 
@@ -393,15 +415,23 @@ def predictive_topk(cfg: HeadConfig, params: HeadParams, gen: Generator,
     Other head kinds have no conditional candidate structure and fall back
     to dense scoring + top_k. Returns (scores, labels), each (..., topk);
     slots beyond the number of live candidates carry score -inf, label -1.
+    With an explicit ``sampler``, the beam path runs iff the sampler is
+    tree-backed (a :class:`~repro.core.samplers.TreeSampler`); every other
+    proposal falls back to dense scoring debiased by that sampler.
     """
-    if cfg.kind != "adversarial_ns" or gen.tree is None:
-        scores = predictive_scores(cfg, params, gen, h, x_gen)
+    if sampler is not None:
+        tree = getattr(sampler, "tree", None)
+    else:
+        tree = gen.tree if cfg.kind == "adversarial_ns" else None
+    if tree is None:
+        scores = predictive_scores(cfg, params, gen, h, x_gen,
+                                   sampler=sampler)
         top, labels = jax.lax.top_k(scores, topk)
         return top, labels.astype(jnp.int32)
     if beam is None:
         beam = max(4 * topk, 16)
     beam = min(beam, tree_lib.padded_size(cfg.num_labels))
-    cand, log_pn = tree_lib.beam_search(gen.tree, x_gen, beam, beam)
+    cand, log_pn = tree_lib.beam_search(tree, x_gen, beam, beam)
     top, labels = rescore_candidates(cfg, params, h, cand, log_pn,
                                      min(topk, beam), score_fn=score_fn)
     if topk > beam:    # keep the documented (..., topk) output shape
@@ -412,9 +442,10 @@ def predictive_topk(cfg: HeadConfig, params: HeadParams, gen: Generator,
 
 
 def predictive_log_likelihood(cfg, params, gen, h, x_gen, y,
-                              mask: Optional[jax.Array] = None):
+                              mask: Optional[jax.Array] = None,
+                              sampler: Optional[NegativeSampler] = None):
     """Mean test log-likelihood log softmax(scores)[y] (paper Fig. 1)."""
-    scores = predictive_scores(cfg, params, gen, h, x_gen)
+    scores = predictive_scores(cfg, params, gen, h, x_gen, sampler=sampler)
     logp = scores - jax.nn.logsumexp(scores, axis=-1, keepdims=True)
     pos = jnp.take_along_axis(logp, y[..., None].astype(jnp.int32),
                               axis=-1)[..., 0]
@@ -424,8 +455,9 @@ def predictive_log_likelihood(cfg, params, gen, h, x_gen, y,
 
 
 def predictive_accuracy(cfg, params, gen, h, x_gen, y,
-                        mask: Optional[jax.Array] = None):
-    scores = predictive_scores(cfg, params, gen, h, x_gen)
+                        mask: Optional[jax.Array] = None,
+                        sampler: Optional[NegativeSampler] = None):
+    scores = predictive_scores(cfg, params, gen, h, x_gen, sampler=sampler)
     correct = (jnp.argmax(scores, axis=-1) == y).astype(jnp.float32)
     if mask is None:
         return jnp.mean(correct)

@@ -1,0 +1,440 @@
+"""Pluggable negative-sampling proposals: the ``NegativeSampler`` protocol.
+
+The paper's Theorem 2 says gradient SNR is maximized when the proposal
+p_n(y|x) matches the data distribution p_D(y|x). PR 5 factored the
+*objective* out of the sampler (`kernels.sampled_loss.loss_and_coeffs`);
+this module factors out the *proposal*, so the adversarial tree can be
+benchmarked head-to-head against real alternatives instead of only the
+uniform/unigram strawmen hard-wired into ``heads.sample_negatives``.
+
+Every sampler implements three methods:
+
+  sample(rng, x_gen, shape) -> (ids, log_pn)
+      Draw proposal labels with the given shape (= batch_shape + (n_neg,));
+      ``x_gen`` is the conditioning feature with shape batch_shape + (k,)
+      (conditional samplers broadcast it over the trailing draw axis).
+      ``log_pn`` is the *exact* log proposal probability of each draw —
+      required for Eq. 5 debiasing and the NCE / sampled-softmax
+      corrections, so approximate samplers must report the probability of
+      the distribution they actually sampled from, not of the
+      distribution they approximate.
+  log_prob(x_gen, y) -> log p_n(y|x)
+      Proposal log-probability of given labels (positive-slot debiasing).
+  log_prob_all(x_gen) -> (..., C)
+      Dense log p_n(·|x) for all labels — used for full-vocab Eq. 5 bias
+      removal and for the protocol property tests (sums to 1).
+
+Implementations:
+
+  TreeSampler     — the paper's adversarial tree, O(k log C) per draw.
+  UniformSampler  — uniform over labels, O(1).
+  UnigramSampler  — empirical label frequencies via inverse CDF,
+                    O(log C). The sampling CDF is built from *unsmoothed*
+                    counts (count-0 labels get an empty interval and are
+                    never drawn) while ``freq_log`` keeps the 1e-12
+                    smoothing so debiasing of observed labels stays
+                    finite.
+  LshSampler      — signed-random-projection buckets over label
+                    embeddings ("A Tale of Two Efficient and Informative
+                    Negative Sampling Distributions", Daghaghi et al.):
+                    negatives come from the query's bucket, mixed with an
+                    eps-uniform floor so log_prob is finite everywhere.
+  RffSampler      — Random Fourier (positive) feature approximation of
+                    the softmax kernel (Rawat et al., sampled softmax
+                    with kernel-based sampling): p_n(y|x) ∝ φ(x)·φ(e_y),
+                    sampled exactly in O(D log C) via the feature-
+                    component mixture, again with an eps-uniform floor.
+
+All samplers are NamedTuples (hence jax pytrees): close over them in a
+jitted train step, or pass them through pytree boundaries. Conditional
+samplers built from a feature snapshot (LSH/RFF) are static during
+training — unlike the tree they are not refreshed by the generator-fit
+loop.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tree as tree_lib
+
+SAMPLER_KINDS = ("tree", "uniform", "unigram", "lsh", "rff")
+
+
+class NegativeSampler(Protocol):
+    """Structural protocol — see the module docstring for the contract."""
+
+    def sample(self, rng: jax.Array, x_gen: jax.Array,
+               shape: Tuple[int, ...]) -> Tuple[jax.Array, jax.Array]:
+        ...
+
+    def log_prob(self, x_gen: jax.Array, y: jax.Array) -> jax.Array:
+        ...
+
+    def log_prob_all(self, x_gen: jax.Array) -> jax.Array:
+        ...
+
+
+def _align(x_gen: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+    """Broadcast conditioning features to ``shape + (k,)``.
+
+    ``x_gen`` arrives either already per-draw (ndim-1 == len(shape)) or
+    per-batch-element (one fewer dim: the trailing n_neg axis is added).
+    """
+    shape = tuple(shape)
+    if x_gen.ndim - 1 != len(shape):
+        x_gen = x_gen[..., None, :]
+    return jnp.broadcast_to(x_gen, shape + (x_gen.shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# Tree / uniform / unigram (the proposals the head kinds used to hard-wire).
+# ---------------------------------------------------------------------------
+
+class TreeSampler(NamedTuple):
+    """The paper's adversarial proposal: ancestral sampling down the
+    balanced probabilistic tree, O(k log C) per draw (§3)."""
+    tree: tree_lib.Tree
+
+    def sample(self, rng, x_gen, shape):
+        return tree_lib.sample(self.tree, _align(x_gen, shape), rng)
+
+    def log_prob(self, x_gen, y):
+        return tree_lib.log_prob(self.tree, _align(x_gen, y.shape), y)
+
+    def log_prob_all(self, x_gen):
+        return tree_lib.log_prob_all(self.tree, x_gen)
+
+
+class UniformSampler(NamedTuple):
+    """Uniform over the C real labels (baseline i)."""
+    num_labels: int
+
+    def sample(self, rng, x_gen, shape):
+        ids = jax.random.randint(rng, shape, 0, self.num_labels)
+        return ids, jnp.full(shape, -jnp.log(float(self.num_labels)))
+
+    def log_prob(self, x_gen, y):
+        return jnp.full(y.shape, -jnp.log(float(self.num_labels)))
+
+    def log_prob_all(self, x_gen):
+        c = self.num_labels
+        return jnp.full(x_gen.shape[:-1] + (c,), -jnp.log(float(c)))
+
+
+class UnigramSampler(NamedTuple):
+    """Empirical label frequencies (baseline ii), inverse-CDF sampling.
+
+    ``freq_cdf`` is the *unsmoothed* inclusive CDF normalized so the last
+    entry is exactly 1.0; with ``side='right'`` a count-0 label owns an
+    empty interval [cdf[i-1], cdf[i]) and can never be drawn, and a draw
+    landing exactly on a boundary maps to the bucket *above* it (the one
+    whose mass it belongs to). ``freq_log`` keeps the 1e-12 smoothing so
+    debiasing an *observed* label (which may have count 0 under drift)
+    stays finite.
+    """
+    freq_log: jax.Array   # (C,) smoothed log-frequencies (debiasing)
+    freq_cdf: jax.Array   # (C,) unsmoothed inclusive CDF (sampling)
+
+    def sample(self, rng, x_gen, shape):
+        u = jax.random.uniform(rng, shape)
+        ids = jnp.searchsorted(self.freq_cdf, u, side="right")
+        ids = jnp.clip(ids, 0, self.freq_cdf.shape[0] - 1).astype(jnp.int32)
+        return ids, self.freq_log[ids]
+
+    def log_prob(self, x_gen, y):
+        return self.freq_log[y]
+
+    def log_prob_all(self, x_gen):
+        return jnp.broadcast_to(self.freq_log,
+                                x_gen.shape[:-1] + self.freq_log.shape)
+
+
+def unigram_from_counts(label_counts) -> UnigramSampler:
+    """Build a UnigramSampler from raw label counts.
+
+    The single definition of the frequency proposal — ``heads.
+    make_freq_generator`` delegates here so the compat shim and the
+    protocol path cannot drift.
+    """
+    counts = jnp.asarray(label_counts, jnp.float32)
+    smoothed = counts + 1e-12
+    freq_log = jnp.log(smoothed / smoothed.sum())
+    cdf = jnp.cumsum(counts)
+    # Normalizing by the last entry makes it exactly 1.0 (x/x == 1 in
+    # IEEE), so for any u < 1 searchsorted(side='right') returns a label
+    # with positive count: zero-count labels repeat their predecessor's
+    # cumulative value and never satisfy "first entry > u".
+    cdf = cdf / cdf[-1]
+    return UnigramSampler(freq_log=freq_log, freq_cdf=cdf)
+
+
+# ---------------------------------------------------------------------------
+# LSH proposal (signed random projections over label embeddings).
+# ---------------------------------------------------------------------------
+
+class LshSampler(NamedTuple):
+    """Bucket-uniform proposal from signed-random-projection LSH.
+
+    Labels are hashed by the sign pattern of ``n_bits`` random
+    projections of their embeddings; a query hashes its feature with the
+    same planes and draws negatives uniformly from its own bucket —
+    labels whose embeddings point the same way as the query, i.e. the
+    hard negatives an informative proposal should favor. The proposal is
+    the mixture
+
+        p(y|x) = eps/C + (1-eps) * [ 1{code(y)=code(x)} / |bucket(x)|
+                                      (or 1/C if the bucket is empty) ]
+
+    so ``log_prob`` is finite for every label (required by Eq. 5
+    debiasing: the *positive* label is usually outside the bucket).
+    The per-draw log proposal probability is exact, not approximate.
+    """
+    planes: jax.Array       # (k, n_bits) random hyperplanes
+    label_code: jax.Array   # (C,) int32 bucket code per label
+    order: jax.Array        # (C,) int32 labels sorted by code
+    starts: jax.Array       # (2**n_bits + 1,) int32 bucket offsets
+    eps: jax.Array          # scalar uniform-mixture weight
+
+    @property
+    def num_labels(self) -> int:
+        return self.order.shape[0]
+
+    def _code(self, x):
+        bits = (x @ self.planes >= 0).astype(jnp.int32)
+        pow2 = (2 ** jnp.arange(self.planes.shape[1])).astype(jnp.int32)
+        return jnp.sum(bits * pow2, axis=-1)
+
+    def _bucket_prob(self, code, member):
+        """(1-eps)-component probability of a label given the query code
+        and whether the label is in the query's bucket."""
+        size = (self.starts[code + 1] - self.starts[code]).astype(
+            jnp.float32)
+        c = float(self.num_labels)
+        return jnp.where(size > 0,
+                         member.astype(jnp.float32)
+                         / jnp.maximum(size, 1.0),
+                         1.0 / c)
+
+    def log_prob(self, x_gen, y):
+        code = self._code(_align(x_gen, y.shape))
+        p_sel = self._bucket_prob(code, self.label_code[y] == code)
+        c = float(self.num_labels)
+        return jnp.log(self.eps / c + (1.0 - self.eps) * p_sel)
+
+    def log_prob_all(self, x_gen):
+        code = self._code(x_gen)                            # (...,)
+        member = self.label_code == code[..., None]         # (..., C)
+        p_sel = self._bucket_prob(code[..., None], member)
+        c = float(self.num_labels)
+        return jnp.log(self.eps / c + (1.0 - self.eps) * p_sel)
+
+    def sample(self, rng, x_gen, shape):
+        x = _align(x_gen, shape)
+        code = self._code(x)
+        size = self.starts[code + 1] - self.starts[code]
+        k_mix, k_off, k_uni = jax.random.split(rng, 3)
+        # Draw from the bucket component with prob 1-eps (falling back to
+        # uniform when the bucket is empty), else from the uniform floor.
+        in_bucket = ((jax.random.uniform(k_mix, shape) >= self.eps)
+                     & (size > 0))
+        off = jnp.minimum(
+            (jax.random.uniform(k_off, shape)
+             * size.astype(jnp.float32)).astype(jnp.int32),
+            jnp.maximum(size - 1, 0))
+        bucket_ids = self.order[self.starts[code] + off]
+        uni_ids = jax.random.randint(k_uni, shape, 0, self.num_labels)
+        ids = jnp.where(in_bucket, bucket_ids, uni_ids).astype(jnp.int32)
+        return ids, self.log_prob(x_gen, ids)
+
+
+def fit_lsh_sampler(label_emb, n_bits: int = 8, eps: float = 0.05,
+                    seed: int = 0) -> LshSampler:
+    """Hash (C, k) label embeddings into 2**n_bits signed-projection
+    buckets (host-side, O(C·k·n_bits))."""
+    emb = np.asarray(label_emb, np.float32)
+    c, k = emb.shape
+    assert 1 <= n_bits <= 20, n_bits
+    rng = np.random.default_rng(seed)
+    planes = rng.standard_normal((k, n_bits)).astype(np.float32)
+    codes = ((emb @ planes) >= 0).astype(np.int64) @ (
+        2 ** np.arange(n_bits, dtype=np.int64))
+    order = np.argsort(codes, kind="stable").astype(np.int32)
+    counts = np.bincount(codes, minlength=2 ** n_bits)
+    starts = np.zeros(2 ** n_bits + 1, np.int32)
+    starts[1:] = np.cumsum(counts)
+    return LshSampler(planes=jnp.asarray(planes),
+                      label_code=jnp.asarray(codes, jnp.int32),
+                      order=jnp.asarray(order),
+                      starts=jnp.asarray(starts),
+                      eps=jnp.float32(eps))
+
+
+# ---------------------------------------------------------------------------
+# RFF proposal (kernel-based sampled softmax).
+# ---------------------------------------------------------------------------
+
+class RffSampler(NamedTuple):
+    """Positive random-feature approximation of the softmax proposal.
+
+    With features φ(v) = exp(v·ω_d − |v|²/2) (Performer-style positive
+    features; E_ω[φ(a)·φ(b)] = exp(a·b)), the kernel component of the
+    proposal is
+
+        p(y|x) ∝ Σ_d φ_d(x) z_{y,d},     z_{y,d} = φ_d(e_y),
+
+    which is a D-component mixture: pick component d with probability
+    ∝ φ_d(x)·Σ_y z_{y,d}, then draw y from the per-component CDF — exact
+    sampling in O(D + log C) per draw with no O(C) work at sample time.
+    Mixed with an eps/C uniform floor so log_prob is finite even where
+    the feature map underflows. ``temperature`` T approximates
+    softmax(x·e/T) by scaling both sides with 1/sqrt(T).
+
+    Memory: ``log_z``/``comp_cdf`` are (C, D)/(D, C) — comparable to one
+    extra head embedding; ``sample`` gathers a (batch, C) block of CDF
+    rows, so this proposal is for benchmark-scale C, not the 2M-label
+    regime (the tree stays O(k log C) there).
+    """
+    omega: jax.Array        # (k, D) random directions
+    log_z: jax.Array        # (C, D) log label features
+    comp_logsum: jax.Array  # (D,) log Σ_y z_{y,d}
+    comp_cdf: jax.Array     # (D, C) per-component inclusive CDF (ends 1.0)
+    query_scale: jax.Array  # scalar 1/sqrt(temperature)
+    eps: jax.Array          # scalar uniform-mixture weight
+
+    @property
+    def num_labels(self) -> int:
+        return self.log_z.shape[0]
+
+    def _log_phi(self, x):
+        xs = x.astype(jnp.float32) * self.query_scale
+        return xs @ self.omega - 0.5 * jnp.sum(xs * xs, -1, keepdims=True)
+
+    def _features(self, x):
+        """exp-domain query features shifted by the global label-feature
+        max (the shift cancels between numerator and normalizer)."""
+        lp = self._log_phi(x)
+        mx = jnp.max(lp, axis=-1, keepdims=True)
+        e = jnp.exp(lp - mx)                          # (..., D)
+        mz = jnp.max(self.log_z)
+        den = e @ jnp.exp(self.comp_logsum - mz)      # (...,)
+        return e, mz, den
+
+    def _mixture_log_prob(self, num, den):
+        c = float(self.num_labels)
+        p_rff = jnp.where(den > 0, num / jnp.maximum(den, 1e-38), 1.0 / c)
+        return jnp.log(self.eps / c + (1.0 - self.eps) * p_rff)
+
+    def log_prob(self, x_gen, y):
+        e, mz, den = self._features(_align(x_gen, y.shape))
+        num = jnp.sum(e * jnp.exp(self.log_z[y] - mz), axis=-1)
+        return self._mixture_log_prob(num, den)
+
+    def log_prob_all(self, x_gen):
+        e, mz, den = self._features(x_gen)
+        num = e @ jnp.exp(self.log_z - mz).T          # (..., C)
+        return self._mixture_log_prob(num, den[..., None])
+
+    def sample(self, rng, x_gen, shape):
+        x = _align(x_gen, shape)
+        lp = self._log_phi(x)                         # shape + (D,)
+        k_d, k_u, k_mix, k_uni = jax.random.split(rng, 4)
+        d = jax.random.categorical(k_d, lp + self.comp_logsum)
+        u = jax.random.uniform(k_u, shape)
+        rows = self.comp_cdf[d.reshape(-1)]           # (T, C)
+        rff_ids = jax.vmap(
+            lambda r, uu: jnp.searchsorted(r, uu, side="right"))(
+                rows, u.reshape(-1)).reshape(shape)
+        rff_ids = jnp.clip(rff_ids, 0, self.num_labels - 1)
+        use_rff = jax.random.uniform(k_mix, shape) >= self.eps
+        uni_ids = jax.random.randint(k_uni, shape, 0, self.num_labels)
+        ids = jnp.where(use_rff, rff_ids, uni_ids).astype(jnp.int32)
+        return ids, self.log_prob(x_gen, ids)
+
+
+def fit_rff_sampler(label_emb, n_features: int = 64, eps: float = 0.05,
+                    temperature: float = 1.0, seed: int = 0) -> RffSampler:
+    """Build the RFF proposal from (C, k) label embeddings (host-side,
+    float64 so the per-component CDFs are well conditioned)."""
+    emb = np.asarray(label_emb, np.float64)
+    c, k = emb.shape
+    scale = 1.0 / np.sqrt(float(temperature))
+    rng = np.random.default_rng(seed)
+    omega = rng.standard_normal((k, n_features))
+    emb_s = emb * scale
+    log_z = emb_s @ omega - 0.5 * (emb_s ** 2).sum(1, keepdims=True)
+    mz = log_z.max()
+    z = np.exp(log_z - mz)                       # (C, D)
+    comp_sum = z.sum(0)                          # (D,)
+    comp_logsum = np.log(np.maximum(comp_sum, 1e-300)) + mz
+    cdf = np.cumsum(z, axis=0).T                 # (D, C)
+    last = cdf[:, -1:]
+    # Dividing each row by its own last entry makes it exactly 1.0, so
+    # side='right' sampling never falls off the end (see UnigramSampler).
+    cdf = np.where(last > 0, cdf / np.maximum(last, 1e-300),
+                   (np.arange(1, c + 1, dtype=np.float64) / c)[None, :])
+    return RffSampler(omega=jnp.asarray(omega, jnp.float32),
+                      log_z=jnp.asarray(log_z, jnp.float32),
+                      comp_logsum=jnp.asarray(comp_logsum, jnp.float32),
+                      comp_cdf=jnp.asarray(cdf, jnp.float32),
+                      query_scale=jnp.float32(scale),
+                      eps=jnp.float32(eps))
+
+
+# ---------------------------------------------------------------------------
+# Construction helpers.
+# ---------------------------------------------------------------------------
+
+def class_mean_embeddings(x_gen, labels, num_labels: int) -> np.ndarray:
+    """(C, k) label embeddings as class means of generator features
+    (labels never observed get the zero vector)."""
+    x = np.asarray(x_gen, np.float64)
+    y = np.asarray(labels).reshape(-1)
+    sums = np.zeros((num_labels, x.shape[-1]), np.float64)
+    np.add.at(sums, y, x.reshape(-1, x.shape[-1]))
+    counts = np.bincount(y, minlength=num_labels).astype(np.float64)
+    return sums / np.maximum(counts, 1.0)[:, None]
+
+
+def fit_sampler(kind: str, x_gen, labels, num_labels: int, seed: int = 0,
+                **kwargs) -> NegativeSampler:
+    """Fit a sampler of the given kind from (features, labels) snapshots.
+
+    ``tree`` runs the full generator fit (repro.core.tree_fit); ``lsh``/
+    ``rff`` embed labels as class means of ``x_gen``; ``unigram`` needs
+    only label counts; ``uniform`` ignores the snapshot.
+    """
+    assert kind in SAMPLER_KINDS, kind
+    if kind == "uniform":
+        return UniformSampler(num_labels=num_labels)
+    if kind == "unigram":
+        counts = np.bincount(np.asarray(labels).reshape(-1),
+                             minlength=num_labels).astype(np.float32)
+        return unigram_from_counts(counts)
+    if kind == "tree":
+        from repro.core.tree_fit import FitConfig, fit_tree
+        tree = fit_tree(np.asarray(x_gen, np.float32),
+                        np.asarray(labels), num_labels,
+                        config=kwargs.pop("config", None)
+                        or FitConfig(reg=0.1, seed=seed))
+        return TreeSampler(tree=tree)
+    emb = class_mean_embeddings(x_gen, labels, num_labels)
+    if kind == "lsh":
+        return fit_lsh_sampler(emb, seed=seed, **kwargs)
+    return fit_rff_sampler(emb, seed=seed, **kwargs)
+
+
+def sampler_from_config(cfg, gen) -> NegativeSampler:
+    """Compatibility shim: the proposal a ``HeadConfig.kind`` hard-wired
+    before the protocol existed. ``gen`` is the ``heads.Generator``."""
+    if cfg.kind in ("uniform_ns", "ove", "augment_reduce"):
+        return UniformSampler(num_labels=cfg.num_labels)
+    if cfg.kind == "freq_ns":
+        return UnigramSampler(freq_log=gen.freq_log,
+                              freq_cdf=gen.freq_cdf)
+    if cfg.kind in ("adversarial_ns", "nce", "sampled_softmax"):
+        return TreeSampler(tree=gen.tree)
+    raise ValueError(f"{cfg.kind} draws no negatives")

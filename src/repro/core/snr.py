@@ -34,8 +34,63 @@ def snr_closed_form(p_d: jax.Array, p_n: jax.Array) -> jax.Array:
 
 
 def snr_empirical(p_d: jax.Array, p_n: jax.Array, rng: jax.Array,
-                  n_samples: int = 200_000) -> jax.Array:
-    """Monte-Carlo eta-bar from stochastic gradients at the optimum."""
+                  n_samples: int = 200_000, chunk: int = 0) -> jax.Array:
+    """Monte-Carlo eta-bar from stochastic gradients at the optimum,
+    accumulated *streamed per sample*.
+
+    The sum Tr[Cov H^-1] = sum_{x,y} E[g^2]/alpha is linear in the
+    per-draw contributions g^2/alpha, so each sample's ratio can be added
+    to a scalar directly — no dense (X, C) scatter buffer, and the
+    categorical draws are chunked so peak memory is O(chunk·C) instead of
+    O(S·C). At the C the repo now trains at the scatter/materialize
+    buffers OOM; this path does not.
+
+    Per-sample accumulation necessarily re-associates the float32 sums
+    relative to the scatter-then-divide order of
+    :func:`snr_empirical_dense` (the small-C reference), so the two agree
+    to float tolerance, not bit-for-bit; given identical (rng, n_samples,
+    chunk) this estimator is itself bitwise deterministic (pinned in
+    tests/test_snr.py).
+    """
+    n, c = p_d.shape
+    xi_star = jnp.log(p_d + 1e-38) - jnp.log(p_n + 1e-38)
+    sig_pos = jax.nn.sigmoid(-xi_star)     # positive-term factor sigma(-xi*)
+    sig_neg = jax.nn.sigmoid(xi_star)      # negative-term factor sigma(+xi*)
+    logd = jnp.log(p_d + 1e-38)
+    logn = jnp.log(p_n + 1e-38)
+    a = alpha(p_d, p_n) + 1e-38
+
+    if not chunk:
+        # Keep the per-chunk categorical workspace (chunk, C) around 16 MB.
+        chunk = int(max(64, min(8192, (1 << 22) // max(c, 1))))
+    n_chunks = -(-n_samples // chunk)
+    total = n_chunks * chunk
+
+    def body(carry, i):
+        kx, ky, kn = jax.random.split(jax.random.fold_in(rng, i), 3)
+        xs = jax.random.randint(kx, (chunk,), 0, n)
+        ys = jax.random.categorical(ky, logd[xs])
+        yns = jax.random.categorical(kn, logn[xs])
+        # g-hat (Eq. A8): -N sigma(-xi_{x,y}) at (x,y), +N sigma(xi_{x,y'})
+        # at (x,y'); the entries coincide when y == y'.
+        g_pos = -n * sig_pos[xs, ys]
+        g_neg = n * sig_neg[xs, yns]
+        same = ys == yns
+        term = jnp.where(same,
+                         (g_pos + g_neg) ** 2 / a[xs, ys],
+                         g_pos ** 2 / a[xs, ys] + g_neg ** 2 / a[xs, yns])
+        return carry + jnp.sum(term), None
+
+    inv_sum, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                              jnp.arange(n_chunks))
+    return 1.0 / (inv_sum / total)
+
+
+def snr_empirical_dense(p_d: jax.Array, p_n: jax.Array, rng: jax.Array,
+                        n_samples: int = 200_000) -> jax.Array:
+    """Reference estimator with the dense (X, C) scatter accumulation —
+    kept for small-C cross-checks of :func:`snr_empirical` (it OOMs at
+    large C, which is why the streamed path is the default)."""
     n, c = p_d.shape
     xi_star = jnp.log(p_d + 1e-38) - jnp.log(p_n + 1e-38)
     sig_pos = jax.nn.sigmoid(-xi_star)     # positive-term factor sigma(-xi*)

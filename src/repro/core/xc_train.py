@@ -22,7 +22,8 @@ from repro.optim import OptimizerConfig, apply_updates, init_opt_state
 def train_linear_head(cfg: HeadConfig, gen: Generator, x, xg, y,
                       lr: float, steps: int, seed: int = 0,
                       batch_size: int = 256,
-                      callback=None, head_update: str = "auto"):
+                      callback=None, head_update: str = "auto",
+                      sampler=None):
     """Minibatch Adagrad on the head loss; returns trained params.
 
     Minibatching matters for fidelity: with full-batch steps every label
@@ -39,6 +40,9 @@ def train_linear_head(cfg: HeadConfig, gen: Generator, x, xg, y,
     independent of ``cfg.num_labels``; ``dense`` is the O(C·K) autodiff
     path (and the only option for `softmax`). Both run the same Adagrad
     math, so the trained params match on every touched row.
+
+    ``sampler`` (a ``repro.core.samplers.NegativeSampler``) overrides the
+    negative-sampling proposal the head derives from ``cfg.kind``/``gen``.
     """
     opt_cfg = OptimizerConfig(name="adagrad", learning_rate=lr, eps=1e-8)
     params = heads_lib.init_head_params(jax.random.PRNGKey(seed),
@@ -57,11 +61,11 @@ def train_linear_head(cfg: HeadConfig, gen: Generator, x, xg, y,
         xb, xgb, yb = x[idx], xg[idx], y[idx]
         if head_update == "sparse":
             loss, _, grads, _ = heads_lib.sparse_head_loss(
-                cfg, p, gen, xb, xgb, yb, k_neg)
+                cfg, p, gen, xb, xgb, yb, k_neg, sampler=sampler)
         else:
             loss, grads = jax.value_and_grad(
                 lambda pp: heads_lib.head_loss(cfg, pp, gen, xb, xgb, yb,
-                                               k_neg)[0])(p)
+                                               k_neg, sampler=sampler)[0])(p)
         p, opt, _ = apply_updates(opt_cfg, p, grads, opt)
         return p, opt, loss
 
@@ -78,18 +82,25 @@ def tune_and_train(kind: str, gen: Generator, num_labels: int,
                    x, xg, y, x_val, xg_val, y_val, *,
                    lr_grid: Sequence[float] = (0.03, 0.1, 0.3),
                    steps: int = 300, tune_steps: Optional[int] = None,
-                   reg: float = 1e-4, n_neg: int = 1,
+                   reg: float = 1e-4, n_neg: int = 1, sampler=None,
                    ) -> Tuple[HeadConfig, object, float]:
-    """Paper §5 protocol. Returns (cfg, params, best_lr)."""
+    """Paper §5 protocol. Returns (cfg, params, best_lr).
+
+    ``sampler`` overrides the negative proposal for both training and the
+    Eq. 5 debias in the validation accuracy (the two must agree or the
+    selection is biased)."""
     cfg = HeadConfig(num_labels=num_labels, kind=kind, n_neg=n_neg,
                      reg=reg)
     tune_steps = tune_steps or max(steps // 3, 50)
     best_lr, best_acc = lr_grid[0], -1.0
     for lr in lr_grid:
-        p = train_linear_head(cfg, gen, x, xg, y, lr, tune_steps)
+        p = train_linear_head(cfg, gen, x, xg, y, lr, tune_steps,
+                              sampler=sampler)
         acc = float(heads_lib.predictive_accuracy(cfg, p, gen, x_val,
-                                                  xg_val, y_val))
+                                                  xg_val, y_val,
+                                                  sampler=sampler))
         if acc > best_acc:
             best_lr, best_acc = lr, acc
-    params = train_linear_head(cfg, gen, x, xg, y, best_lr, steps)
+    params = train_linear_head(cfg, gen, x, xg, y, best_lr, steps,
+                               sampler=sampler)
     return cfg, params, best_lr

@@ -82,6 +82,51 @@ class AsyncRefresher:
         return self._result, self._submit_step
 
 
+def refresh_on_snr(step: int, fit_step: int, snr_ewma: float,
+                   snr_ref: float, threshold: float, patience: int) -> bool:
+    """SNR-driven refresh trigger (DESIGN.md §9).
+
+    Fires when the online signal-mass EWMA has degraded below
+    ``threshold`` x the post-install reference level. ``fit_step`` is the
+    *install* step of the current generator (submit step + swap delay for
+    async refreshes); ``patience`` steps must elapse after the install
+    before the trigger can fire, which also gives the reference time to be
+    armed (the loop freezes ``snr_ref`` = EWMA ``patience`` steps after
+    install). Both ``snr_ewma`` and ``snr_ref`` are < 0 while unset, so
+    the trigger is inert until a generator is installed AND the reference
+    is armed — a fresh generator never fires.
+    """
+    return (fit_step >= 0 and snr_ref > 0 and snr_ewma >= 0
+            and step - fit_step >= patience
+            and snr_ewma < threshold * snr_ref)
+
+
+def latest_snapshot_step(directory: str) -> Optional[int]:
+    """Largest step with a complete ``gensnap`` artifact (None if none).
+
+    SNR-triggered submits are data-dependent, not config-determined, so a
+    resume cannot recompute the submit step the way the periodic schedule
+    can (``LoopConfig.last_submit_before``) — it recovers it from the
+    artifact that the submit persisted.
+    """
+    import os
+
+    from repro.checkpoint.checkpoint import MANIFEST
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if not name.startswith(SNAP_PREFIX):
+            continue
+        try:
+            s = int(name[len(SNAP_PREFIX):])
+        except ValueError:
+            continue
+        if os.path.exists(os.path.join(directory, name, MANIFEST)):
+            steps.append(s)
+    return max(steps) if steps else None
+
+
 def snapshot_path_exists(directory: str, step: int) -> bool:
     import os
 

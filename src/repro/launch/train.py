@@ -70,6 +70,21 @@ def main():
     ap.add_argument("--gen-swap-delay", type=int, default=4)
     ap.add_argument("--gen-method", default="levelwise",
                     choices=("levelwise", "sequential", "sharded"))
+    ap.add_argument("--sampler", default="config",
+                    choices=("config", "uniform", "unigram", "lsh", "rff"),
+                    help="negative-sampling proposal (core.samplers): "
+                         "'config' derives it from --head + the generator "
+                         "state (the tree for adversarial_ns); the others "
+                         "are fitted once from a model snapshot at startup "
+                         "and override the head's default proposal")
+    ap.add_argument("--gen-refresh-mode", default="period",
+                    choices=("period", "snr"),
+                    help="'period' refits every --gen-refresh steps; "
+                         "'snr' refits when the online gradient-SNR proxy "
+                         "(DESIGN.md §9) degrades past --snr-threshold x "
+                         "its post-install reference")
+    ap.add_argument("--snr-threshold", type=float, default=0.85)
+    ap.add_argument("--snr-patience", type=int, default=8)
     args = ap.parse_args()
 
     from repro.launch.mesh import make_host_mesh
@@ -94,11 +109,25 @@ def main():
     # O(C·K) memcpy. Not safe with --gen-async: the background fit reads
     # the submitted state while training keeps stepping (donation would
     # invalidate its buffers mid-fit).
+    sampler = None
+    if args.sampler != "config":
+        # Fit the override proposal once from a startup snapshot, in the
+        # head state's own feature space (x_gen = h @ proj) so sampling
+        # and the Eq. 5 debias see identical features.
+        from repro.train.generator_fit import fit_lm_sampler
+        sampler, _ = fit_lm_sampler(
+            args.sampler, state.params, cfg,
+            ({k: jnp.asarray(v) for k, v in make(10_000 + i).items()}
+             for i in range(4)),
+            proj=state.head_state.proj)
+        print(f"sampler: {type(sampler).__name__} (--sampler "
+              f"{args.sampler})")
+
     donate = () if args.gen_async else (0,)
     train_step = jax.jit(make_train_step(cfg, hcfg, opt,
                                          head_update=args.head_update,
                                          head_kernel=args.head_kernel,
-                                         mesh=mesh),
+                                         mesh=mesh, sampler=sampler),
                          in_shardings=(state_sh, batch_sh, None),
                          out_shardings=(state_sh, None),
                          donate_argnums=donate)
@@ -120,7 +149,10 @@ def main():
                       gen_warmup_steps=args.gen_warmup,
                       gen_refresh_steps=args.gen_refresh,
                       gen_async=args.gen_async,
-                      gen_swap_delay=args.gen_swap_delay)
+                      gen_swap_delay=args.gen_swap_delay,
+                      gen_refresh_mode=args.gen_refresh_mode,
+                      snr_threshold=args.snr_threshold,
+                      snr_patience=args.snr_patience)
     state, hist = run_loop(
         state, train_step, batch_fn, loop, jax.random.PRNGKey(1),
         gen_fit_fn=gen_cb,

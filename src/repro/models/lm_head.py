@@ -98,11 +98,14 @@ def masked_full_logits(cfg: ModelConfig, params: HeadParams, h: jax.Array
 def lm_head_loss(cfg: ModelConfig, hcfg: HeadConfig, params: HeadParams,
                  state: LMHeadState, h: jax.Array, labels: jax.Array,
                  rng: jax.Array, mask: Optional[jax.Array] = None,
-                 score_fn=None):
+                 score_fn=None, sampler=None):
     """Next-token loss on final hiddens h (…, d) and labels (…,).
 
     Dispatches to the configured head strategy; `softmax` uses the padded/
     softcapped full-logit path (the O(K·C) baseline the paper replaces).
+    ``sampler`` overrides the negative-sampling proposal (a
+    ``repro.core.samplers.NegativeSampler``); default derives it from
+    ``hcfg.kind`` + the generator state.
     """
     x_gen = gen_features(state, h)
     if hcfg.kind == "softmax":
@@ -120,14 +123,15 @@ def lm_head_loss(cfg: ModelConfig, hcfg: HeadConfig, params: HeadParams,
                     if cfg.final_logit_softcap
                     else heads_lib.candidate_scores)
     return heads_lib.head_loss(hcfg, params, state.gen, h, x_gen, labels,
-                               rng, score_fn=score_fn, mask=mask)
+                               rng, score_fn=score_fn, mask=mask,
+                               sampler=sampler)
 
 
 def lm_sparse_head_loss(cfg: ModelConfig, hcfg: HeadConfig,
                         params: HeadParams, state: LMHeadState,
                         h: jax.Array, labels: jax.Array, rng: jax.Array,
                         mask: Optional[jax.Array] = None,
-                        use_kernel: bool = False):
+                        use_kernel: bool = False, sampler=None):
     """Sampled-head loss with O(B·K·n_neg) analytic gradients (DESIGN.md
     §8): same loss/metrics stream as :func:`lm_head_loss` (softcap folded
     into the coefficients), plus the deduped ``SparseRows`` head gradient
@@ -135,7 +139,8 @@ def lm_sparse_head_loss(cfg: ModelConfig, hcfg: HeadConfig,
     x_gen = gen_features(state, h)
     return heads_lib.sparse_head_loss(
         hcfg, params, state.gen, h, x_gen, labels.astype(jnp.int32), rng,
-        mask=mask, softcap=cfg.final_logit_softcap, use_kernel=use_kernel)
+        mask=mask, softcap=cfg.final_logit_softcap, use_kernel=use_kernel,
+        sampler=sampler)
 
 
 def lm_predictive_topk(cfg: ModelConfig, hcfg: HeadConfig,

@@ -233,4 +233,6 @@ def train_state_shardings(cfg: ModelConfig, mesh: Mesh, state_abstract):
         params=p_sh,
         opt_state=opt_mirror(state_abstract.opt_state),
         head_state=replicated(mesh, state_abstract.head_state),
-        gen_fit_step=NamedSharding(mesh, P()))
+        gen_fit_step=NamedSharding(mesh, P()),
+        snr_ewma=NamedSharding(mesh, P()),
+        snr_ref=NamedSharding(mesh, P()))

@@ -18,7 +18,13 @@ full history whose last token is the decode step's input. Value: the
 numpy arrays of shape (beam,). Exactness: on a true prefix repeat the
 hidden state is bit-identical, so scoring cached candidates reproduces the
 fresh path byte-for-byte; the cache can never change outputs, only skip
-work. Eviction is plain LRU. Sizing: the value arrays are tiny
+work — PROVIDED the generator that proposed the entry is still installed.
+A generator swap changes the tree, hence the candidate sets and the Eq. 5
+``log_pn`` debias terms, so every pre-swap entry is stale the moment a new
+head state lands: entries are keyed on an explicit generator ``version``
+and :meth:`CandidateCache.bump_version` (called by
+``Engine.swap_head_state``) retires the whole resident set at once.
+Eviction is plain LRU. Sizing: the value arrays are tiny
 (beam · 8 bytes) but the tuple key costs ~8 bytes per history token plus
 Python object overhead — roughly 2 KB for a 256-token prefix — so size
 the capacity against key memory (a hashed/rolling key is the upgrade path
@@ -40,26 +46,33 @@ class CandidateCache:
     def __init__(self, capacity: int = 4096):
         assert capacity >= 1
         self.capacity = capacity
-        self._data: "OrderedDict[Key, Tuple[np.ndarray, np.ndarray]]" = \
+        self._data: "OrderedDict[tuple, Tuple[np.ndarray, np.ndarray]]" = \
             OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # Generator version the resident entries were proposed under.
+        # Bumped (and the map cleared) on every head-state swap — a cached
+        # (candidates, log_pn) pair is only exact for the tree that
+        # produced it.
+        self.version = 0
+        self.invalidations = 0
 
     def __len__(self) -> int:
         return len(self._data)
 
     def get(self, key: Key) -> Optional[Tuple[np.ndarray, np.ndarray]]:
-        hit = self._data.get(key)
+        hit = self._data.get((self.version, *key))
         if hit is None:
             self.misses += 1
             return None
-        self._data.move_to_end(key)
+        self._data.move_to_end((self.version, *key))
         self.hits += 1
         return hit
 
     def put(self, key: Key, candidates: np.ndarray,
             log_pn: np.ndarray) -> None:
+        key = (self.version, *key)
         if key in self._data:
             self._data.move_to_end(key)
             return
@@ -67,6 +80,14 @@ class CandidateCache:
         if len(self._data) > self.capacity:
             self._data.popitem(last=False)
             self.evictions += 1
+
+    def bump_version(self) -> None:
+        """Invalidate every resident entry (generator swap). The version
+        prefix in the key makes this airtight even if a clear were ever
+        made lazy: post-swap lookups can only match post-swap entries."""
+        self._data.clear()
+        self.version += 1
+        self.invalidations += 1
 
     @property
     def hit_rate(self) -> float:
@@ -76,4 +97,5 @@ class CandidateCache:
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "size": len(self._data),
-                "hit_rate": self.hit_rate}
+                "hit_rate": self.hit_rate, "version": self.version,
+                "invalidations": self.invalidations}

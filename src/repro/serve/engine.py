@@ -309,6 +309,27 @@ class Engine:
         self._queue.append(handle)
         return handle
 
+    def swap_head_state(self, head_state) -> None:
+        """Install a refreshed generator head state (online swap).
+
+        The jitted select/propose/score functions take ``head_state`` as a
+        traced argument, so the swap costs no recompiles. The candidate
+        cache, however, holds (candidates, log_pn) pairs proposed by the
+        OLD tree — under the new generator those candidate sets and Eq. 5
+        debias terms are simply wrong, so every resident entry is
+        invalidated (version bump): the next step on any prefix re-descends
+        the new tree. Requests already in flight continue seamlessly
+        against the new head (greedy decode keeps no head-side state
+        between steps).
+        """
+        if self.beam:
+            assert (self.hcfg.kind == "adversarial_ns"
+                    and head_state.gen.tree is not None), \
+                "beam serving needs a fitted adversarial generator tree"
+        self.head_state = head_state
+        if self.candidate_cache is not None:
+            self.candidate_cache.bump_version()
+
     @property
     def num_pending(self) -> int:
         return len(self._queue)

@@ -150,6 +150,44 @@ def refresh_lm_generator(prev: LMHeadState, params, cfg: ModelConfig,
     return LMHeadState(gen=Generator(tree=tree), proj=prev.proj), counts
 
 
+def fit_lm_sampler(kind: str, params, cfg: ModelConfig,
+                   batches: Iterable[dict], proj=None,
+                   max_tokens: int = 8_192, seed: int = 0, **kwargs):
+    """Fit a :mod:`repro.core.samplers` proposal from an LM snapshot.
+
+    Companion to :func:`fit_lm_generator` for the non-tree samplers the
+    ``NegativeSampler`` protocol added: collect (hidden, next-token)
+    pairs, project hiddens into the generator feature space (``proj`` —
+    pass ``head_state.proj`` so the sampler sees the same ``x_gen`` the
+    training step computes; PCA-fit a fresh projection when ``None``),
+    and fit the requested sampler on per-class mean embeddings
+    (lsh/rff) or label counts (unigram). Returns ``(sampler, proj)``.
+    """
+    from repro.core import samplers as samplers_lib
+
+    if kind == "uniform":
+        proj = (jnp.zeros((cfg.d_model, cfg.gen_feature_dim), jnp.float32)
+                if proj is None else proj)
+        return samplers_lib.UniformSampler(num_labels=cfg.vocab_size), proj
+    feats, labels = collect_features(params, cfg, batches, max_tokens)
+    if kind == "unigram":
+        counts = np.bincount(labels, minlength=cfg.vocab_size).astype(
+            np.float32)
+        proj = (jnp.zeros((cfg.d_model, cfg.gen_feature_dim), jnp.float32)
+                if proj is None else proj)
+        return samplers_lib.unigram_from_counts(counts), proj
+    if proj is None:
+        proj_np, _ = pca_projection(feats, cfg.gen_feature_dim)
+        proj = jnp.asarray(proj_np)
+    # Uncentered projection, matching the train-time x_gen = h @ proj —
+    # unlike the tree fit there is no bias term to fold a centering into
+    # (LSH codes are pure sign(x·plane)).
+    x_gen = feats @ np.asarray(proj, np.float32)
+    sampler = samplers_lib.fit_sampler(kind, x_gen, labels,
+                                       cfg.vocab_size, seed=seed, **kwargs)
+    return sampler, proj
+
+
 def make_gen_fit_fn(cfg: ModelConfig, batch_fn, kind: str,
                     fit_config: Optional[FitConfig] = None,
                     max_tokens: int = 16_384, n_batches: int = 8,

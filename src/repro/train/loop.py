@@ -18,7 +18,14 @@ Production behaviours, all exercised by tests:
     ``submit + gen_swap_delay`` — a pure function of the config, so
     checkpoint/resume replays the exact swap and stays bit-exact (the
     submit-time state is persisted as a ``gensnap`` artifact and the fit,
-    being deterministic, is re-run on resume if it was in flight).
+    being deterministic, is re-run on resume if it was in flight);
+  * SNR-driven refresh (``gen_refresh_mode="snr"``): instead of a fixed
+    period, a refresh is submitted when the online gradient-SNR proxy
+    tracked in ``TrainState.snr_ewma`` degrades below ``snr_threshold`` x
+    the post-install reference (genfit.refresh.refresh_on_snr,
+    DESIGN.md §9). The trigger reads only checkpointed state, so resume
+    replays the same trigger steps; the data-dependent submit step is
+    recovered from the gensnap artifact on resume.
 """
 from __future__ import annotations
 
@@ -33,9 +40,10 @@ import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.genfit.refresh import (AsyncRefresher, drop_snapshot,
-                                  load_snapshot, save_snapshot,
+                                  latest_snapshot_step, load_snapshot,
+                                  refresh_on_snr, save_snapshot,
                                   snapshot_path_exists)
-from repro.train.state import TrainState
+from repro.train.state import TrainState, snr_reset_pair
 
 
 @dataclasses.dataclass
@@ -51,6 +59,13 @@ class LoopConfig:
     gen_refresh_steps: int = 0      # 0 = never refresh after warmup
     gen_async: bool = False         # fit in a background thread
     gen_swap_delay: int = 0         # steps between submit and swap (async)
+    # "period": refresh every gen_refresh_steps (the fields above).
+    # "snr": refresh when the online gradient-SNR proxy (TrainState.
+    # snr_ewma, DESIGN.md §9) degrades below snr_threshold x the
+    # post-install reference; gen_refresh_steps is ignored after warmup.
+    gen_refresh_mode: str = "period"
+    snr_threshold: float = 0.85     # trigger at ewma < threshold * ref
+    snr_patience: int = 8           # min steps after install before trigger
 
     def gen_due(self, step: int) -> bool:
         return (step == self.gen_warmup_steps
@@ -122,7 +137,17 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
     preemption = preemption or Preemption()
     monitor = StragglerMonitor(cfg.straggler_factor, cfg.ewma_alpha)
     history: Dict[str, list] = {"loss": [], "step": []}
-    if cfg.gen_async and cfg.gen_refresh_steps:
+    if cfg.gen_refresh_mode not in ("period", "snr"):
+        raise ValueError(f"unknown gen_refresh_mode "
+                         f"{cfg.gen_refresh_mode!r} (period|snr)")
+    snr_mode = cfg.gen_refresh_mode == "snr"
+    if snr_mode and cfg.gen_async and cfg.gen_swap_delay > 0:
+        if cfg.snr_patience <= cfg.gen_swap_delay:
+            raise ValueError(
+                "snr_patience must exceed gen_swap_delay: the trigger "
+                "must stay quiet until the in-flight fit has been "
+                "installed and its reference armed")
+    if not snr_mode and cfg.gen_async and cfg.gen_refresh_steps:
         if cfg.gen_swap_delay >= cfg.gen_refresh_steps:
             raise ValueError(
                 "gen_swap_delay must be < gen_refresh_steps (one refresh "
@@ -145,7 +170,20 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                  and cfg.gen_swap_delay > 0)
     if use_async:
         refresher = AsyncRefresher(gen_fit_fn)
-        s_sub = cfg.last_submit_before(start_step)
+        if snr_mode:
+            # SNR-triggered submits are data-dependent, so the submit step
+            # cannot be recomputed from the config — recover it from the
+            # gensnap artifact the submit persisted. In flight iff the
+            # snapshot postdates the installed generator and the resume
+            # lands inside its (submit, swap] window.
+            s_sub = (latest_snapshot_step(cfg.checkpoint_dir)
+                     if cfg.checkpoint_dir else None)
+            if s_sub is not None:
+                fit_host = int(jax.device_get(state.gen_fit_step))
+                if not (s_sub > fit_host and s_sub < start_step):
+                    s_sub = None
+        else:
+            s_sub = cfg.last_submit_before(start_step)
         if (s_sub is not None
                 and start_step <= s_sub + cfg.gen_swap_delay
                 and s_sub + cfg.gen_swap_delay < cfg.total_steps):
@@ -189,14 +227,42 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                 # only if the fit is still running — by construction the
                 # step is config-determined, never timing-determined).
                 head, s_sub = refresher.result()
+                # Fresh generator: restart the SNR proxy EWMA and disarm
+                # the reference (re-armed snr_patience steps after the
+                # install).
+                ewma0, ref0 = snr_reset_pair()
                 state = state._replace(
                     head_state=head,
-                    gen_fit_step=jnp.asarray(s_sub, jnp.int32))
+                    gen_fit_step=jnp.asarray(s_sub, jnp.int32),
+                    snr_ewma=ewma0, snr_ref=ref0)
                 pending_swap = None
                 history.setdefault("gen_swap_steps", []).append(step)
                 if cfg.checkpoint_dir:
                     snaps_to_drop.append((s_sub, step))
-            if cfg.gen_due(step):
+            if snr_mode:
+                # Warmup fit is scheduled; every later refresh is
+                # triggered by the online SNR proxy degrading (the state
+                # it reads is checkpointed, so resume replays the same
+                # trigger steps).
+                due = step == cfg.gen_warmup_steps
+                if (not due and pending_swap is None
+                        and not (refresher is not None
+                                 and refresher.in_flight)):
+                    fit_host = int(jax.device_get(state.gen_fit_step))
+                    install_est = (fit_host + cfg.gen_swap_delay
+                                   if use_async and fit_host >= 0
+                                   else fit_host)
+                    due = refresh_on_snr(
+                        step, install_est,
+                        float(jax.device_get(state.snr_ewma)),
+                        float(jax.device_get(state.snr_ref)),
+                        cfg.snr_threshold, cfg.snr_patience)
+                    if due:
+                        history.setdefault("snr_trigger_steps",
+                                           []).append(step)
+            else:
+                due = cfg.gen_due(step)
+            if due:
                 # An async fit whose swap step cannot land inside the run
                 # would never be installed — fit blocking instead (still a
                 # pure function of the config, so resume stays exact).
@@ -212,9 +278,11 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                     pending_swap = step + cfg.gen_swap_delay
                     history.setdefault("gen_submit_steps", []).append(step)
                 else:
+                    ewma0, ref0 = snr_reset_pair()
                     state = state._replace(
                         head_state=gen_fit_fn(state),
-                        gen_fit_step=jnp.asarray(step, jnp.int32))
+                        gen_fit_step=jnp.asarray(step, jnp.int32),
+                        snr_ewma=ewma0, snr_ref=ref0)
                     history.setdefault("gen_swap_steps", []).append(step)
 
         t0 = time.perf_counter()
@@ -237,6 +305,27 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
             on_step(step, {**{k: float(jax.device_get(v))
                               for k, v in metrics.items()},
                            "step_time": dt, "straggler": slow})
+
+        if snr_mode and gen_fit_fn is not None:
+            # Arm the reference snr_patience steps after the install:
+            # freeze the EWMA as the "healthy" level the trigger compares
+            # against. A running max would false-trigger on a fresh
+            # generator — the proxy naturally decays from its 1/2 optimum
+            # as the discriminator sharpens — so the reference is a fixed
+            # early-window snapshot instead. Runs before maybe_checkpoint
+            # so the armed value is durable and resume replays it.
+            fit_host = int(jax.device_get(state.gen_fit_step))
+            if fit_host >= 0:
+                install_est = (fit_host + cfg.gen_swap_delay
+                               if use_async else fit_host)
+                if (float(jax.device_get(state.snr_ref)) < 0
+                        and float(jax.device_get(state.snr_ewma)) >= 0
+                        and step - install_est >= cfg.snr_patience):
+                    # jnp.copy, not the array itself: snr_ref aliasing
+                    # snr_ewma's buffer breaks donated train steps
+                    # ("attempt to donate the same buffer twice").
+                    state = state._replace(
+                        snr_ref=jnp.copy(state.snr_ewma))
 
         maybe_checkpoint(step + 1)
         if preemption.requested:

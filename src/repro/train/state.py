@@ -10,6 +10,20 @@ import jax
 from repro.models.lm_head import LMHeadState
 
 
+def snr_reset_pair():
+    """Fresh (snr_ewma, snr_ref) = (-1.0, -1.0) as two DISTINCT buffers.
+
+    Two separate ``jnp.full((), -1.0)`` calls can come back as one cached
+    device buffer (jax caches device_put of scalar constants), and a
+    donated train step then rejects the state with "attempt to donate the
+    same buffer twice". Slicing a 2-vector guarantees distinct buffers.
+    """
+    import jax.numpy as jnp
+
+    v = jnp.full((2,), -1.0, jnp.float32)
+    return v[0], v[1]
+
+
 class TrainState(NamedTuple):
     step: jax.Array
     params: Any
@@ -19,6 +33,14 @@ class TrainState(NamedTuple):
     # first fit. Checkpointed so a resumed run knows which refresh window
     # it is in (repro.genfit.refresh) and swaps are replayed bit-exactly.
     gen_fit_step: jax.Array
+    # Online gradient-SNR proxy (heads._sampled_metrics "snr_proxy",
+    # DESIGN.md §9): EWMA of the per-batch signal-mass estimate, and the
+    # post-refresh reference level it is compared against. Both are -1.0
+    # before a value exists and are reset to -1.0 whenever a new generator
+    # is installed; checkpointed so the SNR-driven refresh trigger
+    # (genfit.refresh.refresh_on_snr) replays identically on resume.
+    snr_ewma: jax.Array
+    snr_ref: jax.Array
 
     def as_pytree(self):
         return self._asdict()

@@ -19,11 +19,11 @@ from repro.core.heads import (HeadConfig, HeadParams,
 from repro.models import lm_head, transformer
 from repro.models.config import ModelConfig
 from repro.optim import OptimizerConfig, apply_updates, init_opt_state
-from repro.train.state import TrainState
+from repro.train.state import TrainState, snr_reset_pair
 
 
 def loss_fn(params, cfg: ModelConfig, hcfg: HeadConfig, head_state,
-            batch: Dict[str, jax.Array], rng: jax.Array):
+            batch: Dict[str, jax.Array], rng: jax.Array, sampler=None):
     h, _, fwd_metrics = transformer.forward(
         params, cfg, batch["tokens"],
         positions=batch.get("positions"),
@@ -36,14 +36,15 @@ def loss_fn(params, cfg: ModelConfig, hcfg: HeadConfig, head_state,
         h = h[:, nv:]
     loss, head_metrics = lm_head.lm_head_loss(
         cfg, hcfg, HeadParams(**params["head"]), head_state, h, labels,
-        rng, mask=mask)
+        rng, mask=mask, sampler=sampler)
     metrics = {"loss": loss, **fwd_metrics, **head_metrics}
     return loss, metrics
 
 
 def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
                     opt_cfg: OptimizerConfig, head_update: str = "auto",
-                    head_kernel: bool = False, mesh=None):
+                    head_kernel: bool = False, mesh=None,
+                    sampler=None, snr_alpha: float = 0.1):
     """Returns train_step(state, batch, rng) -> (state, metrics).
 
     ``head_update`` picks the head-gradient path (DESIGN.md §8):
@@ -63,6 +64,14 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
     through the fused Pallas kernel. ``mesh`` lets the sparse optimizer
     update run shard-local on a vocab-sharded head (each model shard
     applies only the rows it owns — ``parallel.collectives``).
+
+    ``sampler`` overrides the negative-sampling proposal with an explicit
+    :class:`repro.core.samplers.NegativeSampler` (closed over, so it is
+    static for the life of the step function — generator refreshes only
+    reach the default ``cfg.kind``-derived proposal, which is rebuilt from
+    ``head_state`` every call). ``snr_alpha`` is the EWMA weight of the
+    online SNR proxy tracked in ``TrainState.snr_ewma`` for the
+    SNR-driven refresh trigger (DESIGN.md §9).
     """
     mode = resolve_head_update(head_update, hcfg.kind)
     assert not (head_kernel and mode == "dense"), (
@@ -73,7 +82,8 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
     def dense_step(state: TrainState, batch, rng):
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
         (loss, metrics), grads = grad_fn(state.params, cfg, hcfg,
-                                         state.head_state, batch, rng)
+                                         state.head_state, batch, rng,
+                                         sampler)
         return grads, metrics
 
     def sparse_step(state: TrainState, batch, rng):
@@ -94,7 +104,7 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
         loss, head_metrics, sparse, dh = lm_head.lm_sparse_head_loss(
             cfg, hcfg, HeadParams(**state.params["head"]), state.head_state,
             h[:, n_vis:] if n_vis else h, labels, rng,
-            mask=batch.get("mask"), use_kernel=head_kernel)
+            mask=batch.get("mask"), use_kernel=head_kernel, sampler=sampler)
         if n_vis:   # vision prefix carries no next-token loss
             dh = jnp.pad(dh, ((0, 0), (n_vis, 0), (0, 0)))
         (trunk_grads,) = trunk_vjp(dh.astype(h.dtype))
@@ -108,10 +118,24 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
         new_params, new_opt, opt_metrics = apply_updates(
             opt_cfg, state.params, grads, state.opt_state, mesh=mesh)
         metrics.update(opt_metrics)
+        # Fold the per-batch signal-mass proxy into the EWMA the SNR
+        # refresh trigger watches. "snr_proxy" presence is a trace-time
+        # Python check (the head kind is static), so the dense-softmax
+        # path compiles without the extra arithmetic. snr_ref is armed
+        # host-side by the loop; the step only smooths.
+        snr_ewma = state.snr_ewma
+        if "snr_proxy" in metrics:
+            p = metrics["snr_proxy"].astype(jnp.float32)
+            snr_ewma = jnp.where(
+                state.snr_ewma < 0, p,
+                (1.0 - snr_alpha) * state.snr_ewma + snr_alpha * p)
+            metrics["snr_ewma"] = snr_ewma
         return TrainState(step=state.step + 1, params=new_params,
                           opt_state=new_opt,
                           head_state=state.head_state,
-                          gen_fit_step=state.gen_fit_step), metrics
+                          gen_fit_step=state.gen_fit_step,
+                          snr_ewma=snr_ewma,
+                          snr_ref=state.snr_ref), metrics
 
     return train_step
 
@@ -278,9 +302,11 @@ def init_train_state(rng, cfg: ModelConfig, opt_cfg: OptimizerConfig,
                      head_kind: str) -> TrainState:
     k_p, k_h = jax.random.split(rng)
     params = transformer.init_params(k_p, cfg)
+    ewma0, ref0 = snr_reset_pair()
     return TrainState(
         step=jnp.zeros((), jnp.int32),
         params=params,
         opt_state=init_opt_state(opt_cfg, params),
         head_state=lm_head.default_head_state(k_h, cfg, head_kind),
-        gen_fit_step=jnp.full((), -1, jnp.int32))
+        gen_fit_step=jnp.full((), -1, jnp.int32),
+        snr_ewma=ewma0, snr_ref=ref0)

@@ -1,0 +1,23 @@
+"""Shared test-suite plumbing.
+
+`_clear_jax_caches_per_module` works around an XLA:CPU jit-code
+accumulation crash: one pytest process compiles thousands of
+executables across the suite, and past a threshold the CPU backend
+segfaults inside ``backend_compile`` (reproducible at the repo seed
+with `tests/test_genfit.py tests/test_kernels.py` alone — no single
+test is at fault, only the cumulative live-executable count).
+Dropping the pjit/tracing caches after each module frees the compiled
+code before the next module compiles its own, which keeps the
+whole-suite run well under the crash threshold. Costs recompiles at
+module boundaries (tests within a module still share their caches,
+and module-scoped fixtures holding jitted callables keep working —
+their executables are simply rebuilt on next call).
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

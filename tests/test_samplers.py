@@ -1,0 +1,218 @@
+"""NegativeSampler protocol properties (repro.core.samplers).
+
+Every proposal must (a) be a distribution — exp(log_prob_all) sums to 1,
+(b) report the exact probability of what it actually draws — sample
+frequencies match log_prob (chi-square), and (c) satisfy Eq. 5: at the
+nonparametric optimum xi = log p_D - log p_n, the debiased predictions
+recover p_D regardless of which proposal trained the head. Plus the
+regression tests for the freq-path CDF bug this PR fixed (boundary draws
+resolving to the wrong bucket; zero-count labels drawn from smoothing
+mass).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import heads as heads_lib
+from repro.core import samplers as samplers_lib
+from repro.core.heads import Generator, HeadConfig, HeadParams
+from repro.core.samplers import SAMPLER_KINDS
+from repro.core.xc_train import train_linear_head
+
+C, KDIM, N_X = 24, 4, 6
+
+
+def _problem(seed=0):
+    """Conditional testbed: N_X context vectors, known p_D(.|x), and a
+    fitting snapshot of (x_gen, y ~ p_D) pairs."""
+    rng = np.random.default_rng(seed)
+    ctx = rng.standard_normal((N_X, KDIM)).astype(np.float32)
+    emb = rng.standard_normal((C, KDIM)).astype(np.float32)
+    logits = 1.5 * ctx @ emb.T
+    p_d = np.exp(logits - logits.max(-1, keepdims=True))
+    p_d /= p_d.sum(-1, keepdims=True)
+    xs = rng.integers(0, N_X, 4000)
+    u = rng.random((4000, 1))
+    ys = (p_d[xs].cumsum(-1) < u).sum(-1).clip(0, C - 1)
+    return (jnp.asarray(ctx), jnp.asarray(p_d, jnp.float32),
+            jnp.asarray(ctx[xs]), jnp.asarray(ys, jnp.int32))
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    ctx, p_d, x_fit, y_fit = _problem()
+    samplers = {k: samplers_lib.fit_sampler(k, x_fit, y_fit, C, seed=0)
+                for k in SAMPLER_KINDS}
+    return ctx, p_d, samplers
+
+
+class TestProtocolProperties:
+
+    def test_log_prob_all_normalizes(self, fitted):
+        ctx, _, samplers = fitted
+        for kind, s in samplers.items():
+            lse = np.asarray(jax.nn.logsumexp(s.log_prob_all(ctx), -1))
+            assert np.abs(lse).max() < 1e-3, (kind, lse)
+
+    def test_log_prob_matches_log_prob_all(self, fitted):
+        ctx, _, samplers = fitted
+        y = jnp.asarray(np.arange(N_X) % C, jnp.int32)
+        for kind, s in samplers.items():
+            dense = jnp.take_along_axis(s.log_prob_all(ctx),
+                                        y[:, None], -1)[:, 0]
+            single = s.log_prob(ctx, y)
+            np.testing.assert_allclose(np.asarray(single),
+                                       np.asarray(dense),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=kind)
+
+    def test_sample_reports_its_own_log_prob(self, fitted):
+        ctx, _, samplers = fitted
+        for kind, s in samplers.items():
+            ids, lp = s.sample(jax.random.PRNGKey(7), ctx, (N_X, 5))
+            ref = s.log_prob(ctx, ids)
+            np.testing.assert_allclose(np.asarray(lp), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=kind)
+            assert np.asarray(ids).min() >= 0
+            assert np.asarray(ids).max() < C
+
+    def test_sample_frequencies_match_log_prob(self, fitted):
+        """Chi-square GOF of draws against exp(log_prob_all), one context
+        per sampler, deterministic keys (no flake)."""
+        ctx, _, samplers = fitted
+        n = 40_000
+        for i, (kind, s) in enumerate(samplers.items()):
+            x = ctx[i % N_X][None, :]
+            p = np.asarray(jnp.exp(s.log_prob_all(x)))[0].astype(np.float64)
+            p /= p.sum()
+            ids = np.asarray(s.sample(jax.random.PRNGKey(100 + i),
+                                      x, (1, n))[0])[0]
+            obs = np.bincount(ids, minlength=C).astype(np.float64)
+            exp = n * p
+            keep = exp >= 5.0          # classic chi-square validity rule
+            chi2 = float((((obs - exp) ** 2 / np.maximum(exp, 1e-12))
+                          [keep]).sum())
+            # Zero-probability bins must be literally unsampled.
+            assert obs[exp < 1e-6].sum() == 0, kind
+            dof = int(keep.sum()) - 1
+            # P(chi2 > dof + 5*sqrt(2*dof)) is ~1e-6 — generous but real.
+            assert chi2 < dof + 5.0 * np.sqrt(2.0 * dof), \
+                (kind, chi2, dof)
+
+
+class TestUnigramCdfBugfix:
+    """The freq path used searchsorted(side='left') over a CDF built from
+    1e-12-smoothed counts: a draw landing exactly on a boundary resolved
+    to the bucket *below* it, and count-0 labels carried smoothing mass so
+    they could be drawn. Both are fixed in unigram_from_counts."""
+
+    COUNTS = np.array([5, 0, 3, 0, 0, 2, 0, 0, 0, 0], np.float32)
+
+    def test_zero_count_labels_never_sampled(self):
+        s = samplers_lib.unigram_from_counts(self.COUNTS)
+        x = jnp.zeros((1, 2))
+        ids = np.asarray(s.sample(jax.random.PRNGKey(0), x, (1, 50_000))[0])
+        drawn = set(np.unique(ids))
+        assert drawn <= {0, 2, 5}, drawn
+
+    def test_boundary_draws_map_to_positive_count_labels(self):
+        """u exactly ON a CDF boundary belongs to the bucket above it —
+        the one whose probability interval starts there."""
+        s = samplers_lib.unigram_from_counts(self.COUNTS)
+        cdf = np.asarray(s.freq_cdf)
+        # Interior edges only: draws come from [0, 1), so u == 1.0 can
+        # never occur and edges sitting at 1.0 are out of scope.
+        boundaries = jnp.asarray(cdf[:-1][cdf[:-1] < 1.0])
+        ids = np.asarray(jnp.clip(
+            jnp.searchsorted(s.freq_cdf, boundaries, side="right"),
+            0, len(self.COUNTS) - 1))
+        assert (self.COUNTS[ids] > 0).all(), ids
+
+    def test_cdf_last_entry_exactly_one(self):
+        s = samplers_lib.unigram_from_counts(self.COUNTS)
+        assert float(s.freq_cdf[-1]) == 1.0
+
+    def test_heads_freq_generator_delegates(self):
+        """make_freq_generator and the protocol path share one definition:
+        zero-count labels are unreachable through the heads shim too."""
+        gen = heads_lib.make_freq_generator(jnp.asarray(self.COUNTS))
+        cfg = HeadConfig(num_labels=len(self.COUNTS), kind="freq_ns",
+                         n_neg=4)
+        ids, _ = heads_lib.sample_negatives(
+            cfg, gen, jnp.zeros((2000, 2)), jax.random.PRNGKey(3),
+            (2000,))
+        drawn = set(np.unique(np.asarray(ids)))
+        assert drawn <= {0, 2, 5}, drawn
+
+
+class TestEq5DebiasInvariance:
+    """At the optimum xi = log p_D - log p_n(sampler), the debiased
+    predictions are p_D for EVERY sampler: proposal choice moves the
+    training signal (Theorem 2), never the answer (Theorem 1)."""
+
+    def test_predictive_topk_invariant_to_sampler(self, fitted):
+        ctx, p_d, samplers = fitted
+        h = jnp.eye(N_X, dtype=jnp.float32)          # one-hot contexts
+        cfg = HeadConfig(num_labels=C, kind="adversarial_ns", n_neg=1)
+        log_pd = jnp.log(p_d)
+        ref_labels = None
+        for kind, s in samplers.items():
+            # Free score table at the Eq. 5 optimum for THIS proposal.
+            w = (log_pd - s.log_prob_all(ctx)).T      # (C, N_X)
+            params = HeadParams(w=w, b=jnp.zeros((C,)))
+            # beam >= C_pad makes the tree path exhaustive, so the tree
+            # sampler's beam result must equal the dense fallback of the
+            # non-tree samplers exactly.
+            top, labels = heads_lib.predictive_topk(
+                cfg, params, Generator(), h, ctx, topk=3, beam=64,
+                sampler=s)
+            np.testing.assert_allclose(
+                np.asarray(top),
+                np.sort(np.asarray(log_pd), -1)[:, ::-1][:, :3],
+                rtol=1e-4, atol=1e-4, err_msg=kind)
+            if ref_labels is None:
+                ref_labels = np.asarray(labels)
+            else:
+                np.testing.assert_array_equal(np.asarray(labels),
+                                              ref_labels, err_msg=kind)
+
+    def test_predictive_accuracy_recovers_p_d_argmax(self, fitted):
+        ctx, p_d, samplers = fitted
+        h = jnp.eye(N_X, dtype=jnp.float32)
+        cfg = HeadConfig(num_labels=C, kind="adversarial_ns", n_neg=1)
+        y_star = jnp.argmax(p_d, -1)
+        for kind, s in samplers.items():
+            w = (jnp.log(p_d) - s.log_prob_all(ctx)).T
+            params = HeadParams(w=w, b=jnp.zeros((C,)))
+            acc = heads_lib.predictive_accuracy(cfg, params, Generator(),
+                                                h, ctx, y_star, sampler=s)
+            assert float(acc) == 1.0, kind
+
+
+class TestSamplerMatrixTrains:
+    """test-fast lane matrix: every sampler drives a few real training
+    steps of the ns objective (sparse AND dense head updates) to a finite
+    loss and sane predictions."""
+
+    @pytest.mark.parametrize("kind", SAMPLER_KINDS)
+    @pytest.mark.parametrize("head_update", ("sparse", "dense"))
+    def test_trains_finite(self, fitted, kind, head_update):
+        ctx, p_d, samplers = fitted
+        s = samplers[kind]
+        rng = np.random.default_rng(5)
+        xs = rng.integers(0, N_X, 1024)
+        u = rng.random((1024, 1))
+        ys = (np.asarray(p_d)[xs].cumsum(-1) < u).sum(-1).clip(0, C - 1)
+        x = jnp.asarray(np.eye(N_X, dtype=np.float32)[xs])
+        xg = ctx[jnp.asarray(xs)]
+        y = jnp.asarray(ys, jnp.int32)
+        cfg = HeadConfig(num_labels=C, kind="adversarial_ns", n_neg=2)
+        params = train_linear_head(cfg, Generator(), x, xg, y, lr=0.2,
+                                   steps=25, batch_size=128,
+                                   head_update=head_update, sampler=s)
+        ll = heads_lib.predictive_log_likelihood(
+            cfg, params, Generator(), x, xg, y, sampler=s)
+        assert np.isfinite(float(ll)), (kind, head_update)
+        assert float(ll) > -np.log(C), (kind, head_update, float(ll))

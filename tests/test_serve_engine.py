@@ -376,6 +376,44 @@ class TestCandidateCachePath:
         assert engine.candidate_cache.hits > hits_before
         assert engine.descent_skips > skips_before
 
+    def test_head_swap_invalidates_cached_candidates(self):
+        """A generator/head refresh must not serve candidates descended
+        under the old tree: swap_head_state bumps the cache version, so
+        the same prompt re-descends (no descent skip) and the outputs
+        match an engine built with the new head state from scratch."""
+        new_head = lm_head.default_head_state(jax.random.PRNGKey(2), CFG,
+                                              "adversarial_ns")
+
+        def fresh(head_state):
+            return Engine(CFG, HCFG, PARAMS, head_state, ServeConfig(
+                n_slots=1, max_len=MAX_LEN, beam=BEAM, page_len=3,
+                cache_dtype=jnp.float32))
+
+        rng = np.random.default_rng(19)
+        prompt = rng.integers(0, CFG.vocab_size, 4).astype(np.int32)
+        eng = fresh(HEAD_STATE)
+        eng.submit(Request(prompt=prompt, max_new_tokens=4))
+        eng.run()
+        # Sanity: with no swap the repeat skips descents via the cache.
+        skips0 = eng.descent_skips
+        eng.submit(Request(prompt=prompt, max_new_tokens=4))
+        eng.run()
+        assert eng.descent_skips > skips0
+
+        eng.swap_head_state(new_head)
+        skips1 = eng.descent_skips
+        h = eng.submit(Request(prompt=prompt, max_new_tokens=4))
+        eng.run()
+        # Old entries are unreachable: every step re-descended.
+        assert eng.descent_skips == skips1
+        stats = eng.candidate_cache.stats()
+        assert stats["version"] == 1 and stats["invalidations"] == 1
+        # And the decode is what the new head produces, not a stale mix.
+        ref_eng = fresh(new_head)
+        ref = ref_eng.submit(Request(prompt=prompt, max_new_tokens=4))
+        ref_eng.run()
+        assert h.tokens == ref.tokens
+
     def test_cache_disabled_engine_matches(self):
         rng = np.random.default_rng(13)
         prompt = rng.integers(0, CFG.vocab_size, 4).astype(np.int32)

@@ -46,6 +46,42 @@ def test_snr_upper_bound_is_half_per_xy():
     np.testing.assert_allclose(eta, 1.0 / (n * n * (c - 1.0)), rtol=1e-5)
 
 
+def test_streamed_agrees_with_dense_reference():
+    """The streamed accumulator and the small-C dense-scatter reference
+    are the same estimator up to float32 re-association: both must land
+    within Monte-Carlo tolerance of the closed form and of each other.
+    (Bit-level agreement is impossible by construction — the dense path
+    sums per-(x, y) cell then divides by alpha once, the streamed path
+    adds g^2/alpha per draw — which is exactly why the docstring promises
+    tolerance, not bits.)"""
+    p_d = _random_dist(5, 4, 12, temp=1.2)
+    p_n = _random_dist(6, 4, 12, temp=0.8)
+    rng = jax.random.PRNGKey(7)
+    eta_cf = float(snr_lib.snr_closed_form(p_d, p_n))
+    eta_stream = float(snr_lib.snr_empirical(p_d, p_n, rng,
+                                             n_samples=400_000))
+    eta_dense = float(snr_lib.snr_empirical_dense(p_d, p_n, rng,
+                                                  n_samples=400_000))
+    np.testing.assert_allclose(eta_stream, eta_cf, rtol=0.05)
+    np.testing.assert_allclose(eta_dense, eta_cf, rtol=0.05)
+    np.testing.assert_allclose(eta_stream, eta_dense, rtol=0.05)
+
+
+def test_streamed_is_bitwise_deterministic():
+    """Identical (rng, n_samples, chunk) -> identical bits, including a
+    ragged final chunk; changing the chunking changes the re-association
+    order (different bits allowed) but not the value beyond tolerance."""
+    p_d = _random_dist(8, 3, 10)
+    p_n = _random_dist(9, 3, 10)
+    rng = jax.random.PRNGKey(11)
+    a = snr_lib.snr_empirical(p_d, p_n, rng, n_samples=50_001, chunk=256)
+    b = snr_lib.snr_empirical(p_d, p_n, rng, n_samples=50_001, chunk=256)
+    assert (jnp.asarray(a).view(jnp.uint32)
+            == jnp.asarray(b).view(jnp.uint32)).item()
+    c = snr_lib.snr_empirical(p_d, p_n, rng, n_samples=50_001, chunk=128)
+    np.testing.assert_allclose(float(a), float(c), rtol=0.05)
+
+
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 2**20), n=st.integers(2, 6), c=st.integers(3, 40),
        temp=st.floats(0.2, 3.0))

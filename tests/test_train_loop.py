@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs as cfg_lib
 from repro.core.heads import HeadConfig
@@ -207,6 +208,53 @@ def test_async_refresh_does_not_stall_steps():
     # Steps 3..8 overlap the 1s background fit; none may absorb it.
     in_flight = [times[s] for s in range(3, 9)]
     assert max(in_flight) < 0.9, in_flight
+
+
+@pytest.mark.slow
+def test_snr_refresh_triggers_on_drift_not_on_fresh():
+    """--gen-refresh-mode snr end to end: after an induced label-drift the
+    online signal-mass EWMA degrades below threshold x the post-install
+    reference and the loop refits the generator; the undrifted control run
+    (fresh generator, stationary stream) never triggers.
+
+    The drift collapses labels onto 8 ids the installed generator never
+    proposes: the new positives are learned within a few steps (64 label
+    observations/step over 8 rows) and the stale proposals are pushed down
+    as negatives, so both proxy terms — E[sigma(-xi_pos)] and
+    E[sigma(xi_neg)], each an estimate of the Eq. 13 signal mass — drop
+    fast. A distribution shift the head adapts to slowly (e.g. permuting
+    all C labels) would degrade the SNR just as surely but not within a
+    test-sized horizon.
+    """
+    drift_at = 36
+    loop = LoopConfig(total_steps=64, gen_warmup_steps=20,
+                      gen_refresh_mode="snr", snr_threshold=0.4,
+                      snr_patience=12)
+
+    def run(drifting):
+        cfg, state, step_fn, batch_fn = _setup()
+        gen_fit = _gen_fit_fn(cfg)
+
+        def drifted(s):
+            b = batch_fn(s)
+            if drifting and s >= drift_at:
+                b = {**b, "labels": b["labels"] % 8}
+            return b
+
+        _, hist = run_loop(state, step_fn, drifted, loop,
+                           jax.random.PRNGKey(2), gen_fit_fn=gen_fit)
+        return hist
+
+    hist = run(drifting=True)
+    triggers = hist["snr_trigger_steps"]
+    assert triggers, "drift did not trigger a refresh"
+    assert all(t >= drift_at for t in triggers), (triggers, drift_at)
+    # Warmup install + one triggered (sync) refit per trigger step.
+    assert hist["gen_swap_steps"] == [loop.gen_warmup_steps] + triggers
+
+    control = run(drifting=False)
+    assert "snr_trigger_steps" not in control, control["snr_trigger_steps"]
+    assert control["gen_swap_steps"] == [loop.gen_warmup_steps]
 
 
 def test_collect_features_cap_and_ragged_batches():
