@@ -19,13 +19,17 @@
 #                       convergence race (writes BENCH_snr.json)
 #   make bench-smoke  - CI guard: one tiny C per benchmark, schema
 #                       asserted, no timings (benchmark scripts can't rot)
+#   make obs-demo     - CI guard for the repro.obs pipeline: a tiny
+#                       instrumented train run whose JSONL event log,
+#                       registry snapshot, and exporters are all asserted
+#                       (DESIGN.md §10)
 #   make bench        - the full benchmark harness CSV
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-serve bench-serve bench-engine \
-        bench-tree-fit bench-heads bench-snr bench-smoke bench
+        bench-tree-fit bench-heads bench-snr bench-smoke obs-demo bench
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -53,6 +57,9 @@ bench-snr:
 
 bench-smoke:
 	$(PYTHON) -m benchmarks.smoke
+
+obs-demo:
+	$(PYTHON) -m benchmarks.obs_demo
 
 bench:
 	$(PYTHON) -m benchmarks.run

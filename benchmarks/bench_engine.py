@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.models import lm_head, transformer
 from repro.models.config import ModelConfig
+from repro.obs import Registry
 from repro.serve import Engine, Request, ServeConfig, TrafficConfig
 from repro.serve import drive, lockstep_decode, make_workload
 
@@ -212,6 +213,8 @@ def run(csv_rows: list, c_values=(1024, 32768, 262144), n_requests=24,
     report = {"slots": SLOTS, "prompt_len": PROMPT_LEN,
               "gen_tokens": GEN_TOKENS, "beam": BEAM,
               "n_requests": n_requests, "rate_rps": rate, "sweep": {}}
+    reg = Registry()               # bench/* gauges for the metrics block
+    serve_metrics = {}             # serve/* snapshot of the last engine
     for c in c_values:
         cfg, hcfg, params, head_state = _setup(c)
         tcfg = TrafficConfig(n_requests=n_requests, rate=rate,
@@ -264,6 +267,12 @@ def run(csv_rows: list, c_values=(1024, 32768, 262144), n_requests=24,
                     / max(1, engine.decode_steps - steps1))
                 entry["engine-beam+cache-warm"] = warm
             entry[name] = res
+            reg.gauge(f"bench/engine/c{c}/{name}_rps").set(
+                res["throughput_rps"])
+            # Engines carry their own always-on repro.obs registry; keep
+            # the last one's serve/* view (admission/ttft/latency
+            # histograms) so the tracked JSON shows the full pipeline.
+            serve_metrics = engine.stats()["metrics"]
 
         entry["paged-vs-monolithic"] = _paged_vs_monolithic(
             cfg, hcfg, params, head_state, c)
@@ -302,6 +311,7 @@ def run(csv_rows: list, c_values=(1024, 32768, 262144), n_requests=24,
             f"paged_concurrency=x{pvm['concurrency_gain']:.1f},"
             f"lockstep_match={entry['lockstep_match']}"))
 
+    report["metrics"] = {**reg.snapshot(), **serve_metrics}
     if write_json:     # reduced sweeps (benchmarks.run) must not clobber
         #                the tracked full-sweep artifact
         path = json_path or os.environ.get("BENCH_ENGINE_JSON",

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core import heads as heads_lib
 from repro.core import tree as tree_lib
 from repro.core.heads import Generator, HeadConfig
+from repro.obs import Registry
 from repro.optim import OptimizerConfig, apply_updates, init_opt_state
 
 
@@ -201,6 +202,18 @@ def run_train_bench(csv_rows: list,
             "dense": round(_us("dense", hi) / _us("dense", lo), 2),
         },
     }
+    # Route the headline numbers through the repro.obs registry so the
+    # tracked JSON carries the same exporter schema (DESIGN.md §10) that
+    # the train/serve paths emit — downstream tooling parses one format.
+    reg = Registry()
+    for r in results:
+        reg.gauge(f"bench/head_train/{r['path']}/c{r['c']}_us"
+                  ).set(r["us_per_step"])
+    reg.gauge("bench/head_train/growth_sparse").set(
+        report["growth"]["sparse"])
+    reg.gauge("bench/head_train/growth_dense").set(
+        report["growth"]["dense"])
+    report["metrics"] = reg.snapshot()
     if write_json:     # reduced sweeps (benchmarks.run) must not clobber
         path = json_path or os.environ.get("BENCH_HEADS_JSON",
                                            "BENCH_heads.json")

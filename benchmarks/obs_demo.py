@@ -1,0 +1,135 @@
+"""CI smoke for the repro.obs pipeline: one tiny instrumented train run,
+end to end through every exporter.
+
+``make obs-demo`` runs a 12-step reduced-config training loop with
+``metrics_jsonl`` enabled and an async generator refresh scheduled twice,
+then asserts the full observability contract of DESIGN.md §10:
+
+- the JSONL event log parses back and passes ``validate_events``;
+- exactly one ``compile`` event (step-0 XLA compilation is separated
+  from steady state), a ``step`` sample per steady step carrying loss,
+  step_time_s and the SNR proxy/EWMA, and the genfit lifecycle
+  (``gen_submit`` at the config-determined submit steps, ``gen_swap``
+  with fit wall-time and staleness at the recorded swap steps);
+- the end-of-run ``summary`` snapshot names the documented train/*,
+  genfit/* and snr/* metrics with consistent counts;
+- the Prometheus text dump and console summary render without error.
+
+No timing assertions — this is a schema/wiring gate, the performance
+sweeps live in bench_heads/bench_engine.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_lib
+from repro.data import lm_batch_fn
+from repro.models import lm_head
+from repro.obs import (console_summary, prometheus_text, read_jsonl,
+                       validate_events, Registry)
+from repro.optim import OptimizerConfig
+from repro.train import (LoopConfig, init_train_state, make_train_step,
+                         run_loop)
+from repro.train.generator_fit import make_gen_fit_fn
+
+TOTAL, WARMUP, REFRESH, SWAP_DELAY = 12, 3, 6, 2
+
+
+def run(jsonl_path: str) -> dict:
+    cfg = dataclasses.replace(cfg_lib.reduced_config("stablelm-3b"),
+                              num_layers=1, dtype="float32")
+    hcfg = lm_head.head_config(cfg, "adversarial_ns", reg=1e-4)
+    opt = OptimizerConfig(name="adagrad", learning_rate=0.05,
+                          clip_norm=1.0)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt,
+                             "adversarial_ns")
+    step_fn = jax.jit(make_train_step(cfg, hcfg, opt))
+    make = lm_batch_fn(cfg.vocab_size, global_batch=4, seq_len=16, seed=1)
+    batch_fn = lambda s: {k: jnp.asarray(v)               # noqa: E731
+                          for k, v in make(s).items()}
+    gen_fit = make_gen_fit_fn(cfg, batch_fn, kind="adversarial_ns",
+                              max_tokens=128, n_batches=2)
+    loop = LoopConfig(total_steps=TOTAL, gen_warmup_steps=WARMUP,
+                      gen_refresh_steps=REFRESH, gen_async=True,
+                      gen_swap_delay=SWAP_DELAY,
+                      metrics_jsonl=jsonl_path, metrics_interval=1)
+    registry = Registry()
+    state, hist = run_loop(state, step_fn, batch_fn, loop,
+                           jax.random.PRNGKey(2), gen_fit_fn=gen_fit,
+                           registry=registry)
+    print(console_summary(registry, title="obs-demo train metrics"))
+    return hist
+
+
+def check(jsonl_path: str, hist: dict) -> None:
+    events = read_jsonl(jsonl_path)
+    validate_events(events)
+    by = {}
+    for ev in events:
+        by.setdefault(ev["event"], []).append(ev)
+
+    # Compile separated from steady state: one compile event, a step
+    # sample for every remaining step, none for the compile step.
+    assert len(by["compile"]) == 1 and by["compile"][0]["step"] == 0
+    assert by["compile"][0]["compile_time_s"] > 0
+    steps = [ev["step"] for ev in by["step"]]
+    assert steps == list(range(1, TOTAL)), steps
+    for ev in by["step"]:
+        assert ev["step_time_s"] > 0
+        assert "loss" in ev and "snr_proxy" in ev and "snr_ewma" in ev
+
+    # Genfit lifecycle: submits at the config-determined steps, swaps
+    # SWAP_DELAY later, each swap carrying fit wall-time + staleness.
+    submits = [ev["step"] for ev in by["gen_submit"]]
+    swaps = [ev["step"] for ev in by["gen_swap"]]
+    assert submits == [WARMUP, WARMUP + REFRESH], submits
+    assert swaps == [s + SWAP_DELAY for s in submits], swaps
+    for ev in by["gen_swap"]:
+        assert ev["steps_stale_at_swap"] == SWAP_DELAY
+        assert ev["fit_wall_s"] is None or ev["fit_wall_s"] > 0
+    assert hist["gen_submit_steps"] == submits    # history view agrees
+
+    # Summary snapshot names the documented metrics with counts that
+    # match the event stream.
+    snap = by["summary"][-1]["metrics"]
+    assert snap["train/steps"]["value"] == TOTAL
+    assert snap["train/step_time_s"]["count"] == TOTAL - 1
+    assert snap["genfit/submits"]["value"] == len(submits)
+    assert snap["genfit/swaps"]["value"] == len(swaps)
+    for name in ("train/loss", "snr/proxy", "snr/ewma",
+                 "train/compile_time_s"):
+        assert name in snap, name
+    assert snap == hist["metrics"]
+
+    # Exporters render.
+    reg = Registry()
+    reg.counter("train/steps").inc(TOTAL)
+    text = prometheus_text(reg)
+    assert "# TYPE train_steps counter" in text
+    print(f"obs-demo: {len(events)} events OK "
+          f"({', '.join(sorted(by))})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="where to write the demo JSONL (default: a "
+                         "temp file, removed on success)")
+    args = ap.parse_args()
+    path = args.out or os.path.join(tempfile.mkdtemp(prefix="obsdemo"),
+                                    "metrics.jsonl")
+    hist = run(path)
+    check(path, hist)
+    if args.out is None:
+        os.remove(path)
+    print("obs demo: all OK")
+
+
+if __name__ == "__main__":
+    main()

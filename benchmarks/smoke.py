@@ -13,6 +13,20 @@ from __future__ import annotations
 import sys
 
 
+def _check_metrics(name: str, report: dict, want_prefix: str):
+    """Benchmark JSONs carry a ``metrics`` block: a repro.obs registry
+    snapshot (DESIGN.md §10) — every entry typed, at least one metric
+    under ``want_prefix``."""
+    assert "metrics" in report, f"{name}: missing metrics block"
+    snap = report["metrics"]
+    assert isinstance(snap, dict) and snap, f"{name}: empty metrics"
+    for mname, m in snap.items():
+        assert isinstance(m, dict) and m.get("type") in (
+            "counter", "gauge", "ewma", "histogram"), (name, mname, m)
+    hits = [k for k in snap if k.startswith(want_prefix)]
+    assert hits, f"{name}: no {want_prefix}* metrics in {sorted(snap)}"
+
+
 def _check(name: str, report: dict, required_keys, row_key: str,
            row_fields):
     assert isinstance(report, dict), name
@@ -36,6 +50,7 @@ def smoke_heads():
     paths = {r["path"] for r in report["train_step"]}
     assert paths == {"dense", "sparse", "sparse_kernel"}, paths
     assert set(report["growth"]) >= {"sparse", "dense"}
+    _check_metrics("bench_heads", report, "bench/head_train/")
 
 
 def smoke_engine():
@@ -50,6 +65,9 @@ def smoke_engine():
             assert key in entry, f"bench_engine[{c}]: missing {key}"
         assert entry["lockstep_match"], f"bench_engine[{c}]: mismatch"
         assert "throughput_rps" in entry["lockstep-dense"]
+    _check_metrics("bench_engine", report, "bench/engine/")
+    # The merged serve/* view from the last driven engine rides along.
+    assert report["metrics"]["serve/ttft_s"]["count"] > 0
     print(f"smoke: bench_engine OK ({len(report['sweep'])} C values)")
 
 

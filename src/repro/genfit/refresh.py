@@ -25,7 +25,10 @@ orchestration lives in :func:`repro.train.loop.run_loop`.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Callable, Optional, Tuple
+
+from repro.obs import NULL_REGISTRY
 
 SNAP_PREFIX = "gensnap_"
 
@@ -46,6 +49,9 @@ class AsyncRefresher:
         self._result: Any = None
         self._error: Optional[BaseException] = None
         self._submit_step: Optional[int] = None
+        # Wall time of the most recently *completed* fit (None until one
+        # finishes) — the `fit_wall_s` field of the gen_swap event.
+        self.last_fit_seconds: Optional[float] = None
 
     @property
     def in_flight(self) -> bool:
@@ -60,8 +66,10 @@ class AsyncRefresher:
         self._result, self._error, self._submit_step = None, None, step
 
         def work():
+            t0 = time.perf_counter()
             try:
                 self._result = self._fit_fn(state)
+                self.last_fit_seconds = time.perf_counter() - t0
             except BaseException as e:        # re-raised at the swap
                 self._error = e
 
@@ -99,6 +107,37 @@ def refresh_on_snr(step: int, fit_step: int, snr_ewma: float,
     return (fit_step >= 0 and snr_ref > 0 and snr_ewma >= 0
             and step - fit_step >= patience
             and snr_ewma < threshold * snr_ref)
+
+
+def swap_event(step: int, old_fit_step: int, new_fit_step: int,
+               fit_wall_s: Optional[float], registry=None) -> dict:
+    """Structured record of a generator swap (emitted on EVERY install —
+    warmup, periodic, SNR-triggered, blocking or async).
+
+    ``old_fit_step`` is the submit step of the generator being replaced
+    (-1 for the warmup install), ``new_fit_step`` the submit step of the
+    incoming one, ``fit_wall_s`` the background/blocking fit's wall time
+    (None when a replayed resume raced past the measurement), and
+    ``steps_stale_at_swap`` = step - new_fit_step: how many optimizer
+    steps the discriminator advanced between the snapshot the fit saw
+    and the install — the staleness the paper's alternating scheme
+    tolerates, and the quantity to watch when tuning ``gen_swap_delay``.
+
+    Also folds the swap into ``registry``: ``genfit/swaps`` counter,
+    ``genfit/fit_wall_s`` and ``genfit/staleness_at_swap`` histograms.
+    Returns the JSONL-ready ``gen_swap`` event dict.
+    """
+    reg = registry or NULL_REGISTRY
+    stale = step - new_fit_step
+    reg.counter("genfit/swaps").inc()
+    if fit_wall_s is not None:
+        reg.histogram("genfit/fit_wall_s").observe(fit_wall_s)
+    reg.histogram("genfit/staleness_at_swap",
+                  bounds=[1, 2, 4, 8, 16, 32, 64, 128, 256, 512,
+                          1024]).observe(stale)
+    return {"event": "gen_swap", "step": step,
+            "old_fit_step": old_fit_step, "new_fit_step": new_fit_step,
+            "fit_wall_s": fit_wall_s, "steps_stale_at_swap": stale}
 
 
 def latest_snapshot_step(directory: str) -> Optional[int]:

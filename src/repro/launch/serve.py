@@ -102,16 +102,23 @@ def run_lockstep(args, cfg, mesh, params, head_state, hcfg):
 
 
 def run_engine(args, cfg, mesh, params, head_state, hcfg):
+    from repro.obs import JsonlExporter, console_summary
+    from repro.obs.trace import ProfileWindow
     from repro.serve import Engine, Request, ServeConfig
 
     slots = args.slots or args.batch
+    exporter = (JsonlExporter(args.metrics_jsonl) if args.metrics_jsonl
+                else None)
     engine = Engine(cfg, hcfg, params, head_state, ServeConfig(
         n_slots=slots, max_len=args.prompt_len + args.gen,
         page_len=args.page_len, n_pages=args.n_pages,
         beam=args.topk_beam,
         mesh=mesh if args.shard_scores else None,
         eos_id=args.eos_id if args.eos_id >= 0 else None,
-        cache_dtype=jnp.bfloat16))
+        cache_dtype=jnp.bfloat16),
+        exporter=exporter, metrics_interval=args.metrics_interval)
+    if args.profile_dir:
+        engine.registry.annotate = True     # spans label the trace
     prompts = jax.random.randint(jax.random.PRNGKey(2),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
@@ -120,7 +127,10 @@ def run_engine(args, cfg, mesh, params, head_state, hcfg):
     t0 = time.time()
     handles = [engine.submit(Request(prompt=p, max_new_tokens=args.gen))
                for p in prompts]
+    profiler = ProfileWindow(args.profile_dir, n_steps=10**9)
+    profiler.tick(0)            # whole-run capture; bounded by --gen
     engine.run()
+    profiler.stop()
     dt = time.time() - t0
     tokens = sum(len(h.tokens) for h in handles)
     path = (f"beam={args.topk_beam}" if args.topk_beam
@@ -128,7 +138,22 @@ def run_engine(args, cfg, mesh, params, head_state, hcfg):
     print(f"engine: {len(handles)} requests over {slots} slots in "
           f"{dt*1e3:.0f} ms ({len(handles)/dt:.1f} req/s, "
           f"{tokens/dt:.1f} tok/s) [{path}]")
-    print("stats:", engine.stats())
+    stats = engine.stats()
+    lat = stats["latency"]
+    print("stats:", {k: v for k, v in stats.items()
+                     if k not in ("latency", "metrics")})
+    for name in ("admission_wait", "ttft", "total"):
+        s = lat[name]
+        if s["count"]:
+            print(f"  {name}: p50={s['p50']*1e3:.1f}ms "
+                  f"p95={s['p95']*1e3:.1f}ms p99={s['p99']*1e3:.1f}ms "
+                  f"(n={s['count']})")
+    print(console_summary(engine.registry, title="serve metrics"))
+    if exporter is not None:
+        summary = {"event": "summary", "metrics": engine.registry.snapshot()}
+        exporter.emit(summary)
+        exporter.close()
+        print(f"metrics JSONL: {args.metrics_jsonl}")
     print("sample:", handles[0].result().tolist())
 
 
@@ -166,6 +191,16 @@ def main():
                          "scores on the mesh model axis")
     ap.add_argument("--lockstep", action="store_true",
                     help="legacy fixed-batch decode instead of the engine")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="stream repro.obs request/serve_step JSONL "
+                         "events (DESIGN.md §10) to this path (engine "
+                         "path only)")
+    ap.add_argument("--metrics-interval", type=int, default=1,
+                    help="emit a 'serve_step' event every N engine "
+                         "iterations")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the engine run "
+                         "into this directory")
     args = ap.parse_args()
 
     from repro.launch.mesh import make_host_mesh

@@ -85,6 +85,16 @@ def main():
                          "its post-install reference")
     ap.add_argument("--snr-threshold", type=float, default=0.85)
     ap.add_argument("--snr-patience", type=int, default=8)
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="write the repro.obs JSONL event log (per-step "
+                         "samples + genfit lifecycle, DESIGN.md §10) to "
+                         "this path")
+    ap.add_argument("--metrics-interval", type=int, default=1,
+                    help="emit a 'step' JSONL event every N steps")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of a few "
+                         "steady-state steps into this directory (host "
+                         "spans annotate the timeline)")
     args = ap.parse_args()
 
     from repro.launch.mesh import make_host_mesh
@@ -152,15 +162,28 @@ def main():
                       gen_swap_delay=args.gen_swap_delay,
                       gen_refresh_mode=args.gen_refresh_mode,
                       snr_threshold=args.snr_threshold,
-                      snr_patience=args.snr_patience)
+                      snr_patience=args.snr_patience,
+                      metrics_jsonl=args.metrics_jsonl,
+                      metrics_interval=args.metrics_interval,
+                      profile_dir=args.profile_dir)
+    from repro.obs import Registry, console_summary
+    registry = (Registry() if (args.metrics_jsonl or args.profile_dir)
+                else None)
     state, hist = run_loop(
         state, train_step, batch_fn, loop, jax.random.PRNGKey(1),
-        gen_fit_fn=gen_cb,
+        gen_fit_fn=gen_cb, registry=registry,
         on_step=lambda s, m: print(
             f"step {s:4d} loss={m['loss']:.4f} "
             f"{m['step_time']*1e3:.0f}ms", flush=True))
     print(f"final loss {hist['loss'][-1]:.4f}; "
           f"stragglers={hist['stragglers']}")
+    if registry is not None:
+        print(console_summary(registry, title="train metrics"))
+        if args.metrics_jsonl:
+            print(f"metrics JSONL: {args.metrics_jsonl}")
+        if args.profile_dir:
+            print(f"profile: {args.profile_dir} (load in TensorBoard / "
+                  f"xprof; host spans annotate the trace)")
 
 
 if __name__ == "__main__":

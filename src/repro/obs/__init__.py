@@ -1,0 +1,25 @@
+"""repro.obs — unified metrics, tracing, and profiling (DESIGN.md §10).
+
+The one substrate every subsystem reports through: the train loop, the
+serving engine, and the genfit refresh lifecycle all write to a
+:class:`Registry` (counters / gauges / EWMAs / fixed-bucket histograms),
+time their phases with :func:`span`, and export through the JSONL event
+log, the Prometheus text dump, or the console summary.
+"""
+from repro.obs.export import (EVENT_SCHEMA, JsonlExporter, console_summary,
+                              prometheus_text, read_jsonl, validate_events)
+from repro.obs.registry import (DEFAULT_TIME_BUCKETS, NULL_COUNTER,
+                                NULL_EWMA, NULL_GAUGE, NULL_HISTOGRAM,
+                                NULL_REGISTRY, Counter, Ewma, Gauge,
+                                Histogram, Registry, exp_buckets,
+                                linear_buckets)
+from repro.obs.trace import ProfileWindow, Span, current_spans, span
+
+__all__ = [
+    "Counter", "Ewma", "Gauge", "Histogram", "Registry", "NULL_REGISTRY",
+    "NULL_COUNTER", "NULL_GAUGE", "NULL_EWMA", "NULL_HISTOGRAM",
+    "DEFAULT_TIME_BUCKETS", "exp_buckets", "linear_buckets",
+    "Span", "span", "current_spans", "ProfileWindow",
+    "JsonlExporter", "read_jsonl", "validate_events", "EVENT_SCHEMA",
+    "prometheus_text", "console_summary",
+]

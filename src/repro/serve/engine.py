@@ -53,6 +53,8 @@ from repro.core.heads import HeadConfig, HeadParams
 from repro.models import lm_head
 from repro.models.config import ModelConfig
 from repro.models import transformer
+from repro.obs import JsonlExporter, Registry
+from repro.obs.trace import span
 from repro.serve.cache_pool import PagedPool
 from repro.serve.candidate_cache import CandidateCache
 from repro.train.step import (make_batched_prefill, make_paged_decode,
@@ -174,12 +176,33 @@ class Engine:
     """Continuous-batching decode engine. See module docstring."""
 
     def __init__(self, cfg: ModelConfig, hcfg: HeadConfig, params,
-                 head_state, serve_cfg: ServeConfig):
+                 head_state, serve_cfg: ServeConfig,
+                 registry: Optional[Registry] = None,
+                 exporter: Optional[JsonlExporter] = None,
+                 metrics_interval: int = 1):
         self.cfg = cfg
         self.hcfg = hcfg
         self.params = params
         self.head_state = head_state
         self.scfg = serve_cfg
+        # Observability (repro.obs, DESIGN.md §10). The engine always
+        # carries an enabled registry — its instruments back the
+        # ``stats()`` latency view, and host-side bookkeeping is noise
+        # next to a decode launch. Pass a shared registry to aggregate
+        # across engines, or an ``exporter`` to stream ``request`` /
+        # ``serve_step`` JSONL events (sampled every
+        # ``metrics_interval`` engine iterations).
+        self.registry = registry if registry is not None else Registry()
+        self.exporter = exporter
+        self.metrics_interval = max(metrics_interval, 1)
+        reg = self.registry
+        self._h_admission = reg.histogram("serve/admission_wait_s")
+        self._h_ttft = reg.histogram("serve/ttft_s")
+        self._h_latency = reg.histogram("serve/latency_s")
+        self._c_tokens = reg.counter("serve/tokens")
+        self._g_queue = reg.gauge("serve/queue_depth")
+        self._g_active = reg.gauge("serve/active")
+        self._g_pages = reg.gauge("serve/page_occupancy")
         page_len = serve_cfg.page_len or serve_cfg.max_len
         max_pages = -(-serve_cfg.max_len // page_len)
         n_pages = serve_cfg.n_pages or serve_cfg.n_slots * max_pages
@@ -307,6 +330,7 @@ class Engine:
                        else self.scfg.eos_id)
         self._next_id += 1
         self._queue.append(handle)
+        self._g_queue.set(len(self._queue))
         return handle
 
     def swap_head_state(self, head_state) -> None:
@@ -387,6 +411,12 @@ class Engine:
         return len(shapes)
 
     def stats(self) -> dict:
+        """Engine snapshot: the pre-obs keys (unchanged, for compat) plus
+        the registry view — ``latency`` carries per-request histograms
+        (admission-wait, TTFT, total; count/mean/p50/p95/p99 derived from
+        the same perf_counter timestamps the handles expose raw) and
+        ``metrics`` is the full ``repro.obs`` snapshot, including the
+        ``serve/phase/*`` span timings."""
         pool = self.pool
         # Internal fragmentation: the tail of each active request's last
         # page holds positions it has not reached (and with upfront
@@ -421,8 +451,28 @@ class Engine:
             "internal_fragmentation": (1.0 - used_pos / mapped_pos
                                        if mapped_pos else 0.0),
         }
+        out["latency"] = {
+            "admission_wait": self._h_admission.snapshot(),
+            "ttft": self._h_ttft.snapshot(),
+            "total": self._h_latency.snapshot(),
+        }
+        out["tokens"] = self._c_tokens.value
         if self.candidate_cache is not None:
-            out["candidate_cache"] = self.candidate_cache.stats()
+            cc = self.candidate_cache.stats()
+            out["candidate_cache"] = cc
+            lookups = cc["hits"] + cc["misses"]
+            self.registry.gauge("serve/candidate_cache_hit_rate").set(
+                cc["hits"] / lookups if lookups else 0.0)
+        # Scheduler counters stay plain attributes (benchmarks reset the
+        # peaks between warmup and the measured trace); the registry view
+        # mirrors them at snapshot time.
+        for name, v in (("serve/decode_steps", self.decode_steps),
+                        ("serve/prefill_calls", self.prefill_calls),
+                        ("serve/descent_skips", self.descent_skips),
+                        ("serve/completed", self.completed_count),
+                        ("serve/peak_active", self.peak_active)):
+            self.registry.gauge(name).set(v)
+        out["metrics"] = self.registry.snapshot()
         return out
 
     # -- scheduler internals --------------------------------------------
@@ -460,6 +510,9 @@ class Engine:
         self.peak_active = max(self.peak_active, len(self._active))
         self.peak_pages_in_use = max(self.peak_pages_in_use,
                                      self.pool.num_mapped_pages)
+        self._g_queue.set(len(self._queue))
+        self._g_active.set(len(self._active))
+        self._g_pages.set(self.pool.num_mapped_pages / self.pool.n_pages)
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -507,6 +560,7 @@ class Engine:
         now = time.perf_counter()
         for h in handles:
             h.admitted_at = now
+            self._h_admission.observe(now - h.submitted_at)
             self.admission_order.append(h.request_id)
             self._active[h.slot] = h
 
@@ -524,11 +578,12 @@ class Engine:
             lengths[i] = prompt.size
             lanes[i] = h.slot
             ptab[i] = pool.page_table[h.slot]
-        hid, new_cache = self._prefill(self.params, tokens, lengths, lanes,
-                                       pool.cache, ptab)
-        del hid   # first output token comes from the decode step,
-        #           matching the lock-step path token-for-token
-        pool.swap_cache(new_cache)
+        with span("serve/phase/prefill", self.registry):
+            hid, new_cache = self._prefill(self.params, tokens, lengths,
+                                           lanes, pool.cache, ptab)
+            del hid   # first output token comes from the decode step,
+            #           matching the lock-step path token-for-token
+            pool.swap_cache(new_cache)
         self.prefill_calls += 1
 
     def _decode_and_retire(self) -> None:
@@ -538,21 +593,25 @@ class Engine:
         for slot, st in self._active.items():
             token[slot, 0] = st.next_input
             pos[slot] = st.cache_pos
-        h, new_cache = self._decode(self.params, token, self.pool.cache,
-                                    pos, self.pool.page_table)
-        self.pool.swap_cache(new_cache)
+        with span("serve/phase/decode", self.registry):
+            h, new_cache = self._decode(self.params, token, self.pool.cache,
+                                        pos, self.pool.page_table)
+            self.pool.swap_cache(new_cache)
         self.decode_steps += 1
         self._occupancy_sum += len(self._active)
         self._page_occupancy_sum += self.pool.num_mapped_pages
 
-        next_tokens = self._select(h)
+        with span("serve/phase/select", self.registry):
+            next_tokens = self._select(h)
 
         now = time.perf_counter()
+        n_live = len(self._active)
         for slot in list(self._active):
             st = self._active[slot]
             tok = int(next_tokens[slot])
             if st.first_token_at is None:
                 st.first_token_at = now
+                self._h_ttft.observe(now - st.submitted_at)
             st.tokens.append(tok)
             st.history.append(tok)
             st.next_input = tok
@@ -567,6 +626,25 @@ class Engine:
                 self.pool.release(slot)
                 self.completed.append(st)
                 self.completed_count += 1
+                self._h_latency.observe(st.finished_at - st.submitted_at)
+                if self.exporter is not None:
+                    self.exporter.emit({
+                        "event": "request", "request_id": st.request_id,
+                        "tokens": len(st.tokens),
+                        "admission_wait_s": (st.admitted_at
+                                             - st.submitted_at),
+                        "ttft_s": st.first_token_at - st.submitted_at,
+                        "latency_s": st.finished_at - st.submitted_at})
+        self._c_tokens.inc(n_live)
+        self._g_active.set(len(self._active))
+        self._g_pages.set(self.pool.num_mapped_pages / self.pool.n_pages)
+        if (self.exporter is not None
+                and self.decode_steps % self.metrics_interval == 0):
+            self.exporter.emit({
+                "event": "serve_step", "engine_step": self.decode_steps,
+                "queue_depth": len(self._queue), "active": len(self._active),
+                "page_occupancy": (self.pool.num_mapped_pages
+                                   / self.pool.n_pages)})
 
     def _select(self, h) -> np.ndarray:
         """Next-token selection for every slot (free rows give garbage that
@@ -592,7 +670,8 @@ class Engine:
                 cand[slot], log_pn[slot] = c, lp
             self.descent_skips += 1
         else:
-            cand, log_pn = self._propose(self.head_state, h)
+            with span("serve/phase/descent", self.registry):
+                cand, log_pn = self._propose(self.head_state, h)
             if cache is not None:
                 # One host transfer for both arrays (they are tiny:
                 # n_slots x beam ids + log-probs).

@@ -42,8 +42,11 @@ from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.genfit.refresh import (AsyncRefresher, drop_snapshot,
                                   latest_snapshot_step, load_snapshot,
                                   refresh_on_snr, save_snapshot,
-                                  snapshot_path_exists)
+                                  snapshot_path_exists, swap_event)
+from repro.obs import NULL_REGISTRY, JsonlExporter, ProfileWindow, Registry
+from repro.obs.trace import span
 from repro.train.state import TrainState, snr_reset_pair
+from repro.train.step import publish_step_metrics
 
 
 @dataclasses.dataclass
@@ -66,6 +69,11 @@ class LoopConfig:
     gen_refresh_mode: str = "period"
     snr_threshold: float = 0.85     # trigger at ewma < threshold * ref
     snr_patience: int = 8           # min steps after install before trigger
+    # -- observability (repro.obs, DESIGN.md §10) --
+    metrics_jsonl: Optional[str] = None   # per-step JSONL event log path
+    metrics_interval: int = 1       # emit a "step" event every N steps
+    profile_dir: Optional[str] = None     # jax.profiler capture dir
+    profile_steps: int = 5          # steady-state steps in the capture
 
     def gen_due(self, step: int) -> bool:
         return (step == self.gen_warmup_steps
@@ -128,15 +136,39 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
              cfg: LoopConfig, rng: jax.Array,
              preemption: Optional[Preemption] = None,
              gen_fit_fn: Optional[Callable[[TrainState], Any]] = None,
-             on_step: Optional[Callable[[int, Dict], None]] = None):
+             on_step: Optional[Callable[[int, Dict], None]] = None,
+             registry: Optional[Registry] = None):
     """Run (or resume) training. Returns (state, history dict).
 
     ``batch_fn(step) -> batch`` must be deterministic in step.
     ``gen_fit_fn(state) -> LMHeadState`` refits the adversarial generator.
+
+    Observability (repro.obs, DESIGN.md §10): pass a ``registry`` to
+    collect the documented ``train/*`` / ``snr/*`` / ``genfit/*``
+    metrics; with ``cfg.metrics_jsonl`` set an own registry is created
+    and every lifecycle event plus a per-``metrics_interval`` step
+    sample is appended to the JSONL log. With neither, the loop runs
+    against the shared null registry — the zero-overhead default.
+    ``history`` keeps its pre-obs keys (loss/step/step_times/gen_*)
+    for compatibility; ``step_times`` holds steady-state steps only,
+    the first executed step of the process (XLA compilation) lands in
+    ``history["compile_time_s"]`` instead.
     """
     preemption = preemption or Preemption()
     monitor = StragglerMonitor(cfg.straggler_factor, cfg.ewma_alpha)
-    history: Dict[str, list] = {"loss": [], "step": []}
+    if registry is None:
+        registry = (Registry() if (cfg.metrics_jsonl or cfg.profile_dir)
+                    else NULL_REGISTRY)
+    if cfg.profile_dir:
+        registry.annotate = True    # host spans show up on the trace
+    exporter = (JsonlExporter(cfg.metrics_jsonl) if cfg.metrics_jsonl
+                else None)
+    emit = exporter.emit if exporter is not None else (lambda ev: None)
+    profiler = ProfileWindow(cfg.profile_dir, cfg.profile_steps)
+    # history is the compatibility view (keys appear only when the
+    # corresponding event happened, as before); the registry is the
+    # primary record.
+    history: Dict[str, Any] = {"loss": [], "step": [], "step_times": []}
     if cfg.gen_refresh_mode not in ("period", "snr"):
         raise ValueError(f"unknown gen_refresh_mode "
                          f"{cfg.gen_refresh_mode!r} (period|snr)")
@@ -199,6 +231,8 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                 snap_state = TrainState(**snap)
             refresher.submit(snap_state, s_sub)
             pending_swap = s_sub + cfg.gen_swap_delay
+            registry.counter("genfit/submits").inc()
+            emit({"event": "gen_submit", "step": s_sub, "resumed": True})
 
     # Consumed gensnap artifacts are dropped only once a *durable*
     # checkpoint from beyond their swap step exists: a resume always loads
@@ -226,6 +260,7 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                 # Recorded swap point: install the background fit (blocks
                 # only if the fit is still running — by construction the
                 # step is config-determined, never timing-determined).
+                old_fit = int(jax.device_get(state.gen_fit_step))
                 head, s_sub = refresher.result()
                 # Fresh generator: restart the SNR proxy EWMA and disarm
                 # the reference (re-armed snr_patience steps after the
@@ -237,6 +272,8 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                     snr_ewma=ewma0, snr_ref=ref0)
                 pending_swap = None
                 history.setdefault("gen_swap_steps", []).append(step)
+                emit(swap_event(step, old_fit, s_sub,
+                                refresher.last_fit_seconds, registry))
                 if cfg.checkpoint_dir:
                     snaps_to_drop.append((s_sub, step))
             if snr_mode:
@@ -245,21 +282,30 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                 # it reads is checkpointed, so resume replays the same
                 # trigger steps).
                 due = step == cfg.gen_warmup_steps
-                if (not due and pending_swap is None
-                        and not (refresher is not None
-                                 and refresher.in_flight)):
+                if not due:
                     fit_host = int(jax.device_get(state.gen_fit_step))
                     install_est = (fit_host + cfg.gen_swap_delay
                                    if use_async and fit_host >= 0
                                    else fit_host)
-                    due = refresh_on_snr(
+                    fired = refresh_on_snr(
                         step, install_est,
                         float(jax.device_get(state.snr_ewma)),
                         float(jax.device_get(state.snr_ref)),
                         cfg.snr_threshold, cfg.snr_patience)
-                    if due:
-                        history.setdefault("snr_trigger_steps",
-                                           []).append(step)
+                    busy = (pending_swap is not None
+                            or (refresher is not None
+                                and refresher.in_flight))
+                    if fired and busy:
+                        # One refresh in flight at a time: the trigger
+                        # fired but submission declines. Counted per
+                        # declined step — a growing counter here means
+                        # the EWMA stayed degraded through a whole
+                        # submit→swap window (tune gen_swap_delay).
+                        registry.counter("genfit/refresh_skipped").inc()
+                    elif fired:
+                        due = True
+                        history.setdefault("snr_trigger_steps", []).append(step)
+                        emit({"event": "snr_trigger", "step": step})
             else:
                 due = cfg.gen_due(step)
             if due:
@@ -277,34 +323,82 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                     refresher.submit(state, step)
                     pending_swap = step + cfg.gen_swap_delay
                     history.setdefault("gen_submit_steps", []).append(step)
+                    registry.counter("genfit/submits").inc()
+                    emit({"event": "gen_submit", "step": step})
                 else:
+                    old_fit = int(jax.device_get(state.gen_fit_step))
+                    t_fit = time.perf_counter()
+                    new_head = gen_fit_fn(state)
+                    fit_s = time.perf_counter() - t_fit
                     ewma0, ref0 = snr_reset_pair()
                     state = state._replace(
-                        head_state=gen_fit_fn(state),
+                        head_state=new_head,
                         gen_fit_step=jnp.asarray(step, jnp.int32),
                         snr_ewma=ewma0, snr_ref=ref0)
                     history.setdefault("gen_swap_steps", []).append(step)
+                    registry.counter("genfit/submits").inc()
+                    emit(swap_event(step, old_fit, step, fit_s, registry))
 
+        # The first executed step of THIS process pays XLA compilation —
+        # a different quantity from the steady-state step time, recorded
+        # as compile_time_s and excluded from step_times, the straggler
+        # EWMA, and the train/step_time_s histogram (benchmarks no
+        # longer hand-trim step 0). Profiling likewise starts only once
+        # compilation is out of the way.
+        is_compile = step == start_step
+        if not is_compile:
+            profiler.tick(step)
         t0 = time.perf_counter()
-        batch = batch_fn(step)
+        with span("train/phase/data", registry):
+            batch = batch_fn(step)
         # Step-indexed rng (not sequential splitting): restart from a
         # checkpoint replays the exact rng stream — bit-exact recovery.
         sub = jax.random.fold_in(rng, step)
-        state, metrics = train_step(state, batch, sub)
-        jax.block_until_ready(metrics["loss"])
+        with span("train/phase/step", registry):
+            state, metrics = train_step(state, batch, sub)
+            jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
-        slow = monitor.observe(dt)
 
         loss = float(jax.device_get(metrics["loss"]))
         if not np.isfinite(loss):
             raise FloatingPointError(f"non-finite loss at step {step}")
+        slow = False
+        if is_compile:
+            history["compile_time_s"] = dt
+            registry.gauge("train/compile_time_s").set(dt)
+            emit({"event": "compile", "step": step, "compile_time_s": dt})
+        else:
+            slow = monitor.observe(dt)
+            history["step_times"].append(dt)
+            registry.histogram("train/step_time_s").observe(dt)
+            if slow:
+                registry.counter("train/stragglers").inc()
         history["loss"].append(loss)
         history["step"].append(step)
-        history.setdefault("step_times", []).append(dt)
-        if on_step is not None:
-            on_step(step, {**{k: float(jax.device_get(v))
-                              for k, v in metrics.items()},
-                           "step_time": dt, "straggler": slow})
+
+        sample_due = (exporter is not None and not is_compile
+                      and step % max(cfg.metrics_interval, 1) == 0)
+        if on_step is not None or registry.enabled or sample_due:
+            # One host transfer for the whole (tiny, already-computed)
+            # metrics dict, shared by the callback, the gauges, and the
+            # JSONL sample.
+            host_m = {k: float(v)
+                      for k, v in jax.device_get(metrics).items()}
+            snr_ref = (float(jax.device_get(state.snr_ref))
+                       if "snr_ewma" in host_m else None)
+            publish_step_metrics(registry, host_m, snr_ref=snr_ref)
+            if sample_due:
+                ev = {"event": "step", "step": step, "loss": loss,
+                      "step_time_s": dt, "straggler": slow}
+                for k in ("snr_proxy", "snr_ewma", "grad_norm"):
+                    if k in host_m:
+                        ev[k] = host_m[k]
+                if snr_ref is not None:
+                    ev["snr_ref"] = snr_ref
+                emit(ev)
+            if on_step is not None:
+                on_step(step, {**host_m, "step_time": dt,
+                               "straggler": slow})
 
         if snr_mode and gen_fit_fn is not None:
             # Arm the reference snr_patience steps after the install:
@@ -334,4 +428,10 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
             break
 
     history["stragglers"] = monitor.flagged
+    profiler.stop()
+    if registry.enabled:
+        history["metrics"] = registry.snapshot()
+    if exporter is not None:
+        exporter.emit({"event": "summary", "metrics": registry.snapshot()})
+        exporter.close()
     return state, history

@@ -113,10 +113,16 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
         return grads, metrics
 
     def train_step(state: TrainState, batch, rng):
-        grads, metrics = (dense_step if mode == "dense"
-                          else sparse_step)(state, batch, rng)
-        new_params, new_opt, opt_metrics = apply_updates(
-            opt_cfg, state.params, grads, state.opt_state, mesh=mesh)
+        # named_scope labels the jaxpr/HLO so a --profile-dir device
+        # capture attributes ops to the same phases the host spans use
+        # (DESIGN.md §10): loss+grad (incl. sample-negatives inside the
+        # head loss) vs the optimizer scatter.
+        with jax.named_scope("loss_and_grad"):
+            grads, metrics = (dense_step if mode == "dense"
+                              else sparse_step)(state, batch, rng)
+        with jax.named_scope("optimizer_scatter"):
+            new_params, new_opt, opt_metrics = apply_updates(
+                opt_cfg, state.params, grads, state.opt_state, mesh=mesh)
         metrics.update(opt_metrics)
         # Fold the per-batch signal-mass proxy into the EWMA the SNR
         # refresh trigger watches. "snr_proxy" presence is a trace-time
@@ -138,6 +144,35 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
                           snr_ref=state.snr_ref), metrics
 
     return train_step
+
+
+# Jitted-metric name -> repro.obs gauge (DESIGN.md §10 `snr/*` and
+# `train/*` namespaces). The SNR triple drives the refresh trigger
+# (snr_proxy = per-batch Eq. 13 signal mass, snr_ewma = its smoothed
+# TrainState series, snr_ref = the armed post-install reference), and
+# publishing them as gauges is what makes --gen-refresh-mode snr
+# observable outside TrainState.
+STEP_METRIC_GAUGES = {
+    "loss": "train/loss",
+    "grad_norm": "train/grad_norm",
+    "snr_proxy": "snr/proxy",
+    "snr_ewma": "snr/ewma",
+}
+
+
+def publish_step_metrics(registry, host_metrics: Dict[str, float],
+                         snr_ref: Optional[float] = None) -> None:
+    """Host-side bridge from a jitted step's metrics dict to the obs
+    registry. The step function runs under jit and cannot touch host
+    state, so the loop device_gets the (tiny, already-computed) metrics
+    once per step and publishes through this mapping; ``snr_ref`` lives
+    on TrainState, not in the metrics dict, and is passed separately."""
+    registry.counter("train/steps").inc()
+    for src, name in STEP_METRIC_GAUGES.items():
+        if src in host_metrics:
+            registry.gauge(name).set(host_metrics[src])
+    if snr_ref is not None:
+        registry.gauge("snr/ref").set(snr_ref)
 
 
 def make_eval_step(cfg: ModelConfig, hcfg: HeadConfig):
