@@ -12,8 +12,11 @@
 #                       level-parallel vs warm-start refresh + held-out
 #                       log-likelihood (writes BENCH_tree_fit.json)
 #   make bench-heads  - head TRAIN-step cost vs C: dense O(C·K) autodiff
-#                       update vs sparse O(B·K·n_neg) touched-row update
-#                       (writes BENCH_heads.json)
+#                       update vs sparse O(B·K·n_neg) touched-row update,
+#                       plus the head-state memory sweep — prints the
+#                       bytes/label table (adamw/adagrad/sm3 × fp32/bf16,
+#                       DESIGN.md §11) and writes BENCH_heads.json with
+#                       state_bytes columns up to C=16M
 #   make bench-snr    - gradient-SNR table for every fitted NegativeSampler
 #                       (tree/uniform/unigram/lsh/rff) + the same-objective
 #                       convergence race (writes BENCH_snr.json)

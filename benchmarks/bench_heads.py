@@ -12,6 +12,15 @@ scatter-add gradient buffer, the optimizer sweep, the accumulator sweep);
 the sparse path is O(B·K·n_neg) end to end. Writes tracked
 ``BENCH_heads.json`` (env ``BENCH_HEADS_JSON`` overrides) via
 ``make bench-heads``.
+
+It also runs the head-STATE memory sweep (DESIGN.md §11): param +
+optimizer-accumulator bytes per label for adamw/adagrad/sm3 at fp32 and
+bf16 storage, with the sparse step re-timed per variant — the table
+behind the 100M-label claim that step time stays flat while head-state
+bytes are the only thing that grows. ``state_bytes`` rides along on
+every train_step row; variant rows land in ``state_sweep`` and the
+headline adamw-fp32 → sm3-bf16 ratio in ``state_reduction``. Bytes-only
+rows (no allocation — jax.eval_shape) extend the sweep to C=16M.
 """
 from __future__ import annotations
 
@@ -27,7 +36,8 @@ from repro.core import heads as heads_lib
 from repro.core import tree as tree_lib
 from repro.core.heads import Generator, HeadConfig
 from repro.obs import Registry
-from repro.optim import OptimizerConfig, apply_updates, init_opt_state
+from repro.optim import (OptimizerConfig, apply_updates, head_state_bytes,
+                         init_opt_state)
 
 
 def _time_fn(fn, *args, iters=20, warmup=3):
@@ -101,10 +111,31 @@ def _time_steps(step_fn, make_state0, iters, warmup=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _state_variants():
+    """(label, OptimizerConfig, param dtype) for the memory sweep.
+
+    adamw/fp32 is the dense-reference worst case (mu + nu + last on top
+    of fp32 params); sm3/bf16 is the 100M-label configuration — one
+    bf16 row cover + one bf16 col cover + bf16 params.
+    """
+    return (
+        ("adamw/fp32", OptimizerConfig(name="adamw", learning_rate=1e-3),
+         jnp.float32),
+        ("adagrad/fp32", OptimizerConfig(name="adagrad", learning_rate=0.1),
+         jnp.float32),
+        ("sm3/fp32", OptimizerConfig(name="sm3", learning_rate=0.1),
+         jnp.float32),
+        ("sm3/bf16", OptimizerConfig(name="sm3", learning_rate=0.1,
+                                     state_dtype="bf16"),
+         jnp.bfloat16),
+    )
+
+
 def run_train_bench(csv_rows: list,
                     c_values=(8192, 65536, 524288, 2097152),
                     batch=256, kdim=64, k_gen=16, n_neg=1,
                     kind="adversarial_ns", iters=10, kernel_c=65536,
+                    state_extra_c=(16_777_216,),
                     json_path=None, write_json=True) -> dict:
     """Full train-step sweep: dense vs sparse head update vs C.
 
@@ -133,7 +164,7 @@ def run_train_bench(csv_rows: list,
 
         return y, gen, cfg, make_state0
 
-    def make_step(cfg, gen, y, path):
+    def make_step(cfg, gen, y, path, ocfg=opt_cfg):
         @functools.partial(jax.jit, donate_argnums=(0, 1))
         def step(p, opt, rng):
             if path == "dense":
@@ -143,12 +174,22 @@ def run_train_bench(csv_rows: list,
                 _, _, grads, _ = heads_lib.sparse_head_loss(
                     cfg, p, gen, h, xg, y, rng,
                     use_kernel=(path == "sparse_kernel"))
-            p2, opt2, _ = apply_updates(opt_cfg, p, grads, opt)
+            p2, opt2, _ = apply_updates(ocfg, p, grads, opt)
             return p2, opt2
         return step
 
+    def _abs_state_bytes(c, ocfg=opt_cfg, pdtype=jnp.float32):
+        # eval_shape: bytes without allocating the (C, K) buffers — this
+        # is what lets the sweep report C=16M on any host.
+        def mk():
+            params = heads_lib.init_head_params(key, c, kdim, dtype=pdtype)
+            return params, init_opt_state(ocfg, params)
+        p_abs, o_abs = jax.eval_shape(mk)
+        return head_state_bytes(p_abs, o_abs)
+
     t_slots = batch * (1 + n_neg)
     sparse_bytes = 4 * (t_slots * kdim + 2 * t_slots)
+    adagrad_state = {c: _abs_state_bytes(c) for c in c_values}
 
     # The sparse sweep runs as one pass BEFORE any dense step executes:
     # the dense path churns multi-GB gradient/accumulator buffers at large
@@ -160,7 +201,8 @@ def run_train_bench(csv_rows: list,
         us_s = _time_steps(make_step(cfg, gen, y, "sparse"), make_state0,
                            4 * iters)
         results.append(dict(c=c, path="sparse", us_per_step=round(us_s, 1),
-                            grad_bytes=sparse_bytes))
+                            grad_bytes=sparse_bytes,
+                            state_bytes=adagrad_state[c]))
         csv_rows.append((f"head_train/sparse/C={c}", us_s,
                          f"grad_bytes={sparse_bytes}"))
 
@@ -171,7 +213,8 @@ def run_train_bench(csv_rows: list,
         us_d = _time_steps(make_step(cfg, gen, y, "dense"), make_state0,
                            n_iters)
         results.append(dict(c=c, path="dense", us_per_step=round(us_d, 1),
-                            grad_bytes=dense_bytes))
+                            grad_bytes=dense_bytes,
+                            state_bytes=adagrad_state[c]))
         csv_rows.append((f"head_train/dense/C={c}", us_d,
                          f"grad_bytes={dense_bytes}"))
         if c == kernel_c:
@@ -179,11 +222,55 @@ def run_train_bench(csv_rows: list,
                                make_state0, max(2, iters // 2))
             results.append(dict(
                 c=c, path="sparse_kernel", us_per_step=round(us_k, 1),
-                grad_bytes=sparse_bytes,
+                grad_bytes=sparse_bytes, state_bytes=adagrad_state[c],
                 note="pallas interpret mode on CPU (correctness "
                      "execution; per-row loads run in the interpreter)"))
             csv_rows.append((f"head_train/sparse_kernel/C={c}", us_k,
                              "interpret"))
+
+    # --- head-state memory sweep (DESIGN.md §11) -----------------------
+    # Timed at every c in c_values (sparse path, per-variant optimizer);
+    # state_extra_c rows are bytes-only via eval_shape (no allocation),
+    # which is how the sweep extends to C=16M without 13 GB of adamw
+    # accumulators.
+    state_rows = []
+    bytes_c = tuple(c_values) + tuple(x for x in state_extra_c
+                                      if x > max(c_values))
+    for c in bytes_c:
+        timed = c in c_values
+        if timed:
+            y, gen, cfg, _ = setup(c)
+        for label, ocfg, pdtype in _state_variants():
+            sbytes = _abs_state_bytes(c, ocfg, pdtype)
+            row = dict(c=c, variant=label, state_bytes=sbytes,
+                       bytes_per_label=round(sbytes / c, 2))
+            if timed:
+                def make_state0(c=c, ocfg=ocfg, pdtype=pdtype):
+                    params = heads_lib.init_head_params(key, c, kdim,
+                                                        dtype=pdtype)
+                    return params, init_opt_state(ocfg, params)
+                us = _time_steps(make_step(cfg, gen, y, "sparse", ocfg),
+                                 make_state0, 2 * iters)
+                row["us_per_step"] = round(us, 1)
+                if pdtype == jnp.bfloat16:
+                    row["note"] = (
+                        "XLA:CPU lowers a scatter into a bf16 (C, K) "
+                        "table to convert->scatter->convert — an O(C) "
+                        "per-step backend artifact this timing honestly "
+                        "includes (82 ms at C=512k for a 512-row "
+                        "scatter; uint16/int8/f32 scatters run in-place "
+                        "in ~40 us). TPU scatters bf16 natively; on "
+                        "this host the flat-step-time claim is carried "
+                        "by sm3/fp32.")
+            state_rows.append(row)
+            csv_rows.append((f"head_state/{label}/C={c}",
+                             row.get("us_per_step", 0.0),
+                             f"state_bytes={sbytes}"))
+
+    c_star = max(bytes_c)
+    _by = {r["variant"]: r["state_bytes"] for r in state_rows
+           if r["c"] == c_star}
+    reduction = round(_by["adamw/fp32"] / _by["sm3/bf16"], 2)
 
     def _us(path, c):
         return next(r["us_per_step"] for r in results
@@ -201,6 +288,12 @@ def run_train_bench(csv_rows: list,
             "sparse": round(_us("sparse", hi) / _us("sparse", lo), 2),
             "dense": round(_us("dense", hi) / _us("dense", lo), 2),
         },
+        "state_sweep": state_rows,
+        "state_reduction": {
+            "c": c_star, "ref": "adamw/fp32", "best": "sm3/bf16",
+            "ref_bytes": _by["adamw/fp32"], "best_bytes": _by["sm3/bf16"],
+            "ratio": reduction,
+        },
     }
     # Route the headline numbers through the repro.obs registry so the
     # tracked JSON carries the same exporter schema (DESIGN.md §10) that
@@ -213,6 +306,10 @@ def run_train_bench(csv_rows: list,
         report["growth"]["sparse"])
     reg.gauge("bench/head_train/growth_dense").set(
         report["growth"]["dense"])
+    for r in state_rows:
+        reg.gauge(f"bench/head_train/state/{r['variant']}/c{r['c']}_bytes"
+                  ).set(r["state_bytes"])
+    reg.gauge("bench/head_train/state_reduction").set(reduction)
     report["metrics"] = reg.snapshot()
     if write_json:     # reduced sweeps (benchmarks.run) must not clobber
         path = json_path or os.environ.get("BENCH_HEADS_JSON",
@@ -223,9 +320,34 @@ def run_train_bench(csv_rows: list,
     return report
 
 
+def print_state_table(report: dict):
+    """bytes/label table for ``make bench-heads`` (DESIGN.md §11)."""
+    sweep = report["state_sweep"]
+    cs = sorted({r["c"] for r in sweep})
+    variants = [v for v, _, _ in _state_variants()]
+    cell = {(r["variant"], r["c"]): r for r in sweep}
+    print("\nhead-state bytes/label (param + optimizer accumulators):")
+    print(f"{'variant':>14} " + " ".join(f"{f'C={c}':>12}" for c in cs))
+    for v in variants:
+        vals = [f"{cell[(v, c)]['bytes_per_label']:>12}" for c in cs]
+        print(f"{v:>14} " + " ".join(vals))
+    print("sparse-step us/step per variant "
+          "(* = CPU bf16-scatter artifact, see row note):")
+    for v in variants:
+        vals = [f"{cell[(v, c)].get('us_per_step', '-'):>12}"
+                for c in cs]
+        mark = "*" if any("note" in cell[(v, c)] for c in cs) else " "
+        print(f"{v + mark:>14} " + " ".join(vals))
+    red = report["state_reduction"]
+    print(f"state reduction at C={red['c']}: {red['ratio']}x "
+          f"({red['best']} {red['best_bytes']:,} B vs "
+          f"{red['ref']} {red['ref_bytes']:,} B)")
+
+
 if __name__ == "__main__":
     rows = []
     run(rows)
-    run_train_bench(rows)
+    report = run_train_bench(rows)
     for r in rows:
         print(",".join(str(x) for x in r))
+    print_state_table(report)

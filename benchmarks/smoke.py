@@ -45,11 +45,17 @@ def smoke_heads():
     report = bench_heads.run_train_bench(
         [], c_values=(1024, 2048), batch=32, kdim=16, iters=2,
         kernel_c=2048, write_json=False)
-    _check("bench_heads", report, ("meta", "train_step", "growth"),
-           "train_step", ("c", "path", "us_per_step", "grad_bytes"))
+    _check("bench_heads", report, ("meta", "train_step", "growth",
+                                   "state_sweep", "state_reduction"),
+           "train_step", ("c", "path", "us_per_step", "grad_bytes",
+                          "state_bytes"))
     paths = {r["path"] for r in report["train_step"]}
     assert paths == {"dense", "sparse", "sparse_kernel"}, paths
     assert set(report["growth"]) >= {"sparse", "dense"}
+    _check("bench_heads", report, (), "state_sweep",
+           ("c", "variant", "state_bytes", "bytes_per_label"))
+    red = report["state_reduction"]
+    assert red["ratio"] > 1.0, red   # sm3/bf16 must beat adamw/fp32
     _check_metrics("bench_heads", report, "bench/head_train/")
 
 

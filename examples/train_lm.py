@@ -90,9 +90,10 @@ def main():
             else "dense O(C·K) gradient + optimizer sweep")
     print(f"head update: {head_update} ({desc})")
     # Donate the state so sparse row scatters run in place (no (C, K)
-    # copy per step) — unsafe only with --gen-async, where a background
-    # fit still reads the submitted state while training keeps stepping.
-    donate = () if args.gen_async else (0,)
+    # copy per step). Safe with --gen-async too: run_loop snapshots the
+    # leaves the background fit reads before submitting (snapshot-then-
+    # donate), so training can keep invalidating its own buffers.
+    donate = (0,)
     train_step = jax.jit(make_train_step(cfg, hcfg, opt,
                                          head_update=head_update),
                          donate_argnums=donate)

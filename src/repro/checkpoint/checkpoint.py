@@ -29,6 +29,25 @@ import numpy as np
 MANIFEST = "manifest.json"
 LATEST = "LATEST"
 
+# np.save writes ml_dtypes (bfloat16) arrays as raw void records ("|V2"):
+# the bits survive but the dtype is lost and astype() on load explodes.
+# Save such arrays as a same-width uint view with the true dtype recorded
+# in the manifest; restore views them back — bit-stable round-trip for the
+# bf16 head params / optimizer accumulators (DESIGN.md §11).
+_VIEW_DTYPES = {"bfloat16": np.uint16}
+
+
+def _to_savable(a: np.ndarray) -> np.ndarray:
+    view = _VIEW_DTYPES.get(str(a.dtype))
+    return a.view(view) if view is not None else a
+
+
+def _from_saved(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_DTYPES:
+        import ml_dtypes
+        return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return arr
+
 
 def _tree_paths(tree: Any):
     leaves, treedef = jax.tree.flatten(tree)
@@ -58,7 +77,8 @@ def save_checkpoint(directory: str, step: int, tree: Any,
                             "dtype": str(np.asarray(a).dtype)}
                            for a in host_leaves]}
         for i, arr in enumerate(host_leaves):
-            np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), np.asarray(arr))
+            np.save(os.path.join(tmp, f"arr_{i:05d}.npy"),
+                    _to_savable(np.asarray(arr)))
         with open(os.path.join(tmp, MANIFEST), "w") as f:
             json.dump(meta, f)
             f.flush()
@@ -120,8 +140,9 @@ def restore_checkpoint(directory: str, tree_like: Any,
     assert meta["n_leaves"] == len(leaves_like), (
         f"checkpoint has {meta['n_leaves']} leaves, expected "
         f"{len(leaves_like)}")
-    arrays = [np.load(os.path.join(path, f"arr_{i:05d}.npy"))
-              for i in range(meta["n_leaves"])]
+    arrays = [_from_saved(np.load(os.path.join(path, f"arr_{i:05d}.npy")),
+                          info["dtype"])
+              for i, info in enumerate(meta["leaves"])]
     for arr, like, info in zip(arrays, leaves_like, meta["leaves"]):
         assert tuple(arr.shape) == tuple(np.shape(like)), (
             arr.shape, np.shape(like))

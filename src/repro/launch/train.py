@@ -32,7 +32,9 @@ def build(args):
     hcfg = lm_head.head_config(cfg, args.head, n_neg=args.n_neg,
                                reg=args.reg)
     opt = OptimizerConfig(name=args.optimizer, learning_rate=args.lr,
-                          clip_norm=1.0)
+                          clip_norm=1.0,
+                          head_name=args.head_optimizer,
+                          state_dtype=args.state_dtype)
     return cfg, hcfg, opt
 
 
@@ -59,6 +61,17 @@ def main():
                     help="route the sparse head loss through the fused "
                          "Pallas sampled_head_loss kernel")
     ap.add_argument("--optimizer", default="adagrad")
+    ap.add_argument("--head-optimizer", default=None,
+                    choices=(None, "sgd", "adagrad", "adamw", "sm3"),
+                    help="override the optimizer for head params only "
+                         "(DESIGN.md §11): 'sm3' keeps one row + one col "
+                         "second-moment cover instead of the full (C, K) "
+                         "slab — the 100M-label memory play")
+    ap.add_argument("--state-dtype", default="fp32",
+                    choices=("fp32", "bf16", "int8"),
+                    help="storage dtype for the head optimizer "
+                         "accumulators (compute stays fp32; int8 adds a "
+                         "per-row scale)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--gen-warmup", type=int, default=0)
@@ -116,9 +129,10 @@ def main():
     # Donating the TrainState lets XLA scatter the touched rows in place
     # instead of copying the (C, K) param/accumulator buffers to build the
     # functional update — without it the O(U·K) sparse step pays an
-    # O(C·K) memcpy. Not safe with --gen-async: the background fit reads
-    # the submitted state while training keeps stepping (donation would
-    # invalidate its buffers mid-fit).
+    # O(C·K) memcpy. Safe even with --gen-async: run_loop snapshots the
+    # leaves the background fit reads (_fit_snapshot, snapshot-then-
+    # donate) before submitting, so training can keep invalidating its
+    # own buffers mid-fit.
     sampler = None
     if args.sampler != "config":
         # Fit the override proposal once from a startup snapshot, in the
@@ -133,7 +147,7 @@ def main():
         print(f"sampler: {type(sampler).__name__} (--sampler "
               f"{args.sampler})")
 
-    donate = () if args.gen_async else (0,)
+    donate = (0,)
     train_step = jax.jit(make_train_step(cfg, hcfg, opt,
                                          head_update=args.head_update,
                                          head_kernel=args.head_kernel,

@@ -177,6 +177,7 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
             vision_embeds: Optional[jax.Array] = None,
             cache=None, cache_pos: Optional[jax.Array] = None,
             page_table: Optional[jax.Array] = None,
+            inputs_embeds: Optional[jax.Array] = None,
             ) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
     """Run the stack. Returns (hidden (B,S,d), new_cache, metrics).
 
@@ -189,8 +190,16 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
       page_table (B, max_pages) mapping each lane's logical pages onto the
       shared arena (repro.serve.PagedPool); the page table is shared by
       every layer
+
+    ``inputs_embeds`` bypasses the embedding gather entirely: the caller
+    supplies the (B, S, d) hidden input (already cast, vision embeds
+    already concatenated). This is the sparse-embedding training path
+    (DESIGN.md §11): the gather runs *outside* the trunk vjp so its
+    cotangent can be collected as SparseRows instead of a dense (V, d)
+    scatter-add.
     """
-    h = embed_inputs(params, cfg, tokens, vision_embeds)
+    h = (inputs_embeds if inputs_embeds is not None
+         else embed_inputs(params, cfg, tokens, vision_embeds))
     bsz, s, _ = h.shape
     auto_positions = positions is None
     if positions is None:

@@ -1,11 +1,19 @@
-from repro.optim.compression import (EFState, compress_with_error_feedback,
-                                     decompress, init_ef_state)
-from repro.optim.optimizers import (OptimizerConfig, OptState, apply_updates,
-                                    clip_by_global_norm, global_norm,
-                                    init_opt_state, schedule)
-from repro.optim.sparse import SparseRows, accumulate_rows
+from repro.optim.compression import (EFState, QuantizedRows,
+                                     compress_with_error_feedback,
+                                     decompress, dequantize_rows,
+                                     init_ef_state, load_rows,
+                                     quantize_rows, store_rows)
+from repro.optim.optimizers import (OptimizerConfig, OptState, Sm3Cover,
+                                    apply_updates, clip_by_global_norm,
+                                    global_norm, head_state_bytes,
+                                    init_opt_state, schedule, tree_nbytes)
+from repro.optim.sparse import (SparseRows, accumulate_embed_rows,
+                                accumulate_rows)
 
-__all__ = ["EFState", "compress_with_error_feedback", "decompress",
-           "init_ef_state", "OptimizerConfig", "OptState", "apply_updates",
-           "clip_by_global_norm", "global_norm", "init_opt_state",
-           "schedule", "SparseRows", "accumulate_rows"]
+__all__ = ["EFState", "QuantizedRows", "compress_with_error_feedback",
+           "decompress", "dequantize_rows", "init_ef_state", "load_rows",
+           "quantize_rows", "store_rows", "OptimizerConfig", "OptState",
+           "Sm3Cover", "apply_updates", "clip_by_global_norm",
+           "global_norm", "head_state_bytes", "init_opt_state", "schedule",
+           "tree_nbytes", "SparseRows", "accumulate_embed_rows",
+           "accumulate_rows"]

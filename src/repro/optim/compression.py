@@ -1,14 +1,25 @@
-"""int8 gradient compression with error feedback, for the DP all-reduce.
+"""Compressed numeric storage: int8 gradient compression with error
+feedback (DP all-reduce) and quantized optimizer-accumulator storage
+(DESIGN.md §11).
 
-At 1000+ nodes the gradient all-reduce is the dominant inter-pod collective;
-8-bit quantization cuts its bytes 4x (fp32) / 2x (bf16). Error feedback
-(Seide et al. 2014; Karimireddy et al. 2019 "EF-SGD") accumulates the
-quantization residual locally and re-injects it next step, preserving
-convergence (tested in tests/test_compression.py).
-
+Gradient compression: at 1000+ nodes the gradient all-reduce is the
+dominant inter-pod collective; 8-bit quantization cuts its bytes 4x (fp32)
+/ 2x (bf16). Error feedback (Seide et al. 2014; Karimireddy et al. 2019
+"EF-SGD") accumulates the quantization residual locally and re-injects it
+next step, preserving convergence (tested in tests/test_compression.py).
 `compress -> (psum over data axes) -> decompress` is linear, so quantized
 all-reduce == all-reduce of quantized values; the shard_map wiring lives in
 repro.parallel.collectives.
+
+Accumulator storage: at C = 100M labels the (C, K) fp32 optimizer slabs —
+not the gradient — are the memory wall. ``store_rows`` / ``load_rows``
+convert between fp32 *compute* values and a compact *storage*
+representation: plain bf16 arrays (2 bytes/elt, ~3 decimal digits — enough
+for second moments whose only job is a sqrt-denominator), or
+:class:`QuantizedRows` (int8 payload + fp32 per-row scale, 1 byte/elt).
+All optimizer math stays fp32; quantization happens only at the
+gather/scatter boundary, so it composes with the sparse O(touched-rows)
+update path unchanged.
 """
 from __future__ import annotations
 
@@ -59,3 +70,64 @@ def compress_with_error_feedback(grads: Any, ef: EFState
 
 def decompress(q_tree: Any, s_tree: Any) -> Any:
     return jax.tree.map(_dequantize_leaf, q_tree, s_tree)
+
+
+# ---------------------------------------------------------------------------
+# Quantized optimizer-state storage (bf16 / int8 + per-row scale).
+# ---------------------------------------------------------------------------
+
+
+class QuantizedRows(NamedTuple):
+    """int8 storage for a (C, ...) accumulator: per-row symmetric scale.
+
+    q:     (C, ...) int8 payload.
+    scale: (C,) fp32, ``x ≈ q * scale[row]``. Rows of all zeros carry
+           scale 1 so dequantization is always well-defined.
+    """
+    q: jax.Array
+    scale: jax.Array
+
+
+def is_quantized_rows(x) -> bool:
+    return isinstance(x, QuantizedRows)
+
+
+def quantize_rows(x: jax.Array) -> QuantizedRows:
+    """Symmetric per-row (leading-axis) int8 quantization, fp32 in."""
+    x32 = x.astype(jnp.float32)
+    axes = tuple(range(1, x32.ndim))
+    amax = jnp.max(jnp.abs(x32), axis=axes) if axes else jnp.abs(x32)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    s_full = scale.reshape(scale.shape + (1,) * len(axes))
+    q = jnp.clip(jnp.round(x32 / s_full), -127, 127).astype(jnp.int8)
+    return QuantizedRows(q=q, scale=scale)
+
+
+def dequantize_rows(qr: QuantizedRows) -> jax.Array:
+    s_full = qr.scale.reshape(
+        qr.scale.shape + (1,) * (qr.q.ndim - qr.scale.ndim))
+    return qr.q.astype(jnp.float32) * s_full
+
+
+def store_rows(x32: jax.Array, state_dtype: str) -> Any:
+    """fp32 compute value -> storage representation.
+
+    state_dtype: "fp32" (identity), "bf16" (plain bf16 array), or "int8"
+    (QuantizedRows). 1-D leaves under int8 fall back to bf16: a per-row
+    scale on a (C,) vector is a scale per *element* — all cost, no
+    compression win over bf16.
+    """
+    if state_dtype == "fp32":
+        return x32
+    if state_dtype == "bf16" or (state_dtype == "int8" and x32.ndim < 2):
+        return x32.astype(jnp.bfloat16)
+    if state_dtype == "int8":
+        return quantize_rows(x32)
+    raise ValueError(f"unknown state_dtype {state_dtype!r}")
+
+
+def load_rows(x: Any) -> jax.Array:
+    """Storage representation -> fp32 compute value."""
+    if isinstance(x, QuantizedRows):
+        return dequantize_rows(x)
+    return x.astype(jnp.float32)

@@ -1,27 +1,49 @@
-"""Optimizers (pure-jax, optax-free): Adagrad (paper §5), AdamW, global-norm
-clipping, LR schedules. State is a pytree mirroring params, so it inherits
-param sharding under pjit (ZeRO-style optimizer-state sharding for free).
+"""Optimizers (pure-jax, optax-free): Adagrad (paper §5), AdamW, SM3,
+global-norm clipping, LR schedules. State is a pytree mirroring params, so
+it inherits param sharding under pjit (ZeRO-style optimizer-state sharding
+for free).
 
 Gradient pytrees may carry :class:`repro.optim.sparse.SparseRows` leaves in
 place of a ``{"w": (C, K), "b": (C,)}`` subtree (the sampled-head path,
-DESIGN.md §8). Those are applied as O(U·K) row updates — gather the touched
-rows of param + accumulator state, run the *same* per-leaf update math the
-dense path uses, scatter back — so Adagrad/SGD match the dense update
-exactly on touched rows (untouched rows have zero gradient, hence zero
-dense update) while AdamW gets the standard lazy-row treatment (momentum
-decay and weight decay are applied only when a row is touched). Global-norm
-clipping accounts for the sparse leaves' true norm (rows are deduped, so
-their sum of squares equals the dense gradient's).
+DESIGN.md §8) or a bare ``(V, K)`` table (the input-embedding gather).
+Those are applied as O(U·K) row updates — gather the touched rows of param
++ accumulator state, run the *same* per-leaf update math the dense path
+uses, scatter back.
+
+Memory-cheap head state (DESIGN.md §11):
+
+* ``sm3`` keeps one (C,) row cover + one (K,) column cover instead of a
+  full (C, K) second-moment slab (Anil et al., "Memory-Efficient Adaptive
+  Optimization"), in the *monotone-max* variant (covers never decrease) so
+  the sparse touched-rows update is exactly the dense update.
+* ``state_dtype`` ("fp32" | "bf16" | "int8") selects the *storage*
+  representation of head accumulators — compute is always fp32, conversion
+  happens only at the gather/scatter boundary (repro.optim.compression).
+  "int8" applies to first moments only; second moments always degrade to
+  bf16 (:func:`_nu_sd` — linear int8 under 1/sqrt(nu) diverges).
+* AdamW rows carry per-row ``last``-touched steps; rows idle for ``gap``
+  steps replay their missed zero-gradient updates (momentum decay, bias
+  correction, decoupled weight decay) on next touch, so lazy sparse AdamW
+  matches dense AdamW (exactly up to the replay horizon, ~1e-9 beyond).
+
+Per-leaf rules: a leaf whose path contains a component named "head" (or
+every leaf, when the params tree has no "head" component — the standalone
+linear-head case) uses ``head_name``/``state_dtype``; everything else uses
+``name`` with fp32 state.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+import math
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.optim import compression
 from repro.optim import sparse as sparse_lib
+from repro.optim.compression import QuantizedRows
 from repro.optim.sparse import SparseRows
 
 Params = Any
@@ -30,7 +52,7 @@ Grads = Any
 
 @dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
-    name: str = "adagrad"           # adagrad | adamw | sgd
+    name: str = "adagrad"           # adagrad | adamw | sgd | sm3
     learning_rate: float = 0.01
     weight_decay: float = 0.0
     beta1: float = 0.9
@@ -40,28 +62,139 @@ class OptimizerConfig:
     clip_norm: float = 0.0          # 0 = off
     warmup_steps: int = 0
     decay_steps: int = 0            # cosine decay horizon; 0 = constant
+    head_name: Optional[str] = None  # head-leaf rule override (e.g. "sm3")
+    state_dtype: str = "fp32"       # head accumulator storage: fp32|bf16|int8
+    lazy_horizon: int = 0           # adamw catch-up replay cap; 0 = auto
+
+
+class Sm3Cover(NamedTuple):
+    """Factored second moment for a (C, K) table: ν_ij ≈ min(row_i, col_j).
+
+    row: (C,) in the configured storage dtype (bf16 under bf16/int8 modes).
+    col: (K,) fp32 always — K elements are too small to be worth shrinking,
+         and the column cover is the one piece every update reads.
+    """
+    row: jax.Array
+    col: jax.Array
+
+
+_STATE_BOXES = (Sm3Cover, QuantizedRows)
+
+
+def _is_state_leaf(x) -> bool:
+    return x is None or isinstance(x, _STATE_BOXES)
 
 
 class OptState(NamedTuple):
     step: jax.Array
-    mu: Any          # 1st moment (adamw) or None
-    nu: Any          # 2nd moment / adagrad accumulator
+    mu: Any           # 1st moment (adamw) or None
+    nu: Any           # 2nd moment / adagrad accumulator / Sm3Cover leaves
+    last: Any = None  # per-row int32 last-touched step (adamw) or None
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+        else:
+            names.append(str(p))
+    return tuple(names)
+
+
+def _is_head_path(path) -> bool:
+    return "head" in _path_names(path)
+
+
+def _leaf_rules(cfg: OptimizerConfig, paths):
+    """Resolve (rule_name, state_dtype) per param leaf (module docstring)."""
+    heads = [_is_head_path(p) for p in paths]
+    any_head = any(heads)
+    out = []
+    for h in heads:
+        is_head = h or not any_head
+        out.append(((cfg.head_name or cfg.name) if is_head else cfg.name,
+                    cfg.state_dtype if is_head else "fp32"))
+    return out
+
+
+def _state_leaves(tree, n: int):
+    """Flatten a state tree into n leaves aligned with the param leaves.
+
+    State trees mirror the params *structure* but hold None / Sm3Cover /
+    QuantizedRows at leaf positions; the custom is_leaf keeps those as
+    single aligned entries instead of dropping (None) or decomposing
+    (NamedTuple boxes) them.
+    """
+    if tree is None:
+        return [None] * n
+    leaves = jax.tree.leaves(tree, is_leaf=_is_state_leaf)
+    assert len(leaves) == n, (len(leaves), n)
+    return leaves
+
+
+def _nu_sd(sd: str) -> str:
+    """Storage dtype for second moments: int8 degrades to bf16.
+
+    Linear per-row int8 zeroes every entry below rowmax/127, and nu
+    enters the update through 1/(sqrt(nu)+eps) — a zeroed entry turns a
+    tiny accumulator into a ~1/eps step and the loss diverges within
+    steps (8-bit optimizers need a nonlinear quantile map here, not a
+    linear scale). First moments enter linearly and tolerate int8, so
+    ``state_dtype="int8"`` means int8 mu + bf16 nu.
+    """
+    return "bf16" if sd == "int8" else sd
 
 
 def init_opt_state(cfg: OptimizerConfig, params: Params) -> OptState:
-    zeros = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
-    if cfg.name == "adamw":
-        return OptState(step=jnp.zeros((), jnp.int32),
-                        mu=jax.tree.map(zeros, params),
-                        nu=jax.tree.map(zeros, params))
-    if cfg.name == "adagrad":
-        return OptState(step=jnp.zeros((), jnp.int32), mu=None,
-                        nu=jax.tree.map(
-                            lambda p: jnp.full_like(
-                                p, cfg.adagrad_init, jnp.float32), params))
-    if cfg.name == "sgd":
-        return OptState(step=jnp.zeros((), jnp.int32), mu=None, nu=None)
-    raise ValueError(cfg.name)
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    rules = _leaf_rules(cfg, [p for p, _ in flat_p])
+    mu, nu, last = [], [], []
+    for (path, p), (name, sd) in zip(flat_p, rules):
+        if name == "adamw":
+            mu.append(compression.store_rows(
+                jnp.zeros(p.shape, jnp.float32), sd))
+            nu.append(compression.store_rows(
+                jnp.zeros(p.shape, jnp.float32), _nu_sd(sd)))
+            last.append(jnp.zeros(p.shape[:1], jnp.int32))
+        elif name == "adagrad":
+            mu.append(None)
+            nu.append(compression.store_rows(
+                jnp.full(p.shape, cfg.adagrad_init, jnp.float32),
+                _nu_sd(sd)))
+            last.append(None)
+        elif name == "sm3":
+            mu.append(None)
+            if p.ndim == 2:
+                nu.append(Sm3Cover(
+                    row=compression.store_rows(
+                        jnp.zeros(p.shape[:1], jnp.float32), _nu_sd(sd)),
+                    col=jnp.zeros(p.shape[1:2], jnp.float32)))
+            else:
+                # 1-D / 3-D+ leaves: SM3's per-element cover degenerates
+                # to the full Adagrad accumulator.
+                nu.append(compression.store_rows(
+                    jnp.zeros(p.shape, jnp.float32), _nu_sd(sd)))
+            last.append(None)
+        elif name == "sgd":
+            mu.append(None)
+            nu.append(None)
+            last.append(None)
+        else:
+            raise ValueError(name)
+    unflatten = jax.tree_util.tree_unflatten
+
+    def pack(leaves):
+        if all(x is None for x in leaves):
+            return None
+        return unflatten(treedef, leaves)
+
+    return OptState(step=jnp.zeros((), jnp.int32), mu=pack(mu),
+                    nu=pack(nu), last=pack(last))
 
 
 def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
@@ -76,10 +209,26 @@ def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
     return lr
 
 
+def _norm_is_leaf(x) -> bool:
+    return sparse_lib.is_sparse(x) or isinstance(x, _STATE_BOXES)
+
+
 def global_norm(grads: Grads) -> jax.Array:
-    leaves = jax.tree.leaves(grads, is_leaf=sparse_lib.is_sparse)
-    sq = [sparse_lib.sq_norm(g) if sparse_lib.is_sparse(g)
-          else jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves]
+    """fp32 global norm over dense, SparseRows, Sm3Cover, and
+    QuantizedRows leaves (quantized leaves are dequantized first, so the
+    norm is of the *values*, not the int8 payload)."""
+    leaves = jax.tree.leaves(grads, is_leaf=_norm_is_leaf)
+    sq = []
+    for g in leaves:
+        if sparse_lib.is_sparse(g):
+            sq.append(sparse_lib.sq_norm(g))
+        elif isinstance(g, QuantizedRows):
+            sq.append(jnp.sum(jnp.square(compression.dequantize_rows(g))))
+        elif isinstance(g, Sm3Cover):
+            sq.append(jnp.sum(jnp.square(g.row.astype(jnp.float32)))
+                      + jnp.sum(jnp.square(g.col.astype(jnp.float32))))
+        else:
+            sq.append(jnp.sum(jnp.square(g.astype(jnp.float32))))
     return jnp.sqrt(jnp.sum(jnp.stack(sq)))
 
 
@@ -93,73 +242,266 @@ def clip_by_global_norm(grads: Grads, max_norm: float
     return clipped, norm
 
 
-def _leaf_update(cfg: OptimizerConfig, lr, t, p, g, m, n):
+def _lazy_horizon(cfg: OptimizerConfig) -> int:
+    """Replay depth after which the momentum term is < 1e-9 of its start
+    (197 steps at beta1=0.9); beyond it the closed-form tail is applied."""
+    if cfg.lazy_horizon:
+        return int(cfg.lazy_horizon)
+    if cfg.beta1 <= 0:
+        return 0
+    return min(int(math.ceil(math.log(1e-9) / math.log(cfg.beta1))), 1024)
+
+
+def _rows(x: jax.Array, ndim: int) -> jax.Array:
+    """Broadcast a per-row vector against an ndim-rank row block."""
+    if x.ndim >= ndim:
+        return x
+    return x.reshape(x.shape + (1,) * (ndim - x.ndim))
+
+
+def _adamw_catch_up(cfg: OptimizerConfig, lr_now, t_i, p, m, v, last,
+                    live=None):
+    """Replay the AdamW steps a row missed while untouched (DESIGN.md §11).
+
+    A row idle since per-row step ``last`` missed ``gap = t-1-last``
+    updates in which its gradient was exactly zero but momentum decay,
+    bias correction, and decoupled weight decay still moved it. Replays
+    the first min(gap, horizon) missed steps per row in one fori_loop
+    whose trip count is the batch-max gap (dynamic bound — lowers to a
+    while loop), then applies the closed-form tail for any remainder: by
+    then the momentum term has decayed below 1e-9 of its starting value,
+    so only the pure decay factors (b1^extra, b2^extra, (1-lr·wd)^extra)
+    survive. Exact for gap <= horizon; the tail additionally assumes a
+    constant LR over the skipped range.
+
+    p/m/v fp32 (any rank); ``last`` int32 aligned to axis 0; ``live``
+    optionally masks rows out of the replay (sharded non-owned rows).
+    Returns (p, m, v) caught up to step t_i - 1.
+    """
+    h = _lazy_horizon(cfg)
+    gap = jnp.maximum(t_i - 1 - last, 0)
+    if live is not None:
+        gap = jnp.where(live, gap, 0)
+    nd = p.ndim
+
+    if h > 0:
+        def body(j, carry):
+            p, m, v = carry
+            s = (last + 1 + j).astype(jnp.float32)  # absolute step, per row
+            on = _rows(j < gap, nd)
+            m2 = cfg.beta1 * m
+            v2 = cfg.beta2 * v
+            bc1 = _rows(1.0 - cfg.beta1 ** s, nd)
+            bc2 = _rows(1.0 - cfg.beta2 ** s, nd)
+            d = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+            lr_s = _rows(schedule(cfg, s - 1.0), nd)
+            p2 = p - lr_s * (d + cfg.weight_decay * p)
+            return (jnp.where(on, p2, p), jnp.where(on, m2, m),
+                    jnp.where(on, v2, v))
+
+        n_replay = jnp.minimum(jnp.max(gap), h)
+        p, m, v = jax.lax.fori_loop(0, n_replay, body, (p, m, v))
+
+    extra = _rows(jnp.maximum(gap - h, 0).astype(jnp.float32), nd)
+    m = m * cfg.beta1 ** extra
+    v = v * cfg.beta2 ** extra
+    p = p * (1.0 - lr_now * cfg.weight_decay) ** extra
+    return p, m, v
+
+
+def _leaf_update(cfg: OptimizerConfig, name: str, lr, t, p, g, m, n):
     """The per-leaf update rule, shared verbatim by the dense path (whole
-    arrays) and the sparse path (gathered rows): returns (p', m', n')."""
+    arrays) and the sparse path (gathered rows): returns (p', m', n').
+    m/n are fp32 compute values (already dequantized); "sm3" here is the
+    non-factored degenerate case (1-D / 3-D+ leaves) == Adagrad."""
     g32 = g.astype(jnp.float32)
-    if cfg.name == "adagrad":
+    if name in ("adagrad", "sm3"):
         n2 = n + jnp.square(g32)
         u = -lr * g32 / (jnp.sqrt(n2) + cfg.eps)
         m2 = None
-    elif cfg.name == "adamw":
+    elif name == "adamw":
         m2 = cfg.beta1 * m + (1 - cfg.beta1) * g32
         n2 = cfg.beta2 * n + (1 - cfg.beta2) * jnp.square(g32)
         bc1 = 1.0 - cfg.beta1 ** t
         bc2 = 1.0 - cfg.beta2 ** t
         u = -lr * ((m2 / bc1) / (jnp.sqrt(n2 / bc2) + cfg.eps)
                    + cfg.weight_decay * p.astype(jnp.float32))
-    elif cfg.name == "sgd":
+    elif name == "sgd":
         u = -lr * g32
         m2 = n2 = None
     else:
-        raise ValueError(cfg.name)
+        raise ValueError(name)
     return (p.astype(jnp.float32) + u).astype(p.dtype), m2, n2
 
 
-def _sparse_node_update(cfg: OptimizerConfig, lr, t, sparse: SparseRows,
-                        leaves, moments_m, moments_n, mesh=None):
-    """O(U·K) row update for the {w, b} pair touched by a SparseRows grad.
+def _sm3_dense_update(cfg: OptimizerConfig, lr, p, g, cover: Sm3Cover,
+                      sd: str):
+    """Dense SM3 on a (C, K) table. ν'_ij = min(row_i, col_j) + g²_ij;
+    covers take the monotone max with their previous value, which keeps
+    them valid upper bounds and makes the sparse path exact (untouched
+    rows have ν' <= row_i everywhere, so their cover cannot move)."""
+    g32 = g.astype(jnp.float32)
+    r = compression.load_rows(cover.row)
+    c = cover.col
+    nu = jnp.minimum(r[:, None], c[None, :]) + jnp.square(g32)
+    u = -lr * g32 / (jnp.sqrt(nu) + cfg.eps)
+    p2 = (p.astype(jnp.float32) + u).astype(p.dtype)
+    r2 = jnp.maximum(r, nu.max(axis=1))
+    c2 = jnp.maximum(c, nu.max(axis=0))
+    return p2, Sm3Cover(row=compression.store_rows(r2, _nu_sd(sd)), col=c2)
 
-    One gather → :func:`_leaf_update` on the rows → one scatter, covering
-    BOTH leaves and their accumulators in a single pass (under a mesh,
-    a single shard_map — repro.parallel.collectives.sharded_rows_update,
-    shard-local, no all-gather). Sentinel ids (== C, the dedupe fill)
+
+def _sparse_node_update(cfg: OptimizerConfig, name: str, sd: str, lr,
+                        t_f, t_i, sparse: SparseRows, leaves, ms, ns,
+                        lasts, mesh=None):
+    """O(U·K) row update for the leaves touched by a SparseRows grad.
+
+    Generalized over 1-leaf (embedding table, db=None) and 2-leaf (head
+    {w, b}) nodes and over plain / factored (Sm3Cover) / quantized
+    (QuantizedRows) accumulator storage, plus per-row ``last`` bookkeeping
+    for the exact lazy-AdamW catch-up. One gather → row math → one
+    scatter covers params AND all their state in a single pass (under a
+    mesh, a single shard_map — sharded_rows_update, shard-local). Row-
+    indexed state (accumulators, quantized payload + per-row scale, SM3
+    row cover, ``last``) rides the gather/scatter; the SM3 *column* cover
+    is replicated and recombined by max (its update is a monotone max, so
+    a pmax over shards is exact). Sentinel ids (== C, the dedupe fill)
     clamp on the gather and drop on the scatter; their coefficients are
-    zero so they never contaminate state. ``leaves``/``moments_*`` are
-    (w_like, b_like) pairs; moment entries are None when the optimizer
-    has no such state. Returns (new_leaves, new_m, new_n) pairs.
+    zero, and a clamped row's ν' = min(row, col) <= col can never raise
+    the column cover. Returns (new_p, new_m, new_n, new_last) lists.
     """
-    vals = (sparse.dw, sparse.db)
+    vals = (sparse.dw,) if len(leaves) == 1 else (sparse.dw, sparse.db)
+    assert all(v is not None for v in vals), "missing sparse component"
 
-    def row_math(rows, vals_l):
-        # rows order: [p for each leaf] + [m ...] + [n ...] (None-skipped).
+    # Decompose per-leaf state into row-indexed arrays (gather/scatter)
+    # and replicated arrays (SM3 col covers), with a python-side spec so
+    # row_math can re-walk the same order inside shard_map.
+    dense, reps, spec = [], [], []
+    for p, m, n, l in zip(leaves, ms, ns, lasts):
+        ent = {}
+        dense.append(p)
+        if isinstance(m, QuantizedRows):
+            ent["m"] = "q"
+            dense += [m.q, m.scale]
+        elif m is not None:
+            ent["m"] = "arr"
+            dense.append(m)
+        else:
+            ent["m"] = None
+        if isinstance(n, Sm3Cover):
+            ent["n"] = "sm3"
+            dense.append(n.row)
+            reps.append(n.col)
+        elif isinstance(n, QuantizedRows):
+            ent["n"] = "q"
+            dense += [n.q, n.scale]
+        elif n is not None:
+            ent["n"] = "arr"
+            dense.append(n)
+        else:
+            ent["n"] = None
+        ent["last"] = l is not None
+        if l is not None:
+            dense.append(l)
+        spec.append(ent)
+
+    def row_math(rows, vals_l, reps_in, mine):
         rows = list(rows)
-        p_r = [rows.pop(0) for _ in leaves]
-        m_r = [rows.pop(0) if m is not None else None for m in moments_m]
-        n_r = [rows.pop(0) if n is not None else None for n in moments_n]
-        out = [_leaf_update(cfg, lr, t, p, v, m, n)
-               for p, v, m, n in zip(p_r, vals_l, m_r, n_r)]
-        return tuple(x for group in zip(*out) for x in group
-                     if x is not None)
+        reps_in = list(reps_in)
+        out_rows, out_reps = [], []
+        for ent, v in zip(spec, vals_l):
+            p_r = rows.pop(0)
+            if ent["m"] == "q":
+                mq, msc = rows.pop(0), rows.pop(0)
+                m_r = mq.astype(jnp.float32) * _rows(msc, mq.ndim)
+            elif ent["m"] == "arr":
+                m_r = rows.pop(0).astype(jnp.float32)
+            else:
+                m_r = None
+            n_r = c_full = None
+            if ent["n"] == "sm3":
+                r_r = rows.pop(0).astype(jnp.float32)
+                c_full = reps_in.pop(0)
+            elif ent["n"] == "q":
+                nq, nsc = rows.pop(0), rows.pop(0)
+                n_r = nq.astype(jnp.float32) * _rows(nsc, nq.ndim)
+            elif ent["n"] == "arr":
+                n_r = rows.pop(0).astype(jnp.float32)
+            else:
+                pass
+            l_r = rows.pop(0) if ent["last"] else None
 
-    dense = ([p for p in leaves]
-             + [m for m in moments_m if m is not None]
-             + [n for n in moments_n if n is not None])
+            g32 = v.astype(jnp.float32)
+            if ent["n"] == "sm3":
+                nu_f = (jnp.minimum(r_r[:, None], c_full[None, :])
+                        + jnp.square(g32))
+                u = -lr * g32 / (jnp.sqrt(nu_f) + cfg.eps)
+                out_rows.append(p_r.astype(jnp.float32) + u)
+                out_rows.append(jnp.maximum(r_r, nu_f.max(axis=1)))
+                contrib = (nu_f if mine is None
+                           else jnp.where(_rows(mine, nu_f.ndim), nu_f,
+                                          0.0))
+                out_reps.append(jnp.maximum(c_full, contrib.max(axis=0)))
+                continue
+
+            p32 = p_r.astype(jnp.float32)
+            if name == "adamw" and l_r is not None:
+                p32, m_r, n_r = _adamw_catch_up(
+                    cfg, lr, t_i, p32, m_r, n_r, l_r, live=mine)
+            p2, m2, n2 = _leaf_update(cfg, name, lr, t_f, p32, g32, m_r,
+                                      n_r)
+            out_rows.append(p2)
+            if ent["m"] == "q":
+                qm = compression.quantize_rows(m2)
+                out_rows += [qm.q, qm.scale]
+            elif ent["m"] == "arr":
+                out_rows.append(m2)
+            if ent["n"] == "q":
+                qn = compression.quantize_rows(n2)
+                out_rows += [qn.q, qn.scale]
+            elif ent["n"] == "arr":
+                out_rows.append(n2)
+            if ent["last"]:
+                out_rows.append(jnp.full_like(l_r, t_i))
+        return tuple(out_rows), tuple(out_reps)
+
     tp = mesh.shape["model"] if mesh is not None else 1
     if mesh is not None and all(d.shape[0] % tp == 0 for d in dense):
         from repro.parallel.collectives import sharded_rows_update
-        out = sharded_rows_update(mesh, row_math, sparse.ids, vals, dense)
+        out_rows, out_reps = sharded_rows_update(
+            mesh, row_math, sparse.ids, vals, dense, rep_arrays=reps,
+            with_mask=True)
     else:
         rows = tuple(d[sparse.ids] for d in dense)
-        new_rows = row_math(rows, vals)
-        out = tuple(d.at[sparse.ids].set(r.astype(d.dtype), mode="drop")
-                    for d, r in zip(dense, new_rows))
+        new_rows, out_reps = row_math(rows, vals, tuple(reps), None)
+        out_rows = tuple(
+            d.at[sparse.ids].set(r.astype(d.dtype), mode="drop")
+            for d, r in zip(dense, new_rows))
 
-    out = list(out)
-    new_p = [out.pop(0) for _ in leaves]
-    new_m = [out.pop(0) if m is not None else None for m in moments_m]
-    new_n = [out.pop(0) if n is not None else None for n in moments_n]
-    return new_p, new_m, new_n
+    out_rows = list(out_rows)
+    out_reps = list(out_reps)
+    new_p, new_m, new_n, new_l = [], [], [], []
+    for ent in spec:
+        new_p.append(out_rows.pop(0))
+        if ent["m"] == "q":
+            new_m.append(QuantizedRows(q=out_rows.pop(0),
+                                       scale=out_rows.pop(0)))
+        elif ent["m"] == "arr":
+            new_m.append(out_rows.pop(0))
+        else:
+            new_m.append(None)
+        if ent["n"] == "sm3":
+            new_n.append(Sm3Cover(row=out_rows.pop(0),
+                                  col=out_reps.pop(0)))
+        elif ent["n"] == "q":
+            new_n.append(QuantizedRows(q=out_rows.pop(0),
+                                       scale=out_rows.pop(0)))
+        elif ent["n"] == "arr":
+            new_n.append(out_rows.pop(0))
+        else:
+            new_n.append(None)
+        new_l.append(out_rows.pop(0) if ent["last"] else None)
+    return new_p, new_m, new_n, new_l
 
 
 def apply_updates(cfg: OptimizerConfig, params: Params, grads: Grads,
@@ -168,8 +510,9 @@ def apply_updates(cfg: OptimizerConfig, params: Params, grads: Grads,
     """One optimizer step. Returns (params, state, metrics).
 
     ``grads`` may carry SparseRows leaves in place of a {"w", "b"} param
-    subtree (see module docstring); ``mesh`` routes their row updates
-    shard-local when the touched table is vocab-sharded over 'model'.
+    subtree or a bare row table (see module docstring); ``mesh`` routes
+    their row updates shard-local when the touched table is vocab-sharded
+    over 'model'.
     """
     metrics = {}
     if cfg.clip_norm:
@@ -177,56 +520,129 @@ def apply_updates(cfg: OptimizerConfig, params: Params, grads: Grads,
         metrics["grad_norm"] = norm
     lr = schedule(cfg, state.step)
     metrics["lr"] = lr
-    t = (state.step + 1).astype(jnp.float32)
+    t_f = (state.step + 1).astype(jnp.float32)
+    t_i = (state.step + 1).astype(jnp.int32)
 
     flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
     flat_g = jax.tree_util.tree_flatten_with_path(
         grads, is_leaf=sparse_lib.is_sparse)[0]
-    # mu/nu mirror params exactly, so index i lines up across all three.
-    flat_m = (jax.tree.leaves(state.mu) if state.mu is not None
-              else [None] * len(flat_p))
-    flat_n = (jax.tree.leaves(state.nu) if state.nu is not None
-              else [None] * len(flat_p))
+    n_leaves = len(flat_p)
+    flat_m = _state_leaves(state.mu, n_leaves)
+    flat_n = _state_leaves(state.nu, n_leaves)
+    flat_l = _state_leaves(state.last, n_leaves)
+    rules = _leaf_rules(cfg, [p for p, _ in flat_p])
     idx_of = {path: i for i, (path, _) in enumerate(flat_p)}
 
     new_p = [leaf for _, leaf in flat_p]
-    new_m = list(flat_m)
-    new_n = list(flat_n)
+    new_m, new_n, new_l = list(flat_m), list(flat_n), list(flat_l)
     covered = set()
     for path, g in flat_g:
         if not sparse_lib.is_sparse(g):
             i = idx_of[path]
-            new_p[i], new_m[i], new_n[i] = _leaf_update(
-                cfg, lr, t, flat_p[i][1], g, flat_m[i], flat_n[i])
+            name, sd = rules[i]
+            p_leaf = flat_p[i][1]
+            if isinstance(flat_n[i], Sm3Cover):
+                new_p[i], new_n[i] = _sm3_dense_update(
+                    cfg, lr, p_leaf, g, flat_n[i], sd)
+            else:
+                m32 = (compression.load_rows(flat_m[i])
+                       if flat_m[i] is not None else None)
+                n32 = (compression.load_rows(flat_n[i])
+                       if flat_n[i] is not None else None)
+                p_in = p_leaf
+                if name == "adamw" and flat_l[i] is not None:
+                    p32, m32, n32 = _adamw_catch_up(
+                        cfg, lr, t_i, p_leaf.astype(jnp.float32), m32,
+                        n32, flat_l[i])
+                    p_in = p32
+                p2, m2, n2 = _leaf_update(cfg, name, lr, t_f, p_in, g,
+                                          m32, n32)
+                new_p[i] = p2.astype(p_leaf.dtype)
+                if m2 is not None:
+                    new_m[i] = compression.store_rows(m2, sd)
+                if n2 is not None:
+                    new_n[i] = compression.store_rows(n2, _nu_sd(sd))
+                if flat_l[i] is not None:
+                    new_l[i] = jnp.full_like(flat_l[i], t_i)
             covered.add(i)
             continue
-        # SparseRows stands in for a {"w": (C, K), "b": (C,)} subtree:
-        # locate its two dense leaves by path prefix, match by rank.
+        # SparseRows stands in for a {"w": (C, K), "b": (C,)} subtree
+        # (2 dense leaves, matched by rank) or a bare row table (1 leaf,
+        # db=None): locate by path prefix.
         sub = [idx_of[p2] for p2, _ in flat_p if p2[:len(path)] == path]
-        assert len(sub) == 2, (path, sub)
-        i_w, i_b = ((sub[0], sub[1]) if flat_p[sub[0]][1].ndim == 2
-                    else (sub[1], sub[0]))
-        p2, m2, n2 = _sparse_node_update(
-            cfg, lr, t, g,
-            (flat_p[i_w][1], flat_p[i_b][1]),
-            (flat_m[i_w], flat_m[i_b]), (flat_n[i_w], flat_n[i_b]),
-            mesh=mesh)
-        for j, i in enumerate((i_w, i_b)):
+        if len(sub) == 2:
+            i_w, i_b = ((sub[0], sub[1]) if flat_p[sub[0]][1].ndim == 2
+                        else (sub[1], sub[0]))
+            idxs = (i_w, i_b)
+        else:
+            assert len(sub) == 1 and g.db is None, (path, sub)
+            idxs = (sub[0],)
+        name, sd = rules[idxs[0]]
+        p2, m2, n2, l2 = _sparse_node_update(
+            cfg, name, sd, lr, t_f, t_i, g,
+            tuple(flat_p[i][1] for i in idxs),
+            tuple(flat_m[i] for i in idxs),
+            tuple(flat_n[i] for i in idxs),
+            tuple(flat_l[i] for i in idxs), mesh=mesh)
+        for j, i in enumerate(idxs):
             new_p[i], new_m[i], new_n[i] = p2[j], m2[j], n2[j]
+            new_l[i] = l2[j]
             covered.add(i)
     # Fail loud on a partial gradient tree (the pre-rewrite tree.map
     # raised on structure mismatch; silently frozen params would train
     # on with no error).
-    if len(covered) != len(flat_p):
-        missing = [flat_p[i][0] for i in range(len(flat_p))
+    if len(covered) != n_leaves:
+        missing = [flat_p[i][0] for i in range(n_leaves)
                    if i not in covered]
-        raise ValueError(f"grads cover {len(covered)}/{len(flat_p)} "
+        raise ValueError(f"grads cover {len(covered)}/{n_leaves} "
                          f"param leaves; missing {missing[:5]}")
 
     unflatten = jax.tree_util.tree_unflatten
-    mu = (unflatten(jax.tree.structure(state.mu), new_m)
-          if state.mu is not None else None)
-    nu = (unflatten(jax.tree.structure(state.nu), new_n)
-          if state.nu is not None else None)
-    new_state = OptState(step=state.step + 1, mu=mu, nu=nu)
+
+    def pack(leaves, old):
+        if old is None and all(x is None for x in leaves):
+            return None
+        return unflatten(treedef, leaves)
+
+    new_state = OptState(step=state.step + 1,
+                         mu=pack(new_m, state.mu),
+                         nu=pack(new_n, state.nu),
+                         last=pack(new_l, state.last))
     return unflatten(treedef, new_p), new_state, metrics
+
+
+def _leaf_nbytes(x) -> int:
+    """Payload bytes of a state/param leaf (boxes count their components;
+    works on concrete arrays and ShapeDtypeStructs alike)."""
+    if x is None:
+        return 0
+    if isinstance(x, _STATE_BOXES):
+        return sum(_leaf_nbytes(c) for c in x)
+    return int(np.prod(x.shape)) * np.dtype(jnp.dtype(x.dtype)).itemsize
+
+
+def tree_nbytes(tree) -> int:
+    """Total payload bytes of a pytree (None leaves free, boxes counted
+    by their actual storage — int8 payload + fp32 scales, not fp32)."""
+    leaves = jax.tree.leaves(tree, is_leaf=_is_state_leaf)
+    return sum(_leaf_nbytes(x) for x in leaves)
+
+
+def head_state_bytes(params: Params, state: Optional[OptState]) -> int:
+    """Bytes held by head param + optimizer leaves (the ISSUE's
+    ``train/head_state_bytes`` gauge): param storage plus mu/nu/last in
+    their storage representation. Host-side helper (returns int)."""
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(params)
+    heads = [_is_head_path(p) for p, _ in flat_p]
+    any_head = any(heads)
+    n = len(flat_p)
+    flat_m = _state_leaves(state.mu, n) if state is not None else [None] * n
+    flat_n = _state_leaves(state.nu, n) if state is not None else [None] * n
+    flat_l = (_state_leaves(state.last, n) if state is not None
+              else [None] * n)
+    total = 0
+    for i, ((path, p), h) in enumerate(zip(flat_p, heads)):
+        if h or not any_head:
+            total += (_leaf_nbytes(p) + _leaf_nbytes(flat_m[i])
+                      + _leaf_nbytes(flat_n[i]) + _leaf_nbytes(flat_l[i]))
+    return total

@@ -20,22 +20,23 @@ Invariants:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
 class SparseRows(NamedTuple):
-    """Sparse head gradient: ``dL/dw[ids] = dw``, ``dL/db[ids] = db``.
+    """Sparse row gradient: ``dL/dw[ids] = dw``, ``dL/db[ids] = db``.
 
     ids: (U,) int32, unique; sentinel ``num_rows`` marks dead slots.
     dw:  (U, K) fp32 row gradients (zero on dead slots).
-    db:  (U,)   fp32 bias gradients (zero on dead slots).
+    db:  (U,)   fp32 bias gradients (zero on dead slots), or None when
+         the table has no bias vector (the input-embedding gather).
     """
     ids: jax.Array
     dw: jax.Array
-    db: jax.Array
+    db: Optional[jax.Array] = None
 
     @property
     def num_rows_hint(self) -> int:
@@ -72,12 +73,32 @@ def accumulate_rows(ids: jax.Array, coeff: jax.Array, h: jax.Array,
     return SparseRows(ids=uniq.astype(jnp.int32), dw=dw, db=db)
 
 
+def accumulate_embed_rows(ids: jax.Array, dh: jax.Array,
+                          num_rows: int) -> SparseRows:
+    """Dedupe per-occurrence embedding cotangents into per-row sums.
+
+    The input-embedding gather ``h0 = embed[tokens]`` backprops as a
+    scatter-add of the cotangent rows ``dh`` into the touched token rows —
+    the same shape of computation as the head, minus the bias and the
+    rank-1 structure. ids: (T,) int32 token ids (duplicates allowed);
+    dh: (T, K) cotangent rows. Returns a bias-free SparseRows (db=None).
+    """
+    t = ids.shape[0]
+    uniq, inv = jnp.unique(ids.astype(jnp.int32), size=t,
+                           fill_value=num_rows, return_inverse=True)
+    inv = inv.reshape(-1)
+    dw = jax.ops.segment_sum(dh.astype(jnp.float32), inv, num_segments=t)
+    return SparseRows(ids=uniq.astype(jnp.int32), dw=dw, db=None)
+
+
 def to_dense(sparse: SparseRows, w_shape: Tuple[int, ...]
-             ) -> Tuple[jax.Array, jax.Array]:
+             ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Materialize the (C, K) / (C,) dense gradients (tests/fallbacks)."""
     c = w_shape[0]
     dw = jnp.zeros(w_shape, jnp.float32).at[sparse.ids].add(
         sparse.dw, mode="drop")
+    if sparse.db is None:
+        return dw, None
     db = jnp.zeros((c,), jnp.float32).at[sparse.ids].add(
         sparse.db, mode="drop")
     return dw, db
@@ -85,9 +106,12 @@ def to_dense(sparse: SparseRows, w_shape: Tuple[int, ...]
 
 def sq_norm(sparse: SparseRows) -> jax.Array:
     """Sum of squares == the dense gradient's (rows are deduped)."""
-    return (jnp.sum(jnp.square(sparse.dw))
-            + jnp.sum(jnp.square(sparse.db)))
+    sq = jnp.sum(jnp.square(sparse.dw))
+    if sparse.db is not None:
+        sq = sq + jnp.sum(jnp.square(sparse.db))
+    return sq
 
 
 def scale(sparse: SparseRows, s: jax.Array) -> SparseRows:
-    return SparseRows(ids=sparse.ids, dw=sparse.dw * s, db=sparse.db * s)
+    return SparseRows(ids=sparse.ids, dw=sparse.dw * s,
+                      db=None if sparse.db is None else sparse.db * s)

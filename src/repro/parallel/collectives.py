@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.parallel.compat import shard_map
+from repro.parallel.compat import shard_map, shard_map_norep
 from repro.parallel.sharding import mesh_axes
 
 
@@ -60,7 +60,8 @@ def sharded_candidate_scores(mesh: Mesh, w, b, h, ids):
         out_specs=P(*([None] * ids.ndim)))(w, b, h, ids)
 
 
-def sharded_rows_update(mesh: Mesh, fn, ids, vals, dense_arrays):
+def sharded_rows_update(mesh: Mesh, fn, ids, vals, dense_arrays,
+                        rep_arrays=(), with_mask: bool = False):
     """Row-local transform of vocab-sharded arrays at sampled ``ids``.
 
     dense_arrays: sequence of (V, ...) arrays sharded over 'model' on dim 0
@@ -75,39 +76,71 @@ def sharded_rows_update(mesh: Mesh, fn, ids, vals, dense_arrays):
     ``fn``, and scatters back — O(U·K) work per shard and zero collective
     traffic: non-owned and sentinel ids clamp on the gather and drop on
     the scatter.
+
+    rep_arrays / with_mask extend the contract for factored state (the
+    SM3 column cover, DESIGN.md §11): ``rep_arrays`` are small replicated
+    arrays passed whole to ``fn``, whose updated values are recombined
+    across shards with a pmax — exact because the cover update is a
+    monotone max. When either is used, ``fn`` is called as
+    ``fn(rows, vals, reps, mine) -> (new_rows, new_reps)`` where ``mine``
+    is the (U,) ownership mask: non-owned ids gather clamped *garbage*
+    rows carrying real gradient values, and fn must exclude them from any
+    cross-row reduction (their row scatters are dropped regardless).
     """
     dp_axes, model = mesh_axes(mesh)
     n_shards = mesh.shape[model]
     n_vals = len(vals)
+    n_dense = len(dense_arrays)
+    extended = with_mask or rep_arrays
     for d in dense_arrays:
         assert d.shape[0] % n_shards == 0, (d.shape, n_shards)
 
     def local(ids_l, *rest):
-        vals_l, dense_l = rest[:n_vals], rest[n_vals:]
+        vals_l = rest[:n_vals]
+        dense_l = rest[n_vals:n_vals + n_dense]
+        reps_l = rest[n_vals + n_dense:]
         me = jax.lax.axis_index(model)
-        out = []
         rows, shard_rows = [], []
+        mine_any = None
         for d in dense_l:
             n_rows = d.shape[0]
             loc = ids_l - me * n_rows
             safe = jnp.clip(loc, 0, n_rows - 1)
             rows.append(d[safe])
             shard_rows.append((loc, n_rows))
-        new_rows = fn(tuple(rows), tuple(vals_l))
+            if mine_any is None:
+                mine_any = (loc >= 0) & (loc < n_rows)
+        if extended:
+            new_rows, new_reps = fn(tuple(rows), tuple(vals_l),
+                                    tuple(reps_l), mine_any)
+            new_reps = tuple(jax.lax.pmax(r, model) for r in new_reps)
+        else:
+            new_rows = fn(tuple(rows), tuple(vals_l))
+            new_reps = ()
+        out = []
         for d, r, (loc, n_rows) in zip(dense_l, new_rows, shard_rows):
             mine = (loc >= 0) & (loc < n_rows)
             tgt = jnp.where(mine, jnp.clip(loc, 0, n_rows - 1),
                             n_rows)                  # non-mine -> dropped
             out.append(d.at[tgt].set(r.astype(d.dtype), mode="drop"))
-        return tuple(out)
+        return tuple(out) + new_reps
 
     rep = lambda a: P(*([None] * a.ndim))            # noqa: E731
     dense_spec = tuple(P(model, *([None] * (d.ndim - 1)))
                        for d in dense_arrays)
-    return shard_map(
+    rep_spec = tuple(rep(a) for a in rep_arrays)
+    # norep: the lazy-AdamW catch-up replay (DESIGN.md §11) is a fori_loop,
+    # and `while` has no shard_map replication rule. Replication still
+    # holds by construction: rows carry the model axis, reps are pmax'd.
+    out = shard_map_norep(
         local, mesh=mesh,
-        in_specs=(rep(ids),) + tuple(rep(v) for v in vals) + dense_spec,
-        out_specs=dense_spec)(ids, *vals, *dense_arrays)
+        in_specs=(rep(ids),) + tuple(rep(v) for v in vals) + dense_spec
+        + rep_spec,
+        out_specs=dense_spec + rep_spec)(
+        ids, *vals, *dense_arrays, *rep_arrays)
+    if extended:
+        return out[:n_dense], out[n_dense:]
+    return out
 
 
 def compressed_grad_allreduce(mesh: Mesh, grads_stacked: Any, ef_stacked):

@@ -34,6 +34,27 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 
+_SHARD_MAP_REP_KWARG = next(
+    (k for k in ("check_rep", "check_vma")
+     if k in inspect.signature(shard_map).parameters), None)
+
+
+def shard_map_norep(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking disabled.
+
+    Control flow inside the mapped body (``lax.fori_loop`` — a ``while``
+    HLO) has no replication rule, so bodies containing it can only run
+    with the check off (the workaround jax itself names in the error).
+    The kwarg was renamed ``check_rep`` -> ``check_vma`` across jax
+    releases; forward whichever the installed jax understands.
+    """
+    kwargs = {}
+    if _SHARD_MAP_REP_KWARG is not None:
+        kwargs[_SHARD_MAP_REP_KWARG] = False
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kwargs)
+
+
 _MAKE_MESH_TAKES_AXIS_TYPES = (
     "axis_types" in inspect.signature(jax.make_mesh).parameters)
 

@@ -208,25 +208,64 @@ def paged_cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_abstract: Any,
     return tree_map_with_path(spec, cache_abstract)
 
 
+def _state_leaf_sharding(mesh: Mesh, p_spec: P, s) -> Any:
+    """Sharding for one optimizer-state leaf given its param's spec.
+
+    Moment leaves are no longer exact shape mirrors of their param
+    (DESIGN.md §11): an SM3 cover keeps a (C,) row + (K,) col vector, a
+    QuantizedRows box keeps an int8 payload + (C,) scale, lazy-AdamW adds
+    a (C,) int32 ``last`` vector. Row-indexed pieces take the param's
+    dim-0 axis; the SM3 column cover is replicated (it is K elements and
+    recombined by pmax); full-shape pieces mirror the param spec.
+    """
+    from repro.optim.compression import QuantizedRows
+    from repro.optim.optimizers import Sm3Cover
+
+    row_spec = P(p_spec[0]) if len(p_spec) else P()
+    if s is None:
+        return None
+    if isinstance(s, Sm3Cover):
+        return Sm3Cover(row=NamedSharding(mesh, row_spec),
+                        col=NamedSharding(mesh, P(None)))
+    if isinstance(s, QuantizedRows):
+        return QuantizedRows(q=NamedSharding(mesh, p_spec),
+                             scale=NamedSharding(mesh, row_spec))
+    if s.ndim == 0:
+        return NamedSharding(mesh, P())
+    if s.ndim == 1 and len(p_spec) >= 1:
+        return NamedSharding(mesh, row_spec)
+    return NamedSharding(mesh, p_spec)
+
+
 def train_state_shardings(cfg: ModelConfig, mesh: Mesh, state_abstract):
-    """TrainState sharding: params rules; opt state mirrors params; head
-    generator state replicated (it is small and read-everywhere)."""
+    """TrainState sharding: params rules; opt state mirrors params
+    (row-indexed factored/quantized leaves follow the param's dim-0 axis,
+    see :func:`_state_leaf_sharding`); head generator state replicated
+    (it is small and read-everywhere)."""
+    from repro.optim.optimizers import _is_state_leaf, _state_leaves
     from repro.train.state import TrainState
 
     p_sh = params_shardings(cfg, mesh, state_abstract.params)
-    opt_sh = jax.tree.map(
-        lambda _: None, state_abstract.opt_state)
 
     def opt_mirror(opt_abs):
-        # mu/nu mirror the param tree; step is a scalar.
-        def map_moment(m):
-            if m is None:
+        flat_p, treedef = jax.tree_util.tree_flatten_with_path(
+            state_abstract.params)
+        specs = [param_spec(cfg, mesh, path, leaf) for path, leaf in flat_p]
+        n = len(flat_p)
+
+        def map_state_tree(tree):
+            if tree is None:
                 return None
-            return params_shardings(cfg, mesh, m)
+            leaves = _state_leaves(tree, n)
+            return jax.tree_util.tree_unflatten(
+                treedef, [_state_leaf_sharding(mesh, sp, s)
+                          for sp, s in zip(specs, leaves)])
+
         return type(opt_abs)(
             step=NamedSharding(mesh, P()),
-            mu=map_moment(opt_abs.mu),
-            nu=map_moment(opt_abs.nu))
+            mu=map_state_tree(opt_abs.mu),
+            nu=map_state_tree(opt_abs.nu),
+            last=map_state_tree(getattr(opt_abs, "last", None)))
 
     return TrainState(
         step=NamedSharding(mesh, P()),

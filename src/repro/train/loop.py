@@ -45,8 +45,28 @@ from repro.genfit.refresh import (AsyncRefresher, drop_snapshot,
                                   snapshot_path_exists, swap_event)
 from repro.obs import NULL_REGISTRY, JsonlExporter, ProfileWindow, Registry
 from repro.obs.trace import span
+from repro.optim import head_state_bytes
 from repro.train.state import TrainState, snr_reset_pair
 from repro.train.step import publish_step_metrics
+
+
+def _fit_snapshot(state: TrainState) -> TrainState:
+    """Deep-copy the leaves a background generator fit reads.
+
+    With buffer donation on, the training step *invalidates* the state
+    buffers it consumes — a background fit still reading them would race
+    (or crash, on backends that actually unmap donated buffers). The old
+    escape hatch disabled donation under --gen-async, which reintroduced
+    the (C, K) scatter-copy every step (1.3 s/step at C=2M per
+    BENCH_heads). Snapshot-then-donate inverts the cost: one copy of the
+    fit's inputs per *refresh submit* (rare), donation stays on for every
+    step. gen_fit_fn receives only (params, head_state, gen_fit_step)
+    derived data, so only those leaves are copied.
+    """
+    return state._replace(
+        params=jax.tree.map(jnp.copy, state.params),
+        head_state=jax.tree.map(jnp.copy, state.head_state),
+        gen_fit_step=jnp.copy(state.gen_fit_step))
 
 
 @dataclasses.dataclass
@@ -223,16 +243,26 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
             # the persisted submit-time snapshot. The fit is deterministic
             # in (state, config), so the swap installs bit-identical
             # parameters at the recorded step.
-            snap_state = state
             if (cfg.checkpoint_dir
                     and snapshot_path_exists(cfg.checkpoint_dir, s_sub)):
                 snap = load_snapshot(cfg.checkpoint_dir, s_sub,
                                      state.as_pytree())
-                snap_state = TrainState(**snap)
+                snap_state = TrainState(**snap)   # disk copy: not aliased
+            else:
+                snap_state = _fit_snapshot(state)
             refresher.submit(snap_state, s_sub)
             pending_swap = s_sub + cfg.gen_swap_delay
             registry.counter("genfit/submits").inc()
             emit({"event": "gen_submit", "step": s_sub, "resumed": True})
+
+    # Head param + optimizer-state footprint (DESIGN.md §11): a static
+    # function of shapes/dtypes, computed once and republished as a gauge
+    # with every step sample.
+    try:
+        hs_bytes: Optional[int] = head_state_bytes(state.params,
+                                                   state.opt_state)
+    except Exception:
+        hs_bytes = None     # exotic state trees: skip the gauge, not the run
 
     # Consumed gensnap artifacts are dropped only once a *durable*
     # checkpoint from beyond their swap step exists: a resume always loads
@@ -320,7 +350,7 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                     if cfg.checkpoint_dir:
                         save_snapshot(cfg.checkpoint_dir, step,
                                       state.as_pytree())
-                    refresher.submit(state, step)
+                    refresher.submit(_fit_snapshot(state), step)
                     pending_swap = step + cfg.gen_swap_delay
                     history.setdefault("gen_submit_steps", []).append(step)
                     registry.counter("genfit/submits").inc()
@@ -386,7 +416,8 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                       for k, v in jax.device_get(metrics).items()}
             snr_ref = (float(jax.device_get(state.snr_ref))
                        if "snr_ewma" in host_m else None)
-            publish_step_metrics(registry, host_m, snr_ref=snr_ref)
+            publish_step_metrics(registry, host_m, snr_ref=snr_ref,
+                                 head_state_bytes=hs_bytes)
             if sample_due:
                 ev = {"event": "step", "step": step, "loss": loss,
                       "step_time_s": dt, "straggler": slow}

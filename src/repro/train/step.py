@@ -19,6 +19,7 @@ from repro.core.heads import (HeadConfig, HeadParams,
 from repro.models import lm_head, transformer
 from repro.models.config import ModelConfig
 from repro.optim import OptimizerConfig, apply_updates, init_opt_state
+from repro.optim import sparse as sparse_opt
 from repro.train.state import TrainState, snr_reset_pair
 
 
@@ -44,7 +45,8 @@ def loss_fn(params, cfg: ModelConfig, hcfg: HeadConfig, head_state,
 def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
                     opt_cfg: OptimizerConfig, head_update: str = "auto",
                     head_kernel: bool = False, mesh=None,
-                    sampler=None, snr_alpha: float = 0.1):
+                    sampler=None, snr_alpha: float = 0.1,
+                    embed_update: str = "auto"):
     """Returns train_step(state, batch, rng) -> (state, metrics).
 
     ``head_update`` picks the head-gradient path (DESIGN.md §8):
@@ -72,12 +74,27 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
     ``head_state`` every call). ``snr_alpha`` is the EWMA weight of the
     online SNR proxy tracked in ``TrainState.snr_ewma`` for the
     SNR-driven refresh trigger (DESIGN.md §9).
+
+    ``embed_update`` extends the sparse treatment to the *input* embedding
+    (DESIGN.md §11): the token gather runs outside the trunk vjp, its
+    cotangent rows are deduped into a SparseRows leaf, and the optimizer
+    applies O(touched-tokens·d) row updates instead of scatter-adding a
+    dense (V, d) gradient. ``auto`` (default) rides with the head: sparse
+    when the head path is sparse, dense otherwise; ``dense`` forces the
+    old behaviour.
     """
     mode = resolve_head_update(head_update, hcfg.kind)
     assert not (head_kernel and mode == "dense"), (
         "head_kernel routes the SPARSE path through the fused Pallas "
         "kernel; the resolved head_update here is 'dense', which would "
         "silently ignore it")
+    assert embed_update in ("auto", "sparse", "dense"), embed_update
+    emode = embed_update
+    if emode == "auto":
+        emode = "sparse" if mode == "sparse" else "dense"
+    assert not (emode == "sparse" and mode == "dense"), (
+        "sparse embed updates ride the sparse-head step (jax.vjp); the "
+        "dense value_and_grad path cannot deliver them")
 
     def dense_step(state: TrainState, batch, rng):
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
@@ -87,28 +104,62 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
         return grads, metrics
 
     def sparse_step(state: TrainState, batch, rng):
-        trunk = {k: v for k, v in state.params.items() if k != "head"}
+        params = state.params
+        # Sparse embed path: run the token gather OUTSIDE the trunk vjp
+        # (forward takes inputs_embeds) and collect its cotangent rows as
+        # SparseRows instead of letting autodiff scatter-add a dense
+        # (V, d) gradient. Trace-time Python check: params without an
+        # embedding table (standalone-head configs) fall back to dense.
+        embed_sparse = emode == "sparse" and "embed" in params
+        drop = {"head", "embed"} if embed_sparse else {"head"}
+        trunk = {k: v for k, v in params.items() if k not in drop}
+        tokens = batch["tokens"]
 
-        def trunk_fwd(tp):
-            h, _, fwd_metrics = transformer.forward(
-                tp, cfg, batch["tokens"],
-                positions=batch.get("positions"),
-                vision_embeds=batch.get("vision_embeds"))
-            return h, fwd_metrics
+        if embed_sparse:
+            cdt = jnp.dtype(cfg.dtype)
+            h0 = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
 
-        h, trunk_vjp, fwd_metrics = jax.vjp(trunk_fwd, trunk, has_aux=True)
+            def trunk_fwd(tp, h0_in):
+                ve = batch.get("vision_embeds")
+                ie = (h0_in if ve is None
+                      else jnp.concatenate([ve.astype(cdt), h0_in],
+                                           axis=1))
+                h, _, fwd_metrics = transformer.forward(
+                    tp, cfg, tokens, positions=batch.get("positions"),
+                    inputs_embeds=ie)
+                return h, fwd_metrics
+
+            h, trunk_vjp, fwd_metrics = jax.vjp(trunk_fwd, trunk, h0,
+                                                has_aux=True)
+        else:
+            def trunk_fwd(tp):
+                h, _, fwd_metrics = transformer.forward(
+                    tp, cfg, tokens, positions=batch.get("positions"),
+                    vision_embeds=batch.get("vision_embeds"))
+                return h, fwd_metrics
+
+            h, trunk_vjp, fwd_metrics = jax.vjp(trunk_fwd, trunk,
+                                                has_aux=True)
         labels = batch["labels"]
         n_vis = 0
         if cfg.modality == "vision" and labels.shape[1] != h.shape[1]:
             n_vis = h.shape[1] - labels.shape[1]
         loss, head_metrics, sparse, dh = lm_head.lm_sparse_head_loss(
-            cfg, hcfg, HeadParams(**state.params["head"]), state.head_state,
+            cfg, hcfg, HeadParams(**params["head"]), state.head_state,
             h[:, n_vis:] if n_vis else h, labels, rng,
             mask=batch.get("mask"), use_kernel=head_kernel, sampler=sampler)
         if n_vis:   # vision prefix carries no next-token loss
             dh = jnp.pad(dh, ((0, 0), (n_vis, 0), (0, 0)))
-        (trunk_grads,) = trunk_vjp(dh.astype(h.dtype))
-        grads = {**trunk_grads, "head": sparse}
+        if embed_sparse:
+            trunk_grads, dh0 = trunk_vjp(dh.astype(h.dtype))
+            vocab = params["embed"].shape[0]
+            grads = {**trunk_grads, "head": sparse,
+                     "embed": sparse_opt.accumulate_embed_rows(
+                         tokens.reshape(-1),
+                         dh0.reshape(-1, dh0.shape[-1]), vocab)}
+        else:
+            (trunk_grads,) = trunk_vjp(dh.astype(h.dtype))
+            grads = {**trunk_grads, "head": sparse}
         metrics = {"loss": loss, **fwd_metrics, **head_metrics}
         return grads, metrics
 
@@ -161,18 +212,24 @@ STEP_METRIC_GAUGES = {
 
 
 def publish_step_metrics(registry, host_metrics: Dict[str, float],
-                         snr_ref: Optional[float] = None) -> None:
+                         snr_ref: Optional[float] = None,
+                         head_state_bytes: Optional[int] = None) -> None:
     """Host-side bridge from a jitted step's metrics dict to the obs
     registry. The step function runs under jit and cannot touch host
     state, so the loop device_gets the (tiny, already-computed) metrics
     once per step and publishes through this mapping; ``snr_ref`` lives
-    on TrainState, not in the metrics dict, and is passed separately."""
+    on TrainState, not in the metrics dict, and is passed separately.
+    ``head_state_bytes`` (optim.head_state_bytes — a static byte count,
+    computed once at loop start) lands on the ``train/head_state_bytes``
+    gauge so the DESIGN.md §11 memory model is observable in prod."""
     registry.counter("train/steps").inc()
     for src, name in STEP_METRIC_GAUGES.items():
         if src in host_metrics:
             registry.gauge(name).set(host_metrics[src])
     if snr_ref is not None:
         registry.gauge("snr/ref").set(snr_ref)
+    if head_state_bytes is not None:
+        registry.gauge("train/head_state_bytes").set(head_state_bytes)
 
 
 def make_eval_step(cfg: ModelConfig, hcfg: HeadConfig):

@@ -190,9 +190,12 @@ class TestOptimizerEquivalence:
                                    rtol=1e-5, atol=1e-6)
 
     def test_adamw_lazy_rows_untouched(self):
-        """The documented lazy-AdamW deviation: rows outside the touched
-        set keep exactly their old value under the sparse path (dense
-        AdamW would still decay them via weight decay + momentum)."""
+        """Lazy AdamW defers untouched rows: rows outside the touched set
+        keep exactly their old bits under the sparse path (dense AdamW
+        decays them immediately). Since the exact catch-up (DESIGN.md
+        §11) this is deferral, not a deviation — the skipped decay and
+        momentum tail are replayed in closed form on the row's next
+        touch (tests/test_state_memory.py::TestLazyAdamW)."""
         cfg = HeadConfig(num_labels=64, kind="uniform_ns", n_neg=1)
         gen = Generator()
         params, h, xg, y = _problem(batch=4, c=64)
