@@ -7,7 +7,13 @@
 #   make bench-serve  - dense vs beam serving latency sweep over C
 #   make bench-engine - continuous-batching engine under Poisson traffic
 #                       (writes BENCH_engine.json: throughput, p50/p99,
-#                       paged-vs-monolithic concurrency at equal bytes)
+#                       paged-vs-monolithic concurrency at equal bytes,
+#                       plus the adversarial multi-tenant section)
+#   make bench-engine-adversarial - ONLY the adversarial multi-tenant
+#                       traffic (shared-prefix bursts, heavy-tail SLA
+#                       mix): COW sharing concurrency, speculative
+#                       accept rate, FIFO-vs-SLA interactive p99; fast,
+#                       never writes BENCH_engine.json
 #   make bench-tree-fit - generator fitting at scale: sequential oracle vs
 #                       level-parallel vs warm-start refresh + held-out
 #                       log-likelihood (writes BENCH_tree_fit.json)
@@ -32,6 +38,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-serve bench-serve bench-engine \
+        bench-engine-adversarial \
         bench-tree-fit bench-heads bench-snr bench-smoke obs-demo bench
 
 test:
@@ -48,6 +55,9 @@ bench-serve:
 
 bench-engine:
 	$(PYTHON) -m benchmarks.bench_engine
+
+bench-engine-adversarial:
+	$(PYTHON) -m benchmarks.bench_engine --traffic adversarial
 
 bench-tree-fit:
 	$(PYTHON) -m benchmarks.bench_tree_fit

@@ -29,6 +29,18 @@ slot, so the paged pool sustains more concurrent requests at equal bytes
 — the ``paged-vs-monolithic`` entry records peak concurrency and request
 throughput for both.
 
+A final *adversarial* section (PR 9) runs the multi-tenant traffic the
+prefix-sharing / speculative-decode / SLA-scheduling stack targets:
+
+- shared-prefix bursts (Zipf-popular templates, bursty arrivals) through
+  a FIFO-no-sharing engine vs a COW-sharing one at EQUAL device bytes —
+  headline: the sharing engine packs >= 2x the peak concurrent requests;
+- the same burst trace with replay-draft speculative decode, cold then
+  warm — headline: warm mean accepted draft tokens per verify step > 1;
+- a heavy-tail SLA mix (short interactive probes + Pareto batch whales)
+  under FIFO vs priority/preemption/on-demand-growth scheduling —
+  headline: the interactive class's p99 drops vs FIFO on the same trace.
+
 Reports request throughput and p50/p99 end-to-end latency per path, checks
 the engine's beam decode is byte-identical to the lock-step beam path on
 the same prompts, and writes machine-readable ``BENCH_engine.json``
@@ -37,10 +49,12 @@ serving trajectory. The headline number: at C = 256k the beam engine
 should sustain >= 2x the request throughput of lockstep-dense.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_engine [--quick]
+      PYTHONPATH=src python -m benchmarks.bench_engine --traffic adversarial
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -53,7 +67,8 @@ from repro.models import lm_head, transformer
 from repro.models.config import ModelConfig
 from repro.obs import Registry
 from repro.serve import Engine, Request, ServeConfig, TrafficConfig
-from repro.serve import drive, lockstep_decode, make_workload
+from repro.serve import (drive, lockstep_decode, make_heavy_tail_mix,
+                         make_shared_prefix_burst, make_workload)
 
 SLOTS = 8
 PROMPT_LEN = 8
@@ -175,6 +190,7 @@ def _paged_vs_monolithic(cfg, hcfg, params, head_state, c: int) -> dict:
         engine.peak_active = 0               # measure the trace, not warmup
         engine.peak_pages_in_use = 0
         res = drive(engine, workload)
+        res.pop("per_request_latency_s")
         st = engine.stats()
         res["max_concurrent"] = st["peak_active"]
         res["lanes"] = scfg.n_slots
@@ -189,6 +205,147 @@ def _paged_vs_monolithic(cfg, hcfg, params, head_state, c: int) -> dict:
                                / max(1, out["monolithic"]["max_concurrent"]))
     out["throughput_gain"] = (out["paged"]["throughput_rps"]
                               / out["monolithic"]["throughput_rps"])
+    return out
+
+
+def _adversarial(cfg, hcfg, params, head_state, c: int, reg: Registry,
+                 n_requests: int = 24) -> dict:
+    """Multi-tenant serving under the adversarial traffic shapes the PR 9
+    features target (DESIGN.md §12): shared-prefix Zipf bursts for COW
+    page sharing, repeat traffic for speculative replay drafts, and a
+    heavy-tail length mix for SLA scheduling. Every comparison holds the
+    pool geometry (device bytes) fixed and flips exactly one feature."""
+    out = {"caveats": (
+        "CPU-hosted bench: peak concurrency, share hit-rate and draft "
+        "accept-rate are hardware-independent memory/scheduling claims; "
+        "absolute latencies and the FIFO-vs-SLA p99 gap are CPU-scale "
+        "illustrations (an accelerator shrinks service times ~100x while "
+        "the queueing structure stays the same). Traffic is re-driven "
+        "once before measuring, so shared/speculative numbers are the "
+        "warm steady state of a resident popular-template set.")}
+
+    # -- 1. shared-prefix Zipf bursts: COW sharing vs no sharing ---------
+    # Same pool (24 pages of 4), same burst trace. Without sharing every
+    # request reserves ceil(36/4) = 9 pages -> 2 fit. With sharing the
+    # resident template pages are mapped, not copied, so concurrency is
+    # bounded by the private (suffix + generation) pages only.
+    template_len, suffix_len, gen = 24, 4, 8
+    scfg_base = dict(n_slots=8, max_len=template_len + suffix_len + gen,
+                     beam=BEAM, page_len=4, n_pages=24,
+                     cache_dtype=jnp.float32)
+    tcfg = TrafficConfig(
+        n_requests=n_requests, rate=5000.0, gen_tokens=gen, vocab_size=c,
+        n_templates=2, zipf_a=2.0, template_len=template_len,
+        suffix_len=suffix_len, exact_repeat_frac=0.25, burst=6,
+        interactive_frac=0.5, interactive_priority=1, seed=c + 7)
+    workload = make_shared_prefix_burst(tcfg)
+    sharing: dict = {}
+    for name, share in (("fifo-noshare", False), ("shared-cow", True)):
+        engine = Engine(cfg, hcfg, params, head_state,
+                        ServeConfig(prefix_sharing=share, **scfg_base))
+        drive(engine, workload, time_scale=0.0)  # warm jits (+ the trie)
+        engine.peak_active = 0
+        engine.peak_pages_in_use = 0
+        hits0, lookups0 = engine.share_hits, engine.share_lookups
+        saved0, cow0 = engine.prefill_tokens_saved, engine.cow_copies
+        res = drive(engine, workload, time_scale=0.0)
+        res.pop("per_request_latency_s")
+        st = engine.stats()
+        res["max_concurrent"] = st["peak_active"]
+        res["peak_pages_in_use"] = st["peak_pages_in_use"]
+        res["n_pages"] = st["n_pages"]
+        if share:
+            res["share_hit_rate"] = (
+                (engine.share_hits - hits0)
+                / max(1, engine.share_lookups - lookups0))
+            res["prefill_tokens_saved"] = (engine.prefill_tokens_saved
+                                           - saved0)
+            res["cow_copies"] = engine.cow_copies - cow0
+            res["pages_cached"] = st["pages_cached"]
+        sharing[name] = res
+    sharing["concurrency_gain"] = (
+        sharing["shared-cow"]["max_concurrent"]
+        / max(1, sharing["fifo-noshare"]["max_concurrent"]))
+    out["sharing"] = sharing
+    reg.gauge("bench/engine/adversarial/share_hit_rate").set(
+        sharing["shared-cow"]["share_hit_rate"])
+    reg.gauge("bench/engine/adversarial/concurrency_gain").set(
+        sharing["concurrency_gain"])
+
+    # -- 2. speculative decode: replay drafts on repeat traffic ----------
+    engine = Engine(cfg, hcfg, params, head_state, ServeConfig(
+        spec_decode=True, max_draft=4, prefix_sharing=True, **scfg_base))
+    cold = drive(engine, workload, time_scale=0.0)
+    v0, a0 = engine.verify_steps, engine.drafts_accepted
+    p0 = engine.drafts_proposed
+    warm = drive(engine, workload, time_scale=0.0)
+    for r in (cold, warm):
+        r.pop("per_request_latency_s")
+    spec = {
+        "cold": cold,
+        "warm": warm,
+        "verify_steps_warm": engine.verify_steps - v0,
+        # Tokens of draft accepted per *batched* verify launch, summed
+        # across all active lanes (1 + this emitted per lane), so with
+        # L lanes accepting full drafts this exceeds max_draft.
+        "mean_accepted_warm": ((engine.drafts_accepted - a0)
+                               / max(1, engine.verify_steps - v0)),
+        "draft_accept_rate": ((engine.drafts_accepted - a0)
+                              / max(1, engine.drafts_proposed - p0)),
+    }
+    out["spec"] = spec
+    reg.gauge("bench/engine/adversarial/spec_mean_accepted").set(
+        spec["mean_accepted_warm"])
+
+    # -- 3. SLA classes: FIFO vs priority + preemption + ondemand --------
+    # Heavy-tail mix on a pool two whale reservations fill. The FIFO
+    # baseline strips priorities from the SAME trace; interactive-class
+    # latency is regrouped from per-request latencies by original class.
+    tcfg2 = TrafficConfig(
+        n_requests=max(12, n_requests - 4), rate=2000.0, prompt_len=4,
+        gen_tokens=4, prompt_len_choices=(8, 16, 24),
+        gen_tokens_choices=(8, 16), vocab_size=c, interactive_frac=0.6,
+        interactive_priority=1, tail_alpha=1.1, seed=c + 11)
+    wl = make_heavy_tail_mix(tcfg2)
+    inter_idx = [i for i, (_, r) in enumerate(wl) if r.priority == 1]
+    batch_idx = [i for i, (_, r) in enumerate(wl) if r.priority == 0]
+    sched_scfg = dict(n_slots=4, max_len=40, beam=BEAM, page_len=4,
+                      n_pages=20, cache_dtype=jnp.float32)
+    runs = {
+        "fifo": (ServeConfig(**sched_scfg),
+                 [(t, dataclasses.replace(r, priority=0))
+                  for t, r in wl]),
+        "sla": (ServeConfig(preemption=True, page_growth="ondemand",
+                            **sched_scfg), wl),
+    }
+    sched: dict = {}
+    for name, (scfg, load) in runs.items():
+        engine = Engine(cfg, hcfg, params, head_state, scfg)
+        drive(engine, load, time_scale=0.0)      # warm jits
+        res = drive(engine, load, time_scale=0.0)
+        lat = res.pop("per_request_latency_s")
+        entry = {
+            "throughput_rps": res["throughput_rps"],
+            "interactive_p50_ms": float(np.percentile(
+                [lat[i] for i in inter_idx], 50) * 1e3),
+            "interactive_p99_ms": float(np.percentile(
+                [lat[i] for i in inter_idx], 99) * 1e3),
+            "batch_p99_ms": float(np.percentile(
+                [lat[i] for i in batch_idx], 99) * 1e3),
+            "per_class": res["per_class"],
+        }
+        if name == "sla":
+            st = engine.stats()["sched"]
+            entry["preemptions"] = st["preemptions"]
+            entry["restores"] = st["restores"]
+            entry["page_grows"] = st["page_grows"]
+        sched[name] = entry
+    sched["interactive_p99_speedup"] = (
+        sched["fifo"]["interactive_p99_ms"]
+        / max(1e-9, sched["sla"]["interactive_p99_ms"]))
+    out["sched"] = sched
+    reg.gauge("bench/engine/adversarial/interactive_p99_speedup").set(
+        sched["interactive_p99_speedup"])
     return out
 
 
@@ -209,13 +366,14 @@ def _check_lockstep_match(cfg, hcfg, params, head_state, workload) -> bool:
 
 
 def run(csv_rows: list, c_values=(1024, 32768, 262144), n_requests=24,
-        rate=1000.0, json_path=None, write_json=True) -> dict:
+        rate=1000.0, json_path=None, write_json=True, sweep=True,
+        adv_requests=24) -> dict:
     report = {"slots": SLOTS, "prompt_len": PROMPT_LEN,
               "gen_tokens": GEN_TOKENS, "beam": BEAM,
               "n_requests": n_requests, "rate_rps": rate, "sweep": {}}
     reg = Registry()               # bench/* gauges for the metrics block
     serve_metrics = {}             # serve/* snapshot of the last engine
-    for c in c_values:
+    for c in c_values if sweep else ():
         cfg, hcfg, params, head_state = _setup(c)
         tcfg = TrafficConfig(n_requests=n_requests, rate=rate,
                              prompt_len=PROMPT_LEN, gen_tokens=GEN_TOKENS,
@@ -236,6 +394,7 @@ def run(csv_rows: list, c_values=(1024, 32768, 262144), n_requests=24,
                       if engine.candidate_cache else None)
             skips0, steps0 = engine.descent_skips, engine.decode_steps
             res = drive(engine, workload)
+            res.pop("per_request_latency_s")
             if before is not None:
                 after = engine.candidate_cache.stats()
                 lookups = (after["hits"] + after["misses"]
@@ -255,6 +414,7 @@ def run(csv_rows: list, c_values=(1024, 32768, 262144), n_requests=24,
                 # in production) where the tree descent disappears.
                 skips1, steps1 = engine.descent_skips, engine.decode_steps
                 warm = drive(engine, workload)
+                warm.pop("per_request_latency_s")
                 warm_after = engine.candidate_cache.stats()
                 warm_lookups = (warm_after["hits"] + warm_after["misses"]
                                 - after["hits"] - after["misses"])
@@ -311,9 +471,38 @@ def run(csv_rows: list, c_values=(1024, 32768, 262144), n_requests=24,
             f"paged_concurrency=x{pvm['concurrency_gain']:.1f},"
             f"lockstep_match={entry['lockstep_match']}"))
 
+    # Multi-tenant features under adversarial traffic (independent of C:
+    # sharing/speculation/scheduling are pool- and scheduler-level).
+    cfg, hcfg, params, head_state = _setup(c_values[0])
+    adv = _adversarial(cfg, hcfg, params, head_state, c_values[0], reg,
+                       n_requests=adv_requests)
+    report["adversarial"] = adv
+    sh, sp, sc = adv["sharing"], adv["spec"], adv["sched"]
+    csv_rows.append((
+        "engine/adversarial/sharing", 0.0,
+        f"concurrency=x{sh['concurrency_gain']:.1f} "
+        f"({sh['shared-cow']['max_concurrent']} vs "
+        f"{sh['fifo-noshare']['max_concurrent']} at "
+        f"{sh['shared-cow']['n_pages']} pages),"
+        f"hit_rate={sh['shared-cow']['share_hit_rate']:.2f},"
+        f"cow={sh['shared-cow']['cow_copies']},"
+        f"tokens_saved={sh['shared-cow']['prefill_tokens_saved']}"))
+    csv_rows.append((
+        "engine/adversarial/spec", 0.0,
+        f"mean_accepted={sp['mean_accepted_warm']:.2f},"
+        f"accept_rate={sp['draft_accept_rate']:.2f},"
+        f"verify_steps={sp['verify_steps_warm']}"))
+    csv_rows.append((
+        "engine/adversarial/sched", 0.0,
+        f"interactive_p99={sc['sla']['interactive_p99_ms']:.0f}ms vs "
+        f"fifo {sc['fifo']['interactive_p99_ms']:.0f}ms "
+        f"(x{sc['interactive_p99_speedup']:.1f}),"
+        f"preemptions={sc['sla']['preemptions']},"
+        f"page_grows={sc['sla']['page_grows']}"))
+
     report["metrics"] = {**reg.snapshot(), **serve_metrics}
-    if write_json:     # reduced sweeps (benchmarks.run) must not clobber
-        #                the tracked full-sweep artifact
+    if write_json and sweep:   # reduced/adversarial-only runs must not
+        #                        clobber the tracked full-sweep artifact
         path = json_path or os.environ.get("BENCH_ENGINE_JSON",
                                            "BENCH_engine.json")
         with open(path, "w") as f:
@@ -331,28 +520,50 @@ def main():
                     help="offered Poisson load, req/s (keep well above "
                          "every path's capacity so open-loop throughput "
                          "measures capacity, not the arrival cap)")
+    ap.add_argument("--traffic", choices=["standard", "adversarial"],
+                    default="standard",
+                    help="standard: full C sweep + adversarial section "
+                         "(the tracked artifact). adversarial: ONLY the "
+                         "multi-tenant adversarial section — fast "
+                         "iteration on sharing/speculation/scheduling; "
+                         "never writes BENCH_engine.json")
     args = ap.parse_args()
-    c_values = (1024, 4096) if args.quick else (1024, 32768, 262144)
+    adversarial_only = args.traffic == "adversarial"
+    c_values = ((1024,) if adversarial_only
+                else (1024, 4096) if args.quick
+                else (1024, 32768, 262144))
 
     rows: list = []
-    # --quick is a smoke run: never clobber the tracked full-sweep JSON.
+    # --quick / --traffic adversarial are partial runs: never clobber the
+    # tracked full-sweep JSON.
     report = run(rows, c_values=c_values, n_requests=args.n_requests,
-                 rate=args.rate, write_json=not args.quick)
+                 rate=args.rate, sweep=not adversarial_only,
+                 write_json=not (args.quick or adversarial_only))
     print("name,us_per_request,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
-    top = report["sweep"][str(c_values[-1])]
-    pvm = top["paged-vs-monolithic"]
-    print(f"\nC={c_values[-1]}: engine-beam is "
-          f"x{top['beam_vs_lockstep_dense_speedup']:.1f} the lockstep-dense "
-          f"request throughput (target >= 2x); "
-          f"cache hit rate {top['engine-beam+cache']['cache_hit_rate']:.0%}; "
-          f"lockstep_match={top['lockstep_match']}")
-    print(f"paged vs monolithic at {pvm['kv_budget_positions']} KV "
-          f"positions: {pvm['paged']['max_concurrent']} vs "
-          f"{pvm['monolithic']['max_concurrent']} peak concurrent requests "
-          f"(x{pvm['concurrency_gain']:.1f}), "
-          f"x{pvm['throughput_gain']:.2f} request throughput")
+    if not adversarial_only:
+        top = report["sweep"][str(c_values[-1])]
+        pvm = top["paged-vs-monolithic"]
+        print(f"\nC={c_values[-1]}: engine-beam is "
+              f"x{top['beam_vs_lockstep_dense_speedup']:.1f} the "
+              f"lockstep-dense request throughput (target >= 2x); "
+              f"cache hit rate "
+              f"{top['engine-beam+cache']['cache_hit_rate']:.0%}; "
+              f"lockstep_match={top['lockstep_match']}")
+        print(f"paged vs monolithic at {pvm['kv_budget_positions']} KV "
+              f"positions: {pvm['paged']['max_concurrent']} vs "
+              f"{pvm['monolithic']['max_concurrent']} peak concurrent "
+              f"requests (x{pvm['concurrency_gain']:.1f}), "
+              f"x{pvm['throughput_gain']:.2f} request throughput")
+    adv = report["adversarial"]
+    print(f"\nadversarial: COW sharing packs "
+          f"x{adv['sharing']['concurrency_gain']:.1f} the peak concurrent "
+          f"requests at equal device bytes (target >= 2x); warm "
+          f"speculative decode accepts "
+          f"{adv['spec']['mean_accepted_warm']:.2f} draft tokens/verify "
+          f"step (target > 1); SLA scheduling cuts interactive p99 to "
+          f"1/{adv['sched']['interactive_p99_speedup']:.1f} of FIFO's")
 
 
 if __name__ == "__main__":

@@ -62,7 +62,7 @@ def smoke_heads():
 def smoke_engine():
     from benchmarks import bench_engine
     report = bench_engine.run([], c_values=(1024,), n_requests=4,
-                              write_json=False)
+                              adv_requests=8, write_json=False)
     assert report["sweep"], "bench_engine: empty sweep"
     for c, entry in report["sweep"].items():
         for key in ("lockstep-dense", "engine-beam",
@@ -71,10 +71,30 @@ def smoke_engine():
             assert key in entry, f"bench_engine[{c}]: missing {key}"
         assert entry["lockstep_match"], f"bench_engine[{c}]: mismatch"
         assert "throughput_rps" in entry["lockstep-dense"]
+    # Adversarial multi-tenant section (PR 9): schema only — the >= 2x /
+    # > 1 headline claims belong to the full-size tracked run, not an
+    # 8-request smoke.
+    adv = report["adversarial"]
+    assert "caveats" in adv, "bench_engine: adversarial missing caveats"
+    sharing = adv["sharing"]
+    hr = sharing["shared-cow"]["share_hit_rate"]
+    assert 0.0 <= hr <= 1.0, sharing
+    assert sharing["concurrency_gain"] >= 1.0, sharing
+    assert sharing["shared-cow"]["max_concurrent"] >= \
+        sharing["fifo-noshare"]["max_concurrent"], sharing
+    spec = adv["spec"]
+    assert spec["mean_accepted_warm"] > 0, spec
+    assert "draft_accept_rate" in spec, spec
+    sched = adv["sched"]
+    for side in ("fifo", "sla"):
+        assert "interactive_p99_ms" in sched[side], sched
+        assert "per_class" in sched[side], sched
+    assert sched["sla"]["preemptions"] >= 0, sched
     _check_metrics("bench_engine", report, "bench/engine/")
     # The merged serve/* view from the last driven engine rides along.
     assert report["metrics"]["serve/ttft_s"]["count"] > 0
-    print(f"smoke: bench_engine OK ({len(report['sweep'])} C values)")
+    print(f"smoke: bench_engine OK ({len(report['sweep'])} C values "
+          f"+ adversarial)")
 
 
 def smoke_tree_fit():

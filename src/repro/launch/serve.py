@@ -115,8 +115,18 @@ def run_engine(args, cfg, mesh, params, head_state, hcfg):
         beam=args.topk_beam,
         mesh=mesh if args.shard_scores else None,
         eos_id=args.eos_id if args.eos_id >= 0 else None,
-        cache_dtype=jnp.bfloat16),
+        cache_dtype=jnp.bfloat16,
+        prefix_sharing=args.prefix_sharing,
+        spec_decode=args.spec_decode, max_draft=args.max_draft,
+        preemption=args.preemption, page_growth=args.page_growth),
         exporter=exporter, metrics_interval=args.metrics_interval)
+    metrics_server = None
+    if args.metrics_port is not None:
+        from repro.obs import start_metrics_server
+        metrics_server = start_metrics_server(engine.registry,
+                                              args.metrics_port)
+        print(f"metrics endpoint: http://0.0.0.0:{metrics_server.port}"
+              "/metrics")
     if args.profile_dir:
         engine.registry.annotate = True     # spans label the trace
     prompts = jax.random.randint(jax.random.PRNGKey(2),
@@ -154,6 +164,8 @@ def run_engine(args, cfg, mesh, params, head_state, hcfg):
         exporter.emit(summary)
         exporter.close()
         print(f"metrics JSONL: {args.metrics_jsonl}")
+    if metrics_server is not None:
+        metrics_server.close()
     print("sample:", handles[0].result().tolist())
 
 
@@ -201,6 +213,28 @@ def main():
     ap.add_argument("--profile-dir", default=None,
                     help="capture a jax.profiler trace of the engine run "
                          "into this directory")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the engine registry as Prometheus text on "
+                         "this port (/metrics, stdlib HTTP thread; 0 = "
+                         "ephemeral port, engine path only)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="share identical prompt-prefix KV pages across "
+                         "requests (radix trie + refcounts + COW tails; "
+                         "attention archs only)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decode with the fitted generator "
+                         "tree as draft model (byte-identical outputs; "
+                         "attention archs only)")
+    ap.add_argument("--max-draft", type=int, default=4,
+                    help="draft chain cap per speculative verify step")
+    ap.add_argument("--preemption", action="store_true",
+                    help="allow higher-priority admissions to spill "
+                         "lower-priority lanes (byte-exact restore)")
+    ap.add_argument("--page-growth", default="reserve",
+                    choices=["reserve", "ondemand"],
+                    help="KV page policy: worst-case reservation at "
+                         "admission vs on-demand growth at page "
+                         "boundaries")
     args = ap.parse_args()
 
     from repro.launch.mesh import make_host_mesh

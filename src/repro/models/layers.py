@@ -126,7 +126,8 @@ def attention(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
               kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
               cache_pos: Optional[jax.Array] = None,
               mask: Optional[jax.Array] = None,
-              page_table: Optional[jax.Array] = None):
+              page_table: Optional[jax.Array] = None,
+              write_mask: Optional[jax.Array] = None):
     """GQA attention with causal + per-layer sliding-window mask + softcap.
 
     Training/prefill: ``kv_cache is None`` → self-attention over x and the
@@ -175,23 +176,35 @@ def attention(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         q_pos = k_pos
         new_cache = (k, v)
     elif page_table is not None:
-        # Paged decode: cache leaves are the shared arena. Scatter the new
-        # token at its (page, offset), then gather this row's pages back
-        # into logical order — positions are identical to the contiguous
-        # layout, only the physical addressing differs, so the softmax sees
-        # byte-identical inputs (the property the geometry oracle pins).
-        assert s == 1, "paged cache requires single-token decode"
+        # Paged decode / paged multi-token step: cache leaves are the shared
+        # arena. Scatter each incoming token at its (page, offset), then
+        # gather this row's pages back into logical order — positions are
+        # identical to the contiguous layout, only the physical addressing
+        # differs, so the softmax sees byte-identical inputs (the property
+        # the geometry oracle pins). With s > 1 (shared-prefix suffix
+        # prefill / speculative verify) row r's tokens land at logical
+        # positions cache_pos[r] .. cache_pos[r]+s-1; ``write_mask``
+        # (B, s) reroutes padding positions' writes to the sink page (the
+        # LAST physical page by construction — PagedPool.sink == n_pages,
+        # arena holds n_pages + 1). Reads are untouched by the mask: real
+        # rows gather only their own mapped pages.
         ck, cv = kv_cache                       # (P, page_len, KV, hd)
         page_len = ck.shape[1]
+        sink = ck.shape[0] - 1
         cp = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
         rows = jnp.arange(b)
-        pid = page_table[rows, cp // page_len]  # (B,) physical page per row
-        off = cp % page_len
+        pos_w = cp[:, None] + jnp.arange(s, dtype=jnp.int32)     # (B, s)
+        # Out-of-range logical pages (padded s past a row's reservation)
+        # clamp in the gather below; their writes are masked to the sink.
+        pid = page_table[rows[:, None], pos_w // page_len]       # (B, s)
+        off = pos_w % page_len
+        if write_mask is not None:
+            pid = jnp.where(write_mask, pid, sink)
         # Distinct live rows own distinct pages (allocator invariant), so
         # the only duplicate scatter targets are free rows' sink writes —
         # garbage into the garbage page, in unspecified order.
-        k_arena = ck.at[pid, off].set(k[:, 0].astype(ck.dtype))
-        v_arena = cv.at[pid, off].set(v[:, 0].astype(cv.dtype))
+        k_arena = ck.at[pid, off].set(k.astype(ck.dtype))
+        v_arena = cv.at[pid, off].set(v.astype(cv.dtype))
         new_cache = (k_arena, v_arena)
         s_max = page_table.shape[1] * page_len
         k_all = k_arena[page_table].reshape(b, s_max, kv, hd)

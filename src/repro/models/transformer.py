@@ -113,7 +113,7 @@ def init_paged_cache(cfg: ModelConfig, n_lanes: int, n_pages: int,
 
 def _block(layer_params, cfg: ModelConfig, h, positions, window,
            cache_l, cache_pos, decode: bool, attn_mask=None,
-           page_table=None):
+           page_table=None, write_mask=None):
     """One decoder block. Returns (h, new_cache_l, metrics)."""
     from repro.parallel.hints import hint_residual
     h = hint_residual(h)   # seq-parallel residual (no-op unless hinted)
@@ -127,7 +127,8 @@ def _block(layer_params, cfg: ModelConfig, h, positions, window,
         a_out, a_cache = L.attention(layer_params["attn"], cfg, mix_in,
                                      positions, window, kv_cache=kvc,
                                      cache_pos=cache_pos, mask=attn_mask,
-                                     page_table=page_table)
+                                     page_table=page_table,
+                                     write_mask=write_mask)
         if cache_l is not None:
             new_cache["k"], new_cache["v"] = a_cache
         mix_out = mix_out + a_out
@@ -177,6 +178,7 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
             vision_embeds: Optional[jax.Array] = None,
             cache=None, cache_pos: Optional[jax.Array] = None,
             page_table: Optional[jax.Array] = None,
+            write_mask: Optional[jax.Array] = None,
             inputs_embeds: Optional[jax.Array] = None,
             ) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
     """Run the stack. Returns (hidden (B,S,d), new_cache, metrics).
@@ -189,7 +191,10 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
     - paged decode:    cache=init_paged_cache(...), cache_pos (B,) vector,
       page_table (B, max_pages) mapping each lane's logical pages onto the
       shared arena (repro.serve.PagedPool); the page table is shared by
-      every layer
+      every layer. S may exceed 1 (shared-prefix suffix prefill and the
+      speculative verify step, repro.serve): row r's tokens occupy logical
+      positions cache_pos[r] .. cache_pos[r]+S-1, and ``write_mask``
+      (B, S) reroutes padding positions' K/V writes to the sink page
 
     ``inputs_embeds`` bypasses the embedding gather entirely: the caller
     supplies the (B, S, d) hidden input (already cast, vision embeds
@@ -225,7 +230,7 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
 
     body = functools.partial(_block, cfg=cfg, positions=positions,
                              cache_pos=cache_pos, decode=decode,
-                             page_table=page_table)
+                             page_table=page_table, write_mask=write_mask)
 
     if cfg.scan_layers:
         def scan_body(carry, xs):

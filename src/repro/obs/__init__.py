@@ -6,8 +6,9 @@ serving engine, and the genfit refresh lifecycle all write to a
 time their phases with :func:`span`, and export through the JSONL event
 log, the Prometheus text dump, or the console summary.
 """
-from repro.obs.export import (EVENT_SCHEMA, JsonlExporter, console_summary,
-                              prometheus_text, read_jsonl, validate_events)
+from repro.obs.export import (EVENT_SCHEMA, JsonlExporter, MetricsServer,
+                              console_summary, prometheus_text, read_jsonl,
+                              start_metrics_server, validate_events)
 from repro.obs.registry import (DEFAULT_TIME_BUCKETS, NULL_COUNTER,
                                 NULL_EWMA, NULL_GAUGE, NULL_HISTOGRAM,
                                 NULL_REGISTRY, Counter, Ewma, Gauge,
@@ -21,5 +22,6 @@ __all__ = [
     "DEFAULT_TIME_BUCKETS", "exp_buckets", "linear_buckets",
     "Span", "span", "current_spans", "ProfileWindow",
     "JsonlExporter", "read_jsonl", "validate_events", "EVENT_SCHEMA",
-    "prometheus_text", "console_summary",
+    "prometheus_text", "console_summary", "MetricsServer",
+    "start_metrics_server",
 ]

@@ -140,6 +140,69 @@ def prometheus_text(registry: Registry) -> str:
     return "\n".join(lines) + "\n"
 
 
+class MetricsServer:
+    """Pull-based metrics endpoint: a stdlib HTTP thread serving
+    :func:`prometheus_text` of a live registry at ``/metrics`` (and
+    ``/`` — scrapers and health checks both land somewhere useful).
+
+    Zero dependencies: ``http.server.ThreadingHTTPServer`` on a daemon
+    thread, so a serving process exposes its engine registry without an
+    agent sidecar, and the thread never blocks interpreter exit. The
+    registry snapshot runs in the scrape thread; instruments are plain
+    Python counters, so a torn read costs at worst one stale sample,
+    never a crash. ``port=0`` binds an ephemeral port (tests); the bound
+    port is on ``.port``.
+    """
+
+    def __init__(self, registry: Registry, port: int,
+                 host: str = "0.0.0.0"):
+        import http.server
+        import threading
+
+        reg = registry
+
+        class Handler(http.server.BaseHTTPRequestHandler):
+            def do_GET(self):              # noqa: N802 (stdlib API name)
+                if self.path.split("?")[0] not in ("/", "/metrics"):
+                    self.send_error(404)
+                    return
+                body = prometheus_text(reg).encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args):  # scrapes are not log events
+                pass
+
+        self._httpd = http.server.ThreadingHTTPServer((host, port),
+                                                      Handler)
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="metrics-server", daemon=True)
+        self._thread.start()
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+
+    def __enter__(self) -> "MetricsServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def start_metrics_server(registry: Registry, port: int,
+                         host: str = "0.0.0.0") -> MetricsServer:
+    """Serve ``registry`` as Prometheus text on ``http://host:port/metrics``
+    from a daemon thread. Returns the running server (``.port`` holds the
+    bound port; ``.close()`` stops it)."""
+    return MetricsServer(registry, port, host)
+
+
 def console_summary(registry: Registry, title: str = "metrics") -> str:
     """End-of-run table: one aligned line per instrument, histograms as
     count/mean/p50/p95/p99 (seconds metrics render in ms)."""

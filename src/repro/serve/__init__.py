@@ -45,16 +45,37 @@ exactly what the descent would return — repeated prefixes skip the
 O(beam·k·log C) tree walk and go straight to O(beam·K) re-scoring with
 Eq. 5 debias on the candidate set.
 
+Multi-tenant extensions (PR 9, DESIGN.md §12), all opt-in per
+``ServeConfig`` and byte-identical to lock-step decode when enabled:
+
+- ``prefix_index.PrefixIndex`` — page-granular radix trie mapping shared
+  prompt prefixes onto the same physical pages (refcounts in the pool,
+  copy-on-write tails), with LRU leaf-first eviction of cached pages.
+- ``spec.ReplayDraft`` — the fitted generator tree as draft model:
+  continuation replay + stale-feature seeds verified by one batched
+  multi-token target step with exact accept/reject.
+- SLA scheduling — per-request priority classes, preemption with page
+  spill-and-restore, and on-demand page growth replacing worst-case
+  reservation.
+
 ``traffic`` supplies the Poisson-arrival driver used by
 ``benchmarks/bench_engine.py`` to measure request throughput and p50/p99
-latency for dense vs beam vs beam+cache serving.
+latency for dense vs beam vs beam+cache serving, plus the adversarial
+generators (shared-prefix Zipf bursts, heavy-tail length mixes) the
+multi-tenant features target.
 """
-from repro.serve.cache_pool import PagedPool
+from repro.serve.cache_pool import PagedPool, PageSpill
 from repro.serve.candidate_cache import CandidateCache
 from repro.serve.engine import (Engine, Request, ResultStream, ServeConfig,
                                 lockstep_decode)
-from repro.serve.traffic import TrafficConfig, drive, make_workload
+from repro.serve.prefix_index import PrefixIndex
+from repro.serve.spec import ContinuationStore, NullDraft, ReplayDraft
+from repro.serve.traffic import (TrafficConfig, drive,
+                                 make_heavy_tail_mix,
+                                 make_shared_prefix_burst, make_workload)
 
-__all__ = ["PagedPool", "CandidateCache", "Engine", "Request",
+__all__ = ["PagedPool", "PageSpill", "CandidateCache", "Engine", "Request",
            "ResultStream", "ServeConfig", "TrafficConfig", "drive",
-           "lockstep_decode", "make_workload"]
+           "lockstep_decode", "make_workload", "PrefixIndex",
+           "ContinuationStore", "NullDraft", "ReplayDraft",
+           "make_shared_prefix_burst", "make_heavy_tail_mix"]

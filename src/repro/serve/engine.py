@@ -2,12 +2,20 @@
 
 One engine iteration (``Engine.step``) is: admit → decode → select → retire.
 
-  admit   — pop FIFO'd requests into free decode lanes + freshly-allocated
+  admit   — pop queued requests into free decode lanes + freshly-allocated
             KV pages (``PagedPool.alloc``) and prefill ALL newly-admitted
             prompts in one padded jitted call (``make_batched_prefill``,
             row- and length-bucketed to powers of two so recompiles stay
             bounded); new requests join mid-flight, no draining of the
-            running batch.
+            running batch. Admission order is per-priority-class
+            (higher class first, FIFO within a class, a blocked class
+            blocks everything below it); with ``prefix_sharing`` the
+            longest full-chunk trie match maps already-resident prompt
+            pages into the lane (refcounted, COW on a partial tail) and
+            prefill skips the matched tokens; with
+            ``page_growth="ondemand"`` admission reserves only the
+            prompt + 1 pages and lanes grow (or spill/restore under
+            pressure — ``preemption``) as generation proceeds.
   decode  — ONE jitted ``make_paged_decode`` call for the whole pool:
             (B, 1) in-flight tokens, (B,) per-lane ``cache_pos``, and the
             (B, max_pages) page table mapping each lane's logical pages
@@ -25,13 +33,22 @@ One engine iteration (``Engine.step``) is: admit → decode → select → retir
             requests release their lane AND their pages the same step
             (page reclamation), making room for the next admission.
 
+With ``spec_decode`` the decode+select pair becomes a *verify* launch:
+the replay-draft store proposes up to ``max_draft`` tokens per lane,
+one batched ``paged_prefill`` scores the whole chain, and the longest
+prefix matching the target's own Eq.-5 argmax is emitted — exact
+accept/reject, so speculation changes latency, never output
+(DESIGN.md §12).
+
 Request lifecycle: QUEUED → RUNNING(lane, pages) → FINISHED. The caller
 drives the loop (``step()`` / ``run()``) and reads results incrementally
 through the streaming ``ResultStream`` handle returned by ``submit``.
 
-Determinism: greedy decode has no RNG, admission is FIFO, and the per-slot
-math is row-independent, so a request's output depends only on its prompt
-and the params — byte-identical to the lock-step ``make_serve_step`` path
+Determinism: greedy decode has no RNG, admission order is a pure
+function of the submitted sequence, and the per-slot math is
+row-independent, so a request's output depends only on its prompt and
+the params — byte-identical to the lock-step ``make_serve_step`` path
+with sharing, speculation, and preemption in any combination
 (property-tested in tests/test_serve_engine.py). The candidate cache can
 only skip work, never change results: a prefix hit implies a bit-identical
 hidden state, hence identical re-scored argmax.
@@ -57,8 +74,11 @@ from repro.obs import JsonlExporter, Registry
 from repro.obs.trace import span
 from repro.serve.cache_pool import PagedPool
 from repro.serve.candidate_cache import CandidateCache
+from repro.serve.prefix_index import PrefixIndex
+from repro.serve.spec import NullDraft, ReplayDraft
 from repro.train.step import (make_batched_prefill, make_paged_decode,
-                              make_prefill, make_serve_step)
+                              make_paged_prefill, make_prefill,
+                              make_serve_step)
 
 
 _LOCKSTEP_FNS: Dict[Any, Any] = {}
@@ -127,15 +147,35 @@ class ServeConfig:
     retain_completed: int = 4096       # finished handles kept for audit;
     #                                    older ones drop (callers hold
     #                                    their own ResultStream refs)
+    # -- multi-tenant knobs (PR 9, DESIGN.md §12). All default OFF /
+    #    legacy so the engine is drop-in identical unless opted in. --
+    prefix_sharing: bool = False  # radix-trie shared prompt pages + COW
+    spec_decode: bool = False     # tree-draft speculative decode
+    max_draft: int = 4            # draft chain cap per verify step
+    draft_capacity: int = 8192    # continuation-store LRU entries
+    preemption: bool = False      # spill lower-priority lanes under
+    #                               pressure (restore is byte-exact)
+    page_growth: str = "reserve"  # "reserve" = worst-case pages at
+    #                               admission; "ondemand" = admit on
+    #                               prompt-size pages, grow at page
+    #                               boundaries (evict/preempt/spill-self
+    #                               when the free list runs dry)
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request. ``eos_id=None`` inherits the engine default;
-    ``max_new_tokens`` is the per-sequence length budget."""
+    ``max_new_tokens`` is the per-sequence length budget. ``priority`` is
+    the SLA class (higher = more urgent; interactive traffic above batch):
+    admission scans classes high→low, FIFO within a class, and with
+    ``preemption`` a blocked higher class may spill strictly-lower lanes.
+    ``deadline_s`` is an advisory per-request latency target recorded in
+    the per-class stats (the scheduler does not drop late requests)."""
     prompt: np.ndarray
     max_new_tokens: int
     eos_id: Optional[int] = None
+    priority: int = 0
+    deadline_s: Optional[float] = None
 
 
 class ResultStream:
@@ -157,6 +197,11 @@ class ResultStream:
         self.next_input = 0
         self.history: List[int] = []
         self._eos: Optional[int] = None
+        self.priority = request.priority
+        self.admitted_seq = -1        # admission order, preemption tiebreak
+        self.preempted = 0            # times spilled back to the queue
+        self._spill = None            # PageSpill while waiting to restore
+        self._suffix_start = 0        # prompt tokens covered by shared KV
 
     @property
     def eos_hit(self) -> bool:
@@ -242,9 +287,43 @@ class Engine:
             CandidateCache(serve_cfg.candidate_cache_capacity)
             if beam and serve_cfg.use_candidate_cache else None)
 
-        self._queue: "deque[ResultStream]" = deque()
+        # -- multi-tenant machinery (DESIGN.md §12) --
+        assert serve_cfg.page_growth in ("reserve", "ondemand"), \
+            serve_cfg.page_growth
+        if serve_cfg.prefix_sharing or serve_cfg.spec_decode:
+            assert cfg.block == "attn", (
+                "prefix sharing / speculative decode need position-local "
+                "KV; SSM and hybrid caches carry recurrent state")
+        self.prefix_index = (PrefixIndex(self.pool.page_len)
+                             if serve_cfg.prefix_sharing else None)
+        self.draft = (ReplayDraft(serve_cfg.draft_capacity)
+                      if serve_cfg.spec_decode else NullDraft())
+        # prefix-sharing counters
+        self.share_lookups = 0
+        self.share_hits = 0           # admissions reusing >= 1 page
+        self.shared_pages_reused = 0  # pages NOT allocated thanks to trie
+        self.prefill_tokens_saved = 0
+        self.cow_copies = 0
+        self.trie_evictions = 0
+        # speculative-decode counters
+        self.verify_steps = 0
+        self.drafts_proposed = 0
+        self.drafts_accepted = 0
+        # scheduler counters
+        self.preemptions = 0
+        self.restores = 0
+        self.page_grows = 0
+        self.deadline_misses = 0
+        self._class_hists: Dict[int, Any] = {}
+
+        # Per-priority FIFO queues (higher class admits first; a blocked
+        # class blocks everything below it — no sneaking past a starved
+        # interactive request). Single-class traffic degenerates to the
+        # old global FIFO exactly.
+        self._queues: Dict[int, "deque[ResultStream]"] = {}
         self._active: Dict[int, ResultStream] = {}     # slot -> handle
         self._next_id = 0
+        self._admit_seq = 0
         # Bounded audit trails — a long-running engine must not grow host
         # memory per request served; counters carry the lifetime totals.
         keep = serve_cfg.retain_completed
@@ -266,6 +345,12 @@ class Engine:
                                  cache_dtype=serve_cfg.cache_dtype),
             donate_argnums=(4,))
         self._decode = jax.jit(make_paged_decode(cfg), donate_argnums=(2,))
+        # Multi-token paged forward: shared-prefix suffix prefill AND the
+        # speculative verify step share this one jitted function.
+        self._paged_prefill = (
+            jax.jit(make_paged_prefill(cfg), donate_argnums=(4,))
+            if (serve_cfg.prefix_sharing or serve_cfg.spec_decode)
+            else None)
         self._select_dense = jax.jit(self._build_dense_select())
         if beam:
             self._propose = jax.jit(self._build_propose())
@@ -329,8 +414,8 @@ class Engine:
         handle._eos = (request.eos_id if request.eos_id is not None
                        else self.scfg.eos_id)
         self._next_id += 1
-        self._queue.append(handle)
-        self._g_queue.set(len(self._queue))
+        self._queues.setdefault(handle.priority, deque()).append(handle)
+        self._g_queue.set(self.num_pending)
         return handle
 
     def swap_head_state(self, head_state) -> None:
@@ -353,10 +438,14 @@ class Engine:
         self.head_state = head_state
         if self.candidate_cache is not None:
             self.candidate_cache.bump_version()
+        # Replayed continuations were decoded by the OLD tree — a new
+        # draft from them would still be *verified* exactly (speculation
+        # never affects outputs), but it would stop matching, so flush.
+        self.draft.bump_version()
 
     @property
     def num_pending(self) -> int:
-        return len(self._queue)
+        return sum(len(q) for q in self._queues.values())
 
     @property
     def num_active(self) -> int:
@@ -368,7 +457,12 @@ class Engine:
         self._admit()
         if not self._active:
             return False
-        self._decode_and_retire()
+        if self.scfg.spec_decode:
+            self._spec_decode_and_retire()
+        else:
+            self._ensure_capacity({})
+            if self._active:
+                self._decode_and_retire()
         return True
 
     def run(self) -> None:
@@ -424,6 +518,15 @@ class Engine:
         # corresponds to a written position.
         mapped_pos = pool.num_mapped_pages * pool.page_len
         used_pos = sum(st.cache_pos for st in self._active.values())
+        # Admission-time reservation accounting: pages a lane maps but has
+        # not written into yet (whole pages past ceil(cache_pos/page_len)).
+        # Under worst-case reservation this is the fragmentation the
+        # "ondemand" growth policy exists to reclaim; reporting it apart
+        # from pages_in_use keeps the occupancy gauges meaningful.
+        reserved_unwritten = sum(
+            max(0, len(pool.lane_pages(slot))
+                - -(-st.cache_pos // pool.page_len))
+            for slot, st in self._active.items())
         out = {
             "completed": self.completed_count,
             "decode_steps": self.decode_steps,
@@ -442,6 +545,9 @@ class Engine:
             "n_pages": pool.n_pages,
             "page_len": pool.page_len,
             "pages_in_use": pool.num_mapped_pages,
+            "pages_reserved_unwritten": reserved_unwritten,
+            "pages_cached": pool.num_cached_pages,
+            "pages_free": pool.num_free_pages,
             "peak_pages_in_use": self.peak_pages_in_use,
             "page_occupancy": pool.num_mapped_pages / pool.n_pages,
             "mean_page_occupancy": (
@@ -463,6 +569,51 @@ class Engine:
             lookups = cc["hits"] + cc["misses"]
             self.registry.gauge("serve/candidate_cache_hit_rate").set(
                 cc["hits"] / lookups if lookups else 0.0)
+        if self.prefix_index is not None:
+            hit_rate = (self.share_hits / self.share_lookups
+                        if self.share_lookups else 0.0)
+            out["prefix"] = {
+                "lookups": self.share_lookups,
+                "hits": self.share_hits,
+                "hit_rate": hit_rate,
+                "pages_reused": self.shared_pages_reused,
+                "prefill_tokens_saved": self.prefill_tokens_saved,
+                "cow_copies": self.cow_copies,
+                "evictions": self.trie_evictions,
+                "trie_nodes": self.prefix_index.n_nodes,
+                "trie_tails": self.prefix_index.n_tails,
+            }
+            self.registry.gauge("serve/prefix_hit_rate").set(hit_rate)
+            self.registry.gauge("serve/pages_cached").set(
+                pool.num_cached_pages)
+        if self.scfg.spec_decode:
+            mean_acc = (self.drafts_accepted / self.verify_steps
+                        if self.verify_steps else 0.0)
+            out["spec"] = {
+                "verify_steps": self.verify_steps,
+                "drafts_proposed": self.drafts_proposed,
+                "drafts_accepted": self.drafts_accepted,
+                "mean_accepted": mean_acc,
+                # tokens emitted per launch = accepted + the bonus token
+                "mean_emitted_per_step": 1.0 + mean_acc,
+            }
+            store = getattr(self.draft, "store", None)
+            if store is not None:
+                out["spec"]["draft_store"] = {
+                    "hits": store.hits, "misses": store.misses,
+                    "entries": len(store._map)}
+            self.registry.gauge("serve/spec_mean_accepted").set(mean_acc)
+        out["sched"] = {
+            "preemptions": self.preemptions,
+            "restores": self.restores,
+            "page_grows": self.page_grows,
+            "deadline_misses": self.deadline_misses,
+            "page_growth": self.scfg.page_growth,
+            "per_class_latency": {pri: hist.snapshot()
+                                  for pri, hist in
+                                  sorted(self._class_hists.items())},
+        }
+        self.registry.gauge("serve/preemptions").set(self.preemptions)
         # Scheduler counters stay plain attributes (benchmarks reset the
         # peaks between warmup and the measured trace); the registry view
         # mirrors them at snapshot time.
@@ -478,41 +629,206 @@ class Engine:
     # -- scheduler internals --------------------------------------------
 
     def _admit(self) -> None:
-        """FIFO admission into free lanes + pages; prefill the admitted
-        prompts in one padded batched call (or one call per request with
-        ``batched_prefill=False`` — same bytes out, oracle-tested).
-
-        Head-of-line order is preserved unconditionally (a request is never
+        """Class-ordered admission: scan SLA classes high→low, FIFO within
+        a class, and a blocked class blocks everything below it (no
+        sneaking past a starved interactive request). Head-of-line order
+        *within* a class is preserved unconditionally (a request is never
         skipped in favour of a later one, even when a later, smaller
         request would fit the remaining pages) — the fairness property the
-        tests pin down.
+        tests pin down; single-class traffic reproduces the old global
+        FIFO exactly.
+
+        Per request, resources come in escalating order: free pages →
+        eviction of cached prefix pages (LRU leaf-first) → preemption of
+        strictly-lower-class lanes (spill-and-restore). Prompts (or, with
+        sharing, their unmatched suffixes) are prefilled in one padded
+        batched call (or one call per request with
+        ``batched_prefill=False`` — same bytes out, oracle-tested).
         """
-        batch: List[ResultStream] = []
-        while self._queue:
-            head = self._queue[0]
-            need = self.pool.pages_needed(
-                head.request.prompt.size + head.request.max_new_tokens)
-            if not self.pool.can_admit(need):
+        batch: List[ResultStream] = []        # legacy full-prompt prefill
+        suffix_jobs: List[ResultStream] = []  # sharing-path prefill
+        admitted: List[ResultStream] = []
+        for pri in sorted(self._queues, reverse=True):
+            q = self._queues[pri]
+            while q:
+                if not self._try_admit(q[0], batch, suffix_jobs, admitted):
+                    break
+                q.popleft()
+            if q:
                 break
-            handle = self._queue.popleft()
-            lane, _pages = self.pool.alloc(need)
-            prompt = handle.request.prompt
-            handle.slot = lane
-            handle.cache_pos = int(prompt.size)
-            handle.next_input = int(prompt[-1])
-            handle.history = [int(t) for t in prompt]
-            batch.append(handle)
-            if not self.scfg.batched_prefill:
-                self._prefill_batch([handle])
-                batch.clear()
+        for pri in [p for p, q in self._queues.items() if not q]:
+            del self._queues[pri]
         if batch:
             self._prefill_batch(batch)
+        if suffix_jobs:
+            self._flush_suffix_prefill(suffix_jobs)
+        self._finish_admission(admitted)
         self.peak_active = max(self.peak_active, len(self._active))
         self.peak_pages_in_use = max(self.peak_pages_in_use,
                                      self.pool.num_mapped_pages)
-        self._g_queue.set(len(self._queue))
+        self._g_queue.set(self.num_pending)
         self._g_active.set(len(self._active))
         self._g_pages.set(self.pool.num_mapped_pages / self.pool.n_pages)
+
+    def _try_admit(self, h: ResultStream, batch: List[ResultStream],
+                   suffix_jobs: List[ResultStream],
+                   admitted: List[ResultStream]) -> bool:
+        """Admit one head-of-class request if its resources can be found
+        (free → evict cached → preempt lower classes), else False."""
+        pool, scfg = self.pool, self.scfg
+        match = None
+        counted_lookup = False
+        while True:
+            if h._spill is not None:
+                need = h._spill.n_pages       # exact resume footprint
+                free_needed = need
+            else:
+                prompt = h.request.prompt
+                # "reserve": worst-case pages up front (a request admitted
+                # is a request that finishes). "ondemand": admit on pages
+                # for the prompt + first decode write; grow at boundaries.
+                horizon = (prompt.size + h.request.max_new_tokens
+                           if scfg.page_growth == "reserve"
+                           else prompt.size + 1)
+                need = pool.pages_needed(horizon)
+                if self.prefix_index is not None:
+                    match = self.prefix_index.match(prompt)
+                    if not counted_lookup:
+                        self.share_lookups += 1
+                        counted_lookup = True
+                # A matched COW tail still consumes one free page (the
+                # private copy) — only its *prefill* is saved, not the
+                # byte; matched full pages are pure savings.
+                free_needed = need - (len(match.pages) if match else 0)
+            if pool.num_free_lanes >= 1 and \
+                    pool.num_free_pages >= free_needed:
+                break
+            if (self.prefix_index is not None
+                    and self.prefix_index.evict_lru(pool)):
+                # Re-match after every eviction: the LRU choice may have
+                # pruned part of our own matched path.
+                self.trie_evictions += 1
+                continue
+            if scfg.preemption and self._preempt_one(h.priority):
+                continue
+            return False
+
+        if h._spill is not None:
+            lane, _pages = pool.restore(h._spill)
+            h._spill = None
+            h.slot = lane
+            self.restores += 1
+            admitted.append(h)
+            return True
+
+        prompt = h.request.prompt
+        if match is not None and (match.pages
+                                  or match.tail_page is not None):
+            shared = list(match.pages)
+            tail_idx = None
+            if match.tail_page is not None:
+                tail_idx = len(shared)
+                shared.append(match.tail_page)
+            lane, _priv = pool.alloc_shared(shared, need - len(shared))
+            if tail_idx is not None:
+                pool.cow(lane, tail_idx)
+                self.cow_copies += 1
+            covered = match.tokens_matched + match.tail_len
+            self.share_hits += 1
+            self.shared_pages_reused += len(shared)
+            self.prefill_tokens_saved += covered
+        else:
+            lane, _pages = pool.alloc(need)
+            covered = 0
+        h.slot = lane
+        h.cache_pos = int(prompt.size)
+        h.next_input = int(prompt[-1])
+        h.history = [int(t) for t in prompt]
+        h._suffix_start = covered
+        if self.prefix_index is not None:
+            if covered < prompt.size:
+                suffix_jobs.append(h)
+                if not scfg.batched_prefill:
+                    self._flush_suffix_prefill(suffix_jobs)
+                    suffix_jobs.clear()
+        else:
+            batch.append(h)
+            if not scfg.batched_prefill:
+                self._prefill_batch(batch)
+                batch.clear()
+        admitted.append(h)
+        return True
+
+    def _finish_admission(self, admitted: List[ResultStream]) -> None:
+        """Post-flush bookkeeping, in admission order. Runs after the
+        prefill launches so trie registration only ever exposes pages
+        whose KV bytes are already valid."""
+        now = time.perf_counter()
+        for h in admitted:
+            if h.admitted_at is None:       # first admission only
+                h.admitted_at = now
+                self._h_admission.observe(now - h.submitted_at)
+            h.admitted_seq = self._admit_seq
+            self._admit_seq += 1
+            self.admission_order.append(h.request_id)
+            self._active[h.slot] = h
+            if (self.prefix_index is not None and not h.tokens
+                    and h.cache_pos == h.request.prompt.size):
+                self.prefix_index.insert(
+                    h.request.prompt, self.pool.lane_pages(h.slot),
+                    self.pool)
+
+    def _spill_to_queue(self, st: ResultStream) -> None:
+        """Preempt a running lane: device→host byte image of its pages +
+        lane rows, release everything, requeue at the FRONT of its class
+        (it lost its turn through no fault of its own). Restore is
+        byte-exact, so the request's output is unchanged."""
+        st._spill = self.pool.spill(st.slot)
+        self.pool.release(st.slot)
+        del self._active[st.slot]
+        st.slot = None
+        st.preempted += 1
+        self.preemptions += 1
+        self._queues.setdefault(st.priority, deque()).appendleft(st)
+
+    def _preempt_one(self, above: int) -> bool:
+        """Spill the youngest-admitted lane of strictly lower class than
+        ``above``. Youngest first: it has the least sunk prefill/decode
+        work and the shortest spill image on average."""
+        victims = [st for st in self._active.values()
+                   if st.priority < above]
+        if not victims:
+            return False
+        self._spill_to_queue(max(victims, key=lambda s: s.admitted_seq))
+        return True
+
+    def _ensure_capacity(self, extra: Dict[int, int]) -> None:
+        """On-demand page growth: before a decode/verify launch, every
+        active lane must map pages covering its write positions this step
+        (``cache_pos .. cache_pos + extra[slot]``). Escalation mirrors
+        admission (grow → evict cached → preempt lower → spill *self*);
+        a lane spilled here simply sits out the step and resumes
+        byte-exact later. No-op under the "reserve" policy."""
+        if self.scfg.page_growth != "ondemand":
+            return
+        pool = self.pool
+        for slot in list(self._active):
+            st = self._active.get(slot)
+            if st is None:
+                continue                    # preempted by an earlier lane
+            need = pool.pages_needed(st.cache_pos + extra.get(slot, 0) + 1)
+            while len(pool.lane_pages(slot)) < need:
+                if pool.grow(slot, need - len(pool.lane_pages(slot))):
+                    self.page_grows += 1
+                    break
+                if (self.prefix_index is not None
+                        and self.prefix_index.evict_lru(pool)):
+                    self.trie_evictions += 1
+                    continue
+                if self.scfg.preemption and self._preempt_one(st.priority):
+                    continue
+                self._spill_to_queue(st)
+                break
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -555,14 +871,8 @@ class Engine:
                 self._flush_prefill(group)
         else:
             self._flush_prefill(handles)
-        # Admission bookkeeping in SUBMISSION order, not flush order: the
-        # by-length grouping above must not reorder the FIFO audit trail.
-        now = time.perf_counter()
-        for h in handles:
-            h.admitted_at = now
-            self._h_admission.observe(now - h.submitted_at)
-            self.admission_order.append(h.request_id)
-            self._active[h.slot] = h
+        # Admission bookkeeping (SUBMISSION order, independent of flush
+        # grouping) happens in _finish_admission after every launch.
 
     def _flush_prefill(self, handles: List[ResultStream]) -> None:
         pool = self.pool
@@ -583,6 +893,40 @@ class Engine:
                                            lanes, pool.cache, ptab)
             del hid   # first output token comes from the decode step,
             #           matching the lock-step path token-for-token
+            pool.swap_cache(new_cache)
+        self.prefill_calls += 1
+
+    def _flush_suffix_prefill(self, handles: List[ResultStream]) -> None:
+        """Sharing-path prefill: each admitted prompt runs only its
+        UNMATCHED suffix through the paged multi-token step — attention
+        gathers the shared prefix pages through the lane's page table, so
+        the suffix K/V comes out byte-identical to a full prefill while
+        the matched tokens' compute and writes are skipped entirely.
+        Rows and lengths pad to powers of two; padded rows carry an
+        all-sink page table and zero length (writes routed to the sink).
+        """
+        pool = self.pool
+        jobs = [h for h in handles
+                if h._suffix_start < h.request.prompt.size]
+        if not jobs:
+            return                  # fully-matched prompts: nothing to run
+        n_rows = self._bucket(len(jobs))
+        s_pad = self._bucket(max(h.request.prompt.size - h._suffix_start
+                                 for h in jobs))
+        tokens = np.zeros((n_rows, s_pad), np.int32)
+        start = np.zeros((n_rows,), np.int32)
+        lengths = np.zeros((n_rows,), np.int32)
+        ptab = np.full((n_rows, pool.max_pages), pool.sink, np.int32)
+        for i, h in enumerate(jobs):
+            suffix = h.request.prompt[h._suffix_start:]
+            tokens[i, :suffix.size] = suffix
+            start[i] = h._suffix_start
+            lengths[i] = suffix.size
+            ptab[i] = pool.page_table[h.slot]
+        with span("serve/phase/prefill", self.registry):
+            hid, new_cache = self._paged_prefill(
+                self.params, tokens, start, lengths, pool.cache, ptab)
+            del hid   # first output token comes from the decode step
             pool.swap_cache(new_cache)
         self.prefill_calls += 1
 
@@ -608,52 +952,157 @@ class Engine:
         n_live = len(self._active)
         for slot in list(self._active):
             st = self._active[slot]
-            tok = int(next_tokens[slot])
-            if st.first_token_at is None:
-                st.first_token_at = now
-                self._h_ttft.observe(now - st.submitted_at)
-            st.tokens.append(tok)
-            st.history.append(tok)
-            st.next_input = tok
-            st.cache_pos += 1
-            done = (len(st.tokens) >= st.request.max_new_tokens
-                    or (st._eos is not None and tok == st._eos)
-                    or st.cache_pos >= self.scfg.max_len)
-            if done:
-                st.done = True
-                st.finished_at = now
-                del self._active[slot]
-                self.pool.release(slot)
-                self.completed.append(st)
-                self.completed_count += 1
-                self._h_latency.observe(st.finished_at - st.submitted_at)
-                if self.exporter is not None:
-                    self.exporter.emit({
-                        "event": "request", "request_id": st.request_id,
-                        "tokens": len(st.tokens),
-                        "admission_wait_s": (st.admitted_at
-                                             - st.submitted_at),
-                        "ttft_s": st.first_token_at - st.submitted_at,
-                        "latency_s": st.finished_at - st.submitted_at})
+            self._emit_token(slot, st, int(next_tokens[slot]), now)
         self._c_tokens.inc(n_live)
+        self._post_step_metrics()
+
+    def _emit_token(self, slot: int, st: ResultStream, tok: int,
+                    now: float) -> bool:
+        """Append one generated token and retire the request when any
+        stop condition fires (the same checks, in the same order, as the
+        lock-step oracle). Returns True when the request retired."""
+        if st.first_token_at is None:
+            st.first_token_at = now
+            self._h_ttft.observe(now - st.submitted_at)
+        st.tokens.append(tok)
+        st.history.append(tok)
+        st.next_input = tok
+        st.cache_pos += 1
+        done = (len(st.tokens) >= st.request.max_new_tokens
+                or (st._eos is not None and tok == st._eos)
+                or st.cache_pos >= self.scfg.max_len)
+        if done:
+            st.done = True
+            st.finished_at = now
+            del self._active[slot]
+            self.pool.release(slot)
+            self.completed.append(st)
+            self.completed_count += 1
+            latency = st.finished_at - st.submitted_at
+            self._h_latency.observe(latency)
+            self._class_hist(st.priority).observe(latency)
+            if (st.request.deadline_s is not None
+                    and latency > st.request.deadline_s):
+                self.deadline_misses += 1
+            if self.exporter is not None:
+                self.exporter.emit({
+                    "event": "request", "request_id": st.request_id,
+                    "tokens": len(st.tokens), "priority": st.priority,
+                    "preempted": st.preempted,
+                    "admission_wait_s": (st.admitted_at
+                                         - st.submitted_at),
+                    "ttft_s": st.first_token_at - st.submitted_at,
+                    "latency_s": latency})
+        return done
+
+    def _class_hist(self, priority: int):
+        h = self._class_hists.get(priority)
+        if h is None:
+            h = self.registry.histogram(f"serve/latency_s/class_{priority}")
+            self._class_hists[priority] = h
+        return h
+
+    def _post_step_metrics(self) -> None:
         self._g_active.set(len(self._active))
         self._g_pages.set(self.pool.num_mapped_pages / self.pool.n_pages)
         if (self.exporter is not None
                 and self.decode_steps % self.metrics_interval == 0):
             self.exporter.emit({
                 "event": "serve_step", "engine_step": self.decode_steps,
-                "queue_depth": len(self._queue), "active": len(self._active),
+                "queue_depth": self.num_pending,
+                "active": len(self._active),
                 "page_occupancy": (self.pool.num_mapped_pages
                                    / self.pool.n_pages)})
 
-    def _select(self, h) -> np.ndarray:
+    def _spec_decode_and_retire(self) -> None:
+        """Speculative step: draft → one batched multi-token verify →
+        exact accept/reject → retire.
+
+        Each lane's verify chain is ``[y_last, d1..dk]`` fed at positions
+        ``cache_pos .. cache_pos+k``; the target model's own greedy choice
+        at every chain position comes out of ONE launch. Acceptance is the
+        longest draft prefix that matches those choices, plus the bonus
+        token — the emitted tokens are exactly the lock-step sequence, so
+        speculation changes wall-clock only, never bytes (oracle-tested).
+        K/V written for rejected positions is dead on arrival: the next
+        step's writes land on top of it before causality can expose it.
+        """
+        scfg, pool = self.scfg, self.pool
+        drafts: Dict[int, List[int]] = {}
+        for slot, st in self._active.items():
+            # k is capped so the LAST chain write stays inside the
+            # request's budget: cache_pos+k <= prompt+max_new-1 (and the
+            # max_len retirement bound the oracle also respects).
+            cap = min(scfg.max_draft,
+                      st.request.max_new_tokens - len(st.tokens) - 1,
+                      scfg.max_len - 1 - st.cache_pos)
+            d = self.draft.propose(tuple(st.history), cap) if cap > 0 \
+                else []
+            drafts[slot] = [int(t) for t in d[:max(cap, 0)]]
+        self._ensure_capacity({s: len(d) for s, d in drafts.items()})
+        if not self._active:
+            return                      # capacity pressure spilled everyone
+        k_max = max(len(drafts[s]) for s in self._active)
+        s_pad = self._bucket(k_max + 1)
+        n = scfg.n_slots
+        tokens = np.zeros((n, s_pad), np.int32)
+        start = np.zeros((n,), np.int32)
+        lengths = np.zeros((n,), np.int32)
+        ptab = np.full((n, pool.max_pages), pool.sink, np.int32)
+        for slot, st in self._active.items():
+            chain = [st.next_input] + drafts[slot]
+            tokens[slot, :len(chain)] = chain
+            start[slot] = st.cache_pos
+            lengths[slot] = len(chain)
+            ptab[slot] = pool.page_table[slot]
+        with span("serve/phase/decode", self.registry):
+            h, new_cache = self._paged_prefill(self.params, tokens, start,
+                                               lengths, pool.cache, ptab)
+            pool.swap_cache(new_cache)
+        self.decode_steps += 1
+        self.verify_steps += 1
+        self._occupancy_sum += len(self._active)
+        self._page_occupancy_sum += pool.num_mapped_pages
+
+        with span("serve/phase/select", self.registry):
+            sel = np.asarray(self._select(h, multi=True))   # (n, s_pad)
+
+        now = time.perf_counter()
+        emitted = 0
+        for slot in list(self._active):
+            st = self._active[slot]
+            d = drafts[slot]
+            self.drafts_proposed += len(d)
+            a = 0
+            while a < len(d) and d[a] == int(sel[slot, a]):
+                a += 1
+            self.drafts_accepted += a
+            for j in range(a + 1):
+                tok = int(sel[slot, j])
+                # Feed the tree's own (possibly stale-feature) choice
+                # back to the draft source: next time this context
+                # repeats, the whole continuation replays as the draft.
+                self.draft.observe(tuple(st.history), tok)
+                emitted += 1
+                if self._emit_token(slot, st, tok, now):
+                    break
+        self._c_tokens.inc(emitted)
+        self._post_step_metrics()
+
+    def _select(self, h, multi: bool = False) -> np.ndarray:
         """Next-token selection for every slot (free rows give garbage that
-        the caller never reads)."""
+        the caller never reads). ``multi=True`` selects at EVERY position
+        of a (B, S, d) verify step — the head path (dense scores, beam
+        descent, re-scoring) is row-local over leading batch dims, so the
+        per-position choices are bitwise the single-token ones. The
+        candidate cache is bypassed in that mode (it keys whole-prefix
+        single steps; skipping it can only cost duplicate descent work,
+        never change a result)."""
         if not self.beam:
             return np.asarray(self._select_dense(self.params,
                                                  self.head_state, h))
 
-        cache = self.candidate_cache
+        cache = None if multi else self.candidate_cache
         cached: Dict[int, Any] = {}
         if cache is not None:
             for slot, st in self._active.items():

@@ -365,6 +365,51 @@ def make_batched_prefill(cfg: ModelConfig, page_len: int, sink_page: int,
     return batched_prefill
 
 
+def make_paged_prefill(cfg: ModelConfig):
+    """Multi-token forward *against the paged arena*: per-lane start
+    positions and page tables, S tokens per row.
+
+    Returns ``paged_prefill(params, tokens, start, lengths, arena,
+    page_tables)`` → ``(h (B, S, d), arena)``. Two serving paths share this
+    one compiled step (repro.serve, DESIGN.md §12):
+
+    - **shared-prefix suffix prefill**: a newly admitted request whose
+      prompt prefix is already resident in shared pages runs its *suffix*
+      through here — row r's tokens are ``prompt[start[r]:]``, attention
+      gathers the shared prefix pages through the page table, and only the
+      suffix K/V is computed and written. The prefix pays its prefill once
+      across every request that shares it.
+    - **speculative verify**: the draft chain ``[y_last, d1..dk]`` runs as
+      one batched multi-token step; the returned per-position hiddens feed
+      next-token selection at every draft position in a single launch.
+
+    ``start`` (B,) is each row's first logical position, ``lengths`` (B,)
+    its true token count — positions at or beyond a row's length (row/
+    length padding) write to the allocator's sink page via ``write_mask``
+    and their hiddens are garbage the caller masks host-side. Unlike
+    :func:`make_batched_prefill` there is no fresh contiguous cache: the
+    forward reads and writes the arena directly, so earlier tokens'
+    K/V — shared prefix pages or the rows' own prior decode writes — are
+    visible exactly as the contiguous layout would present them
+    (byte-identity pinned by the sharing/speculation oracle tests).
+    Attention-family models only: an SSM branch carries recurrent state
+    that is neither paged nor position-local.
+    """
+    assert cfg.block == "attn", (
+        "paged multi-token steps (prefix sharing / speculative verify) "
+        "need position-local state; SSM/hybrid caches are recurrent")
+
+    def paged_prefill(params, tokens, start, lengths, arena, page_tables):
+        s = tokens.shape[1]
+        wmask = jnp.arange(s, dtype=jnp.int32)[None] < lengths[:, None]
+        h, new_arena, _ = transformer.forward(
+            params, cfg, tokens, cache=arena, cache_pos=start,
+            page_table=page_tables, write_mask=wmask)
+        return h, new_arena
+
+    return paged_prefill
+
+
 def make_paged_decode(cfg: ModelConfig):
     """Masked decode step over a paged pool: per-lane ``cache_pos`` and
     page tables.

@@ -252,6 +252,34 @@ def test_prometheus_text_and_console_summary():
     assert console_summary(Registry()) == "== metrics: (empty) =="
 
 
+def test_metrics_server_scrape_round_trip():
+    """The pull endpoint serves a LIVE registry: scrape, mutate, re-scrape
+    sees the new value; unknown paths 404; ephemeral port on port=0."""
+    import urllib.error
+    import urllib.request
+
+    from repro.obs import start_metrics_server
+
+    r = Registry()
+    c = r.counter("serve/requests")
+    c.inc(3)
+    with start_metrics_server(r, port=0, host="127.0.0.1") as srv:
+        assert srv.port > 0
+        base = f"http://127.0.0.1:{srv.port}"
+        body = urllib.request.urlopen(f"{base}/metrics").read().decode()
+        assert body == prometheus_text(r)
+        assert "serve_requests 3" in body
+        c.inc(2)            # live registry, not a snapshot at bind time
+        body = urllib.request.urlopen(base + "/").read().decode()
+        assert "serve_requests 5" in body
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(f"{base}/nope")
+        assert e.value.code == 404
+    # Server is down after close().
+    with pytest.raises(urllib.error.URLError):
+        urllib.request.urlopen(f"{base}/metrics", timeout=0.5)
+
+
 # ---------------------------------------------------------------------------
 # Integration: the documented metric names are what the systems emit
 # ---------------------------------------------------------------------------

@@ -9,9 +9,10 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.models import lm_head, transformer
 from repro.models.config import ModelConfig
-from repro.serve import (CandidateCache, Engine, PagedPool, Request,
-                         ServeConfig, lockstep_decode)
-from repro.serve.traffic import TrafficConfig, drive, make_workload
+from repro.serve import (CandidateCache, ContinuationStore, Engine,
+                         PagedPool, Request, ServeConfig, lockstep_decode)
+from repro.serve.traffic import (TrafficConfig, drive, make_heavy_tail_mix,
+                                 make_shared_prefix_burst, make_workload)
 
 pytestmark = pytest.mark.serve
 
@@ -633,3 +634,515 @@ class TestMeshScoring:
         eng.run()
         np.testing.assert_array_equal(
             np.stack([h.result() for h in handles]), ref)
+
+
+# ---------------------------------------------------------------------------
+# Refcounted / shared pages (PR 9): hypothesis property suite
+# ---------------------------------------------------------------------------
+
+def _fill_arena(pool, seed):
+    """Overwrite the K/V arena with recognizable random bytes so byte-
+    identity checks on page ops are meaningful."""
+    rng = np.random.default_rng(seed)
+    cache = dict(pool.cache)
+    for key in ("k", "v"):
+        cache[key] = jnp.asarray(
+            rng.normal(size=cache[key].shape).astype(np.float32))
+    pool.cache = cache
+
+
+def _drive_shared_allocator(pool, seed, n_ops):
+    """Random interleaving of alloc / alloc_shared / cow / release /
+    register / unregister / cached-revival, mirroring refcounts
+    independently of the pool's bookkeeping."""
+    rng = np.random.default_rng(seed)
+    live = {}                       # lane -> pages in logical order
+    for _ in range(n_ops):
+        r = rng.random()
+        if live and r < 0.25:
+            lane = sorted(live)[rng.integers(0, len(live))]
+            got = pool.release(lane)
+            assert sorted(got) == sorted(live.pop(lane)), \
+                "release must unref exactly the lane's pages"
+        elif live and r < 0.40:
+            # Share a live lane's prefix (+ maybe private pages).
+            donor = sorted(live)[rng.integers(0, len(live))]
+            pages = pool.lane_pages(donor)
+            k = int(rng.integers(1, len(pages) + 1))
+            npriv = int(rng.integers(0, pool.max_pages - k + 1))
+            out = pool.alloc_shared(pages[:k], npriv)
+            if out is not None:
+                lane, priv = out
+                live[lane] = pages[:k] + priv
+        elif live and r < 0.50:
+            # COW a genuinely-shared page (rc > 1) when a copy target
+            # exists.
+            cands = [(lane, i) for lane, pages in live.items()
+                     for i, p in enumerate(pages) if pool.refcount(p) > 1]
+            if cands and pool.num_free_pages:
+                lane, i = cands[rng.integers(0, len(cands))]
+                live[lane][i] = pool.cow(lane, i)
+        elif live and r < 0.60:
+            lane = sorted(live)[rng.integers(0, len(live))]
+            pages = live[lane]
+            pool.register(pages[:int(rng.integers(1, len(pages) + 1))])
+        elif r < 0.68:
+            regs = sorted(pool._registered)
+            if regs:
+                pool.unregister([regs[rng.integers(0, len(regs))]])
+        elif pool._cached and r < 0.76:
+            # Revive cached (rc == 0, bytes pinned) pages into a new lane.
+            cached = sorted(pool._cached)
+            k = int(rng.integers(1, min(len(cached), pool.max_pages) + 1))
+            out = pool.alloc_shared(cached[:k], 0)
+            if out is not None:
+                lane, _ = out
+                live[lane] = cached[:k]
+        else:
+            need = int(rng.integers(1, pool.max_pages + 1))
+            expect = pool.can_admit(need)
+            out = pool.alloc(need)
+            assert (out is not None) == expect
+            if out is not None:
+                lane, pages = out
+                live[lane] = pages
+        pool.check_invariants()
+        # Refcount == number of mapping lanes, for every page.
+        counts = {}
+        for pages in live.values():
+            for p in pages:
+                counts[p] = counts.get(p, 0) + 1
+        for p in range(pool.n_pages):
+            assert pool.refcount(p) == counts.get(p, 0)
+            # rc == 0  <=>  free-list or cached (never both, never lost).
+            in_free = p in pool._free_pages
+            assert (pool.refcount(p) == 0) == (in_free or pool.is_cached(p))
+            assert not (in_free and pool.is_cached(p))
+    return live
+
+
+class TestRefcountedPool:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**20), n_ops=st.integers(1, 50))
+    def test_sharing_preserves_partition_and_refcounts(self, seed, n_ops):
+        pool = _fresh_pool(n_lanes=4, n_pages=8, page_len=3, max_len=9)
+        _drive_shared_allocator(pool, seed, n_ops)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**20), n_ops=st.integers(1, 50))
+    def test_drained_unregistered_pool_matches_fresh(self, seed, n_ops):
+        """Release every lane, drop every registration: the pool must be
+        indistinguishable from fresh (no page leaked through sharing,
+        caching, or COW)."""
+        pool = _fresh_pool(n_lanes=4, n_pages=8, page_len=3, max_len=9)
+        live = _drive_shared_allocator(pool, seed, n_ops)
+        for lane in list(live):
+            pool.release(lane)
+        pool.unregister(sorted(pool._registered))
+        fresh = _fresh_pool(n_lanes=4, n_pages=8, page_len=3, max_len=9)
+        assert set(pool._free_pages) == set(fresh._free_pages)
+        assert len(pool._free_pages) == pool.n_pages     # no double-free
+        assert set(pool._free_lanes) == set(fresh._free_lanes)
+        assert pool._pages_of == {} and pool._refcount == {}
+        assert pool._cached == set()
+        np.testing.assert_array_equal(pool.page_table, fresh.page_table)
+
+    def test_cached_lifecycle_and_eviction_accounting(self):
+        """register → release parks pages as cached (not free); cached
+        pages satisfy can_admit_evicting but not can_admit; retain revives
+        them; unregister frees them."""
+        pool = _fresh_pool(n_lanes=2, n_pages=4, page_len=3, max_len=9)
+        lane, pages = pool.alloc(3)
+        pool.register(pages[:2])
+        pool.release(lane)
+        assert pool.num_cached_pages == 2 and pool.num_free_pages == 2
+        assert not pool.can_admit(3) and pool.can_admit_evicting(3)
+        # Revive one cached page into a new lane without touching bytes.
+        lane2, _ = pool.alloc_shared(pages[:1], 1)
+        assert pool.refcount(pages[0]) == 1
+        assert not pool.is_cached(pages[0])
+        pool.release(lane2)
+        pool.unregister(pages[:2])
+        assert pool.num_cached_pages == 0
+        assert pool.num_free_pages == pool.n_pages
+        pool.check_invariants()
+
+    def test_retain_of_free_page_rejected(self):
+        pool = _fresh_pool()
+        free_page = pool._free_pages[-1]
+        with pytest.raises(AssertionError):
+            pool.retain(free_page)
+
+    def test_cow_copies_bytes_and_preserves_donor(self):
+        """COW gives the caller a private byte-identical page; the donor
+        lane keeps its mapping and the refcounts split 2 -> 1 + 1."""
+        pool = _fresh_pool()
+        _fill_arena(pool, seed=3)
+        lane_a, pages = pool.alloc(2)
+        lane_b, priv = pool.alloc_shared(pages, 0)
+        assert priv == [] and pool.refcount(pages[1]) == 2
+        src = pages[1]
+        before = {k: np.asarray(pool.cache[k][:, src]) for k in ("k", "v")}
+        new = pool.cow(lane_b, 1)
+        assert new != src
+        assert pool.lane_pages(lane_a) == pages          # donor untouched
+        assert pool.lane_pages(lane_b) == [pages[0], new]
+        assert pool.refcount(src) == 1 and pool.refcount(new) == 1
+        for k in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(pool.cache[k][:, new]), before[k])
+        pool.check_invariants()
+
+    def test_spill_restore_byte_identity(self):
+        """spill → clobber the arena → restore reproduces the lane's pages
+        byte for byte in freshly-allocated pages."""
+        pool = _fresh_pool(n_lanes=2, n_pages=6, page_len=3, max_len=9)
+        _fill_arena(pool, seed=5)
+        lane, pages = pool.alloc(3)
+        idx = np.asarray(pages)
+        expect = {k: np.asarray(pool.cache[k][:, idx]) for k in ("k", "v")}
+        img = pool.spill(lane)
+        assert img.n_pages == 3 and img.nbytes() > 0
+        for k in ("k", "v"):
+            np.testing.assert_array_equal(img.pages[k], expect[k])
+        pool.release(lane)
+        pool.cache = {k: jnp.zeros_like(v) for k, v in pool.cache.items()}
+        lane2, pages2 = pool.restore(img)
+        for k in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(pool.cache[k][:, np.asarray(pages2)]),
+                expect[k])
+        pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: byte-identity, COW tails, trie eviction
+# ---------------------------------------------------------------------------
+
+def _mt_engine(**kw):
+    base = dict(n_slots=N_SLOTS, max_len=MAX_LEN, beam=BEAM, page_len=3,
+                n_pages=8, cache_dtype=jnp.float32)
+    base.update(kw)
+    return Engine(CFG, HCFG, PARAMS, HEAD_STATE, ServeConfig(**base))
+
+
+class TestPrefixSharing:
+    def test_shared_template_byte_identity_and_hits(self):
+        """Requests sharing a 6-token template through 2 lanes: later
+        admissions map the template's pages instead of re-prefilling, and
+        every output still matches the per-request oracle."""
+        rng = np.random.default_rng(101)
+        template = rng.integers(0, CFG.vocab_size, 6).astype(np.int32)
+        prompts = [
+            template.copy(),
+            np.concatenate([template,
+                            rng.integers(0, CFG.vocab_size, 2)]),
+            np.concatenate([template,
+                            rng.integers(0, CFG.vocab_size, 3)]),
+            template.copy(),
+        ]
+        prompts = [np.asarray(p, np.int32) for p in prompts]
+        gen = 3
+        refs = [_lockstep(p[None], gen, BEAM)[0] for p in prompts]
+        eng = _mt_engine(prefix_sharing=True)
+        handles = [eng.submit(Request(prompt=p, max_new_tokens=gen))
+                   for p in prompts]
+        eng.run()
+        for h, ref in zip(handles, refs):
+            np.testing.assert_array_equal(h.result(), ref)
+        st = eng.stats()
+        assert st["prefix"]["hits"] >= 1
+        assert st["prefix"]["pages_reused"] >= 1
+        assert st["prefix"]["prefill_tokens_saved"] > 0
+        # Cached prefix pages are accounted apart from live ones.
+        assert st["pages_in_use"] == 0 and st["pages_cached"] > 0
+        eng.pool.check_invariants()
+
+    def test_exact_repeat_takes_cow_tail(self):
+        """An exact prompt repeat (5 tokens = 1 full chunk + 2-token tail
+        at page_len 3) revives the cached chunk AND COWs the partial tail
+        page — zero prefill — and still matches the oracle."""
+        rng = np.random.default_rng(103)
+        prompt = rng.integers(0, CFG.vocab_size, 5).astype(np.int32)
+        gen = 3
+        ref = _lockstep(prompt[None], gen, BEAM)[0]
+        eng = _mt_engine(prefix_sharing=True)
+        h1 = eng.submit(Request(prompt=prompt, max_new_tokens=gen))
+        eng.run()
+        h2 = eng.submit(Request(prompt=prompt.copy(), max_new_tokens=gen))
+        eng.run()
+        np.testing.assert_array_equal(h1.result(), ref)
+        np.testing.assert_array_equal(h2.result(), ref)
+        st = eng.stats()["prefix"]
+        assert st["cow_copies"] >= 1 and st["hits"] >= 1
+        assert st["prefill_tokens_saved"] >= prompt.size
+        eng.pool.check_invariants()
+
+    def test_trie_eviction_under_page_pressure(self):
+        """A pool too small to cache every retired prefix must evict LRU
+        trie entries to admit new prompts — and keep serving correctly."""
+        rng = np.random.default_rng(107)
+        gen = 3
+        eng = _mt_engine(prefix_sharing=True, n_slots=1, n_pages=4)
+        for _ in range(3):
+            p = rng.integers(0, CFG.vocab_size, 4).astype(np.int32)
+            ref = _lockstep(p[None], gen, BEAM)[0]
+            h = eng.submit(Request(prompt=p, max_new_tokens=gen))
+            eng.run()
+            np.testing.assert_array_equal(h.result(), ref)
+        assert eng.stats()["prefix"]["evictions"] >= 1
+        eng.pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Speculative decode: byte-identity over draft lengths x geometries
+# ---------------------------------------------------------------------------
+
+class TestSpeculativeDecode:
+    def _run_twice(self, eng, prompts, refs, gen):
+        """Cold pass then warm pass (replay drafts live) — byte-identical
+        both times."""
+        for _ in range(2):
+            handles = [eng.submit(Request(prompt=p, max_new_tokens=gen))
+                       for p in prompts]
+            eng.run()
+            for h, ref in zip(handles, refs):
+                np.testing.assert_array_equal(h.result(), ref)
+
+    @pytest.mark.parametrize("max_draft,page_len", [(1, 3), (4, 3)])
+    def test_byte_identity_drafts_x_geometry(self, max_draft, page_len,
+                                             n_pages=8):
+        rng = np.random.default_rng(113 + max_draft)
+        gen = 4
+        prompts = _prompts(rng, 3, lo=2, hi=5)
+        refs = [_lockstep(p[None], gen, BEAM)[0] for p in prompts]
+        eng = _mt_engine(spec_decode=True, max_draft=max_draft,
+                         page_len=page_len, n_pages=n_pages)
+        self._run_twice(eng, prompts, refs, gen)
+        st = eng.stats()["spec"]
+        assert st["verify_steps"] > 0
+        assert st["drafts_accepted"] > 0        # warm pass replayed
+        assert st["mean_emitted_per_step"] > 1.0
+        eng.pool.check_invariants()
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("max_draft,page_len", [(3, 1), (2, 7)])
+    def test_byte_identity_odd_geometries(self, max_draft, page_len):
+        # n_pages=0: full per-lane reservation (page_len=1 needs 12/lane).
+        self.test_byte_identity_drafts_x_geometry(max_draft, page_len,
+                                                  n_pages=0)
+
+    def test_dense_head_spec_identity(self):
+        rng = np.random.default_rng(127)
+        gen = 4
+        prompts = _prompts(rng, 2, lo=3, hi=4)
+        refs = [_lockstep(p[None], gen, 0)[0] for p in prompts]
+        eng = _mt_engine(spec_decode=True, max_draft=3, beam=0)
+        self._run_twice(eng, prompts, refs, gen)
+
+    def test_sharing_and_spec_together(self):
+        """Both tentpole features on at once (the production shape):
+        repeats share pages AND replay whole draft chains."""
+        rng = np.random.default_rng(129)
+        prompt = rng.integers(0, CFG.vocab_size, 6).astype(np.int32)
+        gen = 4
+        ref = _lockstep(prompt[None], gen, BEAM)[0]
+        eng = _mt_engine(prefix_sharing=True, spec_decode=True, max_draft=3)
+        for _ in range(2):
+            h = eng.submit(Request(prompt=prompt.copy(),
+                                   max_new_tokens=gen))
+            eng.run()
+            np.testing.assert_array_equal(h.result(), ref)
+        st = eng.stats()
+        assert st["prefix"]["hits"] >= 1
+        assert st["spec"]["drafts_accepted"] > 0
+        eng.pool.check_invariants()
+
+
+class TestContinuationStore:
+    def test_chain_lru_and_version(self):
+        cs = ContinuationStore(capacity=3)
+        cs.put((1, 2), 3)
+        cs.put((1, 2, 3), 4)
+        cs.put((1, 2, 3, 4), 5)
+        assert cs.chain((1, 2), 5) == [3, 4, 5]     # walk caps at stored
+        cs.put((9,), 9)                             # evicts LRU (1, 2)
+        assert cs.get((1, 2)) is None
+        assert len(cs._map) == 3
+
+    def test_bump_version_orphans_stale_entries(self):
+        """A head-state swap must make every recorded continuation
+        unreachable — the tree that produced them no longer serves."""
+        cs = ContinuationStore(capacity=8)
+        cs.put((1, 2), 3)
+        assert cs.get((1, 2)) == 3
+        cs.bump_version()
+        assert cs.get((1, 2)) is None
+        cs.put((1, 2), 7)                  # new-version entry is reachable
+        assert cs.chain((1, 2), 2) == [7]
+
+    def test_ctx_window_bounds_key_length(self):
+        from repro.serve.spec import CTX_WINDOW
+        cs = ContinuationStore(capacity=4)
+        long_ctx = tuple(range(CTX_WINDOW + 50))
+        cs.put(long_ctx, 1)
+        # Any context agreeing on the trailing window hits the same entry.
+        assert cs.get((99,) * 7 + long_ctx[-CTX_WINDOW:]) == 1
+
+
+# ---------------------------------------------------------------------------
+# SLA scheduling: priority classes, preemption, on-demand growth
+# ---------------------------------------------------------------------------
+
+class TestSlaScheduling:
+    def test_priority_class_admitted_before_fifo_order(self):
+        """With one lane, a later-submitted higher class is admitted
+        first; outputs are unaffected (scheduling is work order only)."""
+        rng = np.random.default_rng(131)
+        pa = rng.integers(0, CFG.vocab_size, 3).astype(np.int32)
+        pb = rng.integers(0, CFG.vocab_size, 3).astype(np.int32)
+        refs = [_lockstep(p[None], 2, BEAM)[0] for p in (pa, pb)]
+        eng = _mt_engine(n_slots=1)
+        lo = eng.submit(Request(prompt=pa, max_new_tokens=2, priority=0))
+        hi = eng.submit(Request(prompt=pb, max_new_tokens=2, priority=5))
+        eng.run()
+        assert list(eng.admission_order) == [hi.request_id, lo.request_id]
+        np.testing.assert_array_equal(lo.result(), refs[0])
+        np.testing.assert_array_equal(hi.result(), refs[1])
+
+    def test_preemption_spill_restore_byte_identity(self):
+        """A low-class whale holding most of the pool is spilled for a
+        high-class arrival and restored after — BOTH outputs byte-match
+        the oracle (restore is exact, not a re-prefill)."""
+        rng = np.random.default_rng(137)
+        whale_p = rng.integers(0, CFG.vocab_size, 5).astype(np.int32)
+        quick_p = rng.integers(0, CFG.vocab_size, 4).astype(np.int32)
+        ref_w = _lockstep(whale_p[None], 7, BEAM)[0]
+        ref_q = _lockstep(quick_p[None], 3, BEAM)[0]
+        eng = _mt_engine(n_pages=6, preemption=True)
+        hw = eng.submit(Request(prompt=whale_p, max_new_tokens=7,
+                                priority=0))
+        eng.step()                  # whale admitted: reserves 4 of 6 pages
+        hq = eng.submit(Request(prompt=quick_p, max_new_tokens=3,
+                                priority=1))
+        eng.run()
+        np.testing.assert_array_equal(hw.result(), ref_w)
+        np.testing.assert_array_equal(hq.result(), ref_q)
+        st = eng.stats()["sched"]
+        assert st["preemptions"] >= 1 and st["restores"] >= 1
+        assert hw.preempted >= 1 and hq.preempted == 0
+        eng.pool.check_invariants()
+        assert eng.pool.num_in_use == 0
+
+    def test_ondemand_growth_packs_more_lanes(self):
+        """Two requests whose worst-case reservations exceed the pool:
+        "reserve" serializes them, "ondemand" runs both concurrently
+        (growing at page boundaries, spilling itself if the pool fills) —
+        same bytes out either way."""
+        rng = np.random.default_rng(139)
+        prompts = [rng.integers(0, CFG.vocab_size, 4).astype(np.int32)
+                   for _ in range(2)]
+        gen = 3
+        refs = [_lockstep(p[None], gen, BEAM)[0] for p in prompts]
+        active_after_admit = {}
+        for growth in ("reserve", "ondemand"):
+            eng = _mt_engine(n_pages=4, page_growth=growth)
+            handles = [eng.submit(Request(prompt=p, max_new_tokens=gen))
+                       for p in prompts]
+            eng.step()
+            active_after_admit[growth] = eng.num_active
+            eng.run()
+            for h, ref in zip(handles, refs):
+                np.testing.assert_array_equal(h.result(), ref)
+            if growth == "ondemand":
+                assert eng.stats()["sched"]["page_grows"] >= 1
+            eng.pool.check_invariants()
+        # The packing claim: same pool, same traffic, more concurrency.
+        assert active_after_admit["reserve"] == 1
+        assert active_after_admit["ondemand"] == 2
+
+    def test_reserved_unwritten_pages_reported(self):
+        """stats() splits reserved-but-unwritten pages from pages_in_use:
+        a freshly-admitted request under worst-case reservation holds
+        whole pages it has not written into yet."""
+        eng = _mt_engine(n_slots=1)
+        rng = np.random.default_rng(141)
+        prompt = rng.integers(0, CFG.vocab_size, 2).astype(np.int32)
+        eng.submit(Request(prompt=prompt, max_new_tokens=7))
+        eng.step()      # admitted: 3 pages reserved, 1 written (2 tokens)
+        st = eng.stats()
+        assert st["pages_in_use"] == 3
+        assert st["pages_reserved_unwritten"] == 2
+        eng.run()
+        assert eng.stats()["pages_reserved_unwritten"] == 0
+
+    def test_deadline_miss_counted(self):
+        eng = _mt_engine(n_slots=1)
+        rng = np.random.default_rng(143)
+        prompt = rng.integers(0, CFG.vocab_size, 3).astype(np.int32)
+        h = eng.submit(Request(prompt=prompt, max_new_tokens=2,
+                               deadline_s=1e-9))
+        eng.run()
+        assert h.done
+        assert eng.stats()["sched"]["deadline_misses"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Adversarial traffic generators
+# ---------------------------------------------------------------------------
+
+class TestAdversarialTraffic:
+    def test_shared_prefix_burst_shape(self):
+        tcfg = TrafficConfig(
+            n_requests=40, rate=100.0, gen_tokens=2, vocab_size=50,
+            n_templates=4, template_len=6, suffix_len=2,
+            exact_repeat_frac=0.3, burst=4, interactive_frac=0.5,
+            interactive_priority=2, seed=11)
+        wl = make_shared_prefix_burst(tcfg)
+        assert len(wl) == 40
+        arrivals = [t for t, _ in wl]
+        assert arrivals == sorted(arrivals) and arrivals[0] == 0.0
+        # Bursty: arrival instants repeat `burst` at a time.
+        assert len(set(arrivals)) <= len(wl) // tcfg.burst + 1
+        lens = {r.prompt.shape[0] for _, r in wl}
+        assert lens == {6, 8}               # template | template + suffix
+        # Zipf templates actually repeat, including exact prompt repeats.
+        keys = [tuple(r.prompt.tolist()) for _, r in wl]
+        assert len(set(keys)) < len(keys)
+        assert {r.priority for _, r in wl} == {0, 2}
+
+    def test_heavy_tail_mix_shape(self):
+        tcfg = TrafficConfig(
+            n_requests=64, rate=100.0, prompt_len=3, gen_tokens=2,
+            prompt_len_choices=(3, 5, 8), gen_tokens_choices=(2, 4),
+            vocab_size=50, interactive_frac=0.6, interactive_priority=1,
+            interactive_deadline_s=0.5, tail_alpha=1.2, seed=13)
+        wl = make_heavy_tail_mix(tcfg)
+        assert len(wl) == 64
+        pris = {r.priority for _, r in wl}
+        assert pris == {0, 1}
+        for _, r in wl:
+            if r.priority == 1:             # interactive probe
+                assert r.prompt.shape[0] == 3 and r.max_new_tokens == 2
+                assert r.deadline_s == 0.5
+            else:                           # batch job from the buckets
+                assert r.prompt.shape[0] in (3, 5, 8)
+                assert r.max_new_tokens in (2, 4)
+                assert r.deadline_s is None
+
+    def test_drive_reports_per_class_latency(self):
+        tcfg = TrafficConfig(
+            n_requests=8, rate=500.0, prompt_len=3, gen_tokens=2,
+            prompt_len_choices=(2, 3), gen_tokens_choices=(1, 2),
+            vocab_size=CFG.vocab_size, interactive_frac=0.5,
+            interactive_priority=1, seed=17)
+        wl = make_heavy_tail_mix(tcfg)
+        eng = _mt_engine()
+        res = drive(eng, wl, time_scale=0.0)
+        assert res["n_requests"] == 8
+        classes = res["per_class"]
+        assert set(classes) == {r.priority for _, r in wl}
+        for snap in classes.values():
+            assert snap["n"] >= 1
+            assert snap["latency_p99_ms"] >= snap["latency_p50_ms"] >= 0
+        assert sum(s["n"] for s in classes.values()) == 8
