@@ -2,8 +2,13 @@
 #
 #   make test         - full suite (what the roadmap calls tier-1 verify)
 #   make test-fast    - skip @pytest.mark.slow (subprocess launcher tests,
-#                       odd-page-geometry oracle sweeps)
+#                       odd-page-geometry oracle sweeps) and the chaos
+#                       suite (@pytest.mark.resilience)
 #   make test-serve   - serving-engine suite only (@pytest.mark.serve)
+#   make test-resilience - chaos suite only (@pytest.mark.resilience,
+#                       DESIGN.md §13): fault-injection schedules, the
+#                       train/genfit/serve degradation ladders, and the
+#                       kill-mid-checkpoint resume tests
 #   make bench-serve  - dense vs beam serving latency sweep over C
 #   make bench-engine - continuous-batching engine under Poisson traffic
 #                       (writes BENCH_engine.json: throughput, p50/p99,
@@ -13,6 +18,11 @@
 #                       traffic (shared-prefix bursts, heavy-tail SLA
 #                       mix): COW sharing concurrency, speculative
 #                       accept rate, FIFO-vs-SLA interactive p99; fast,
+#                       never writes BENCH_engine.json
+#   make bench-engine-faults - ONLY the resilience section (DESIGN.md
+#                       §13): degraded-mode serving under an injected
+#                       fault schedule — shed/deadline/poison status
+#                       mix, leak check, ok-p99 vs fault-free; fast,
 #                       never writes BENCH_engine.json
 #   make bench-tree-fit - generator fitting at scale: sequential oracle vs
 #                       level-parallel vs warm-start refresh + held-out
@@ -37,18 +47,21 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-serve bench-serve bench-engine \
-        bench-engine-adversarial \
+.PHONY: test test-fast test-serve test-resilience bench-serve \
+        bench-engine bench-engine-adversarial bench-engine-faults \
         bench-tree-fit bench-heads bench-snr bench-smoke obs-demo bench
 
 test:
 	$(PYTHON) -m pytest -x -q
 
 test-fast:
-	$(PYTHON) -m pytest -x -q -m "not slow"
+	$(PYTHON) -m pytest -x -q -m "not slow and not resilience"
 
 test-serve:
 	$(PYTHON) -m pytest -x -q -m serve
+
+test-resilience:
+	$(PYTHON) -m pytest -x -q -m "resilience and not slow"
 
 bench-serve:
 	$(PYTHON) -m benchmarks.bench_serve
@@ -58,6 +71,9 @@ bench-engine:
 
 bench-engine-adversarial:
 	$(PYTHON) -m benchmarks.bench_engine --traffic adversarial
+
+bench-engine-faults:
+	$(PYTHON) -m benchmarks.bench_engine --faults
 
 bench-tree-fit:
 	$(PYTHON) -m benchmarks.bench_tree_fit

@@ -29,7 +29,7 @@ slot, so the paged pool sustains more concurrent requests at equal bytes
 — the ``paged-vs-monolithic`` entry records peak concurrency and request
 throughput for both.
 
-A final *adversarial* section (PR 9) runs the multi-tenant traffic the
+An *adversarial* section (PR 9) runs the multi-tenant traffic the
 prefix-sharing / speculative-decode / SLA-scheduling stack targets:
 
 - shared-prefix bursts (Zipf-popular templates, bursty arrivals) through
@@ -40,6 +40,16 @@ prefix-sharing / speculative-decode / SLA-scheduling stack targets:
 - a heavy-tail SLA mix (short interactive probes + Pareto batch whales)
   under FIFO vs priority/preemption/on-demand-growth scheduling —
   headline: the interactive class's p99 drops vs FIFO on the same trace.
+
+A final *resilience* section (DESIGN.md §13) replays one request list
+through a fault-free unbounded engine and a bounded-queue +
+deadline-enforcing engine under a deterministic ``repro.resilience``
+fault plan (poisoned prefills, delayed decode steps, expired deadlines)
+— headline: every request ends in an explicit status
+(ok/error/deadline/shed), the pool drains back to all-free (no leaked
+lanes/pages), and the surviving ok-class p99 stays bounded.
+``--faults`` runs ONLY this section (fast iteration; never writes
+BENCH_engine.json).
 
 Reports request throughput and p50/p99 end-to-end latency per path, checks
 the engine's beam decode is byte-identical to the lock-step beam path on
@@ -66,6 +76,8 @@ import numpy as np
 from repro.models import lm_head, transformer
 from repro.models.config import ModelConfig
 from repro.obs import Registry
+from repro.resilience import faults as fault_inject
+from repro.resilience.faults import Fault, FaultPlan
 from repro.serve import Engine, Request, ServeConfig, TrafficConfig
 from repro.serve import (drive, lockstep_decode, make_heavy_tail_mix,
                          make_shared_prefix_burst, make_workload)
@@ -349,6 +361,107 @@ def _adversarial(cfg, hcfg, params, head_state, c: int, reg: Registry,
     return out
 
 
+def _resilience(cfg, hcfg, params, head_state, c: int, reg: Registry,
+                n_requests: int = 24) -> dict:
+    """Degraded-mode serving under an injected fault schedule (DESIGN.md
+    §13). One request list runs twice at the same count-based cadence
+    (submit 3, step once — admission pressure measured in engine steps,
+    not wall-clock, so the status mix is deterministic):
+
+    - baseline: fault-free, unbounded queue, no deadline enforcement —
+      every request must complete;
+    - degraded: bounded admission queue + deadline enforcement under a
+      deterministic FaultPlan (two poisoned prefills, periodic 10 ms
+      decode-step delays), with every 6th request carrying an
+      already-expired deadline.
+
+    The graceful-degradation claims tracked in BENCH_engine.json: every
+    request ends in an explicit status (ok / error / deadline / shed —
+    nothing hangs), the pool drains back to all-free (``no_leak``), and
+    the surviving ok-class p99 stays within a small factor of baseline
+    because shedding + deadline aborts convert overload into explicit
+    rejection instead of unbounded queueing delay.
+    """
+    rng = np.random.default_rng(c + 23)
+    reqs = [Request(prompt=rng.integers(0, c, PROMPT_LEN).astype(np.int32),
+                    max_new_tokens=GEN_TOKENS,
+                    deadline_s=0.0 if i % 6 == 4 else None)
+            for i in range(n_requests)]
+
+    def chaos_drive(engine):
+        handles = []
+        t0 = time.perf_counter()
+        for lo in range(0, len(reqs), 3):
+            for r in reqs[lo:lo + 3]:
+                handles.append(engine.submit(r))
+            engine.step()
+        engine.run()
+        return handles, time.perf_counter() - t0
+
+    def ok_stats(handles, elapsed):
+        lat = np.asarray([h.finished_at - h.submitted_at
+                          for h in handles if h.status == "ok"])
+        return {"n_ok": int(lat.size),
+                "throughput_rps": lat.size / elapsed,
+                "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "latency_p99_ms": float(np.percentile(lat, 99) * 1e3)}
+
+    scfg = dict(n_slots=SLOTS, max_len=PROMPT_LEN + GEN_TOKENS, beam=BEAM,
+                cache_dtype=jnp.float32)
+
+    engine = Engine(cfg, hcfg, params, head_state, ServeConfig(**scfg))
+    _warmup(engine, c)
+    handles, elapsed = chaos_drive(engine)
+    baseline = ok_stats(handles, elapsed)
+    # Enforcement is off, so even the expired-deadline requests finish
+    # (their miss lands in deadline_misses, not an abort).
+    assert baseline["n_ok"] == n_requests, baseline
+
+    engine = Engine(cfg, hcfg, params, head_state, ServeConfig(
+        max_queue=4, enforce_deadlines=True, **scfg))
+    _warmup(engine, c)          # site counters only tick under install()
+    plan = FaultPlan(
+        [Fault("serve/prefill", n, "raise") for n in (2, 7)]
+        + [Fault("serve/step", n, "delay", seconds=0.01)
+           for n in range(4, 20, 4)])
+    with fault_inject.install(plan):
+        handles, elapsed = chaos_drive(engine)
+    assert all(h.done for h in handles), "a faulted request never finished"
+    statuses: dict = {}
+    for h in handles:
+        statuses[h.status] = statuses.get(h.status, 0) + 1
+    degraded = ok_stats(handles, elapsed)
+    degraded["statuses"] = statuses
+    degraded["health"] = engine.health()
+
+    pool = engine.pool
+    pool.check_invariants()
+    out = {
+        "caveats": (
+            "CPU-hosted bench: the status mix and no_leak are "
+            "count-deterministic scheduling claims; absolute latencies "
+            "and the ok-p99 ratio are CPU-scale illustrations."),
+        "plan": json.loads(plan.to_json()),
+        "baseline": baseline,
+        "degraded": degraded,
+        "no_leak": bool(pool.num_free_lanes == SLOTS
+                        and pool.num_free_pages == pool.n_pages
+                        and engine.num_pending == 0
+                        and engine.num_active == 0),
+        "shed_rate": statuses.get("shed", 0) / n_requests,
+        "ok_p99_vs_baseline": (degraded["latency_p99_ms"]
+                               / max(1e-9, baseline["latency_p99_ms"])),
+    }
+    reg.gauge("bench/engine/resilience/shed_rate").set(out["shed_rate"])
+    reg.gauge("bench/engine/resilience/poisoned").set(
+        statuses.get("error", 0))
+    reg.gauge("bench/engine/resilience/deadline_aborts").set(
+        statuses.get("deadline", 0))
+    reg.gauge("bench/engine/resilience/ok_p99_vs_baseline").set(
+        out["ok_p99_vs_baseline"])
+    return out
+
+
 def _check_lockstep_match(cfg, hcfg, params, head_state, workload) -> bool:
     """Engine beam decode must equal lock-step make_serve_step(topk_beam=)
     byte-for-byte on the same prompts."""
@@ -367,7 +480,7 @@ def _check_lockstep_match(cfg, hcfg, params, head_state, workload) -> bool:
 
 def run(csv_rows: list, c_values=(1024, 32768, 262144), n_requests=24,
         rate=1000.0, json_path=None, write_json=True, sweep=True,
-        adv_requests=24) -> dict:
+        adv_requests=24, adversarial=True, faults=True) -> dict:
     report = {"slots": SLOTS, "prompt_len": PROMPT_LEN,
               "gen_tokens": GEN_TOKENS, "beam": BEAM,
               "n_requests": n_requests, "rate_rps": rate, "sweep": {}}
@@ -473,32 +586,49 @@ def run(csv_rows: list, c_values=(1024, 32768, 262144), n_requests=24,
 
     # Multi-tenant features under adversarial traffic (independent of C:
     # sharing/speculation/scheduling are pool- and scheduler-level).
-    cfg, hcfg, params, head_state = _setup(c_values[0])
-    adv = _adversarial(cfg, hcfg, params, head_state, c_values[0], reg,
-                       n_requests=adv_requests)
-    report["adversarial"] = adv
-    sh, sp, sc = adv["sharing"], adv["spec"], adv["sched"]
-    csv_rows.append((
-        "engine/adversarial/sharing", 0.0,
-        f"concurrency=x{sh['concurrency_gain']:.1f} "
-        f"({sh['shared-cow']['max_concurrent']} vs "
-        f"{sh['fifo-noshare']['max_concurrent']} at "
-        f"{sh['shared-cow']['n_pages']} pages),"
-        f"hit_rate={sh['shared-cow']['share_hit_rate']:.2f},"
-        f"cow={sh['shared-cow']['cow_copies']},"
-        f"tokens_saved={sh['shared-cow']['prefill_tokens_saved']}"))
-    csv_rows.append((
-        "engine/adversarial/spec", 0.0,
-        f"mean_accepted={sp['mean_accepted_warm']:.2f},"
-        f"accept_rate={sp['draft_accept_rate']:.2f},"
-        f"verify_steps={sp['verify_steps_warm']}"))
-    csv_rows.append((
-        "engine/adversarial/sched", 0.0,
-        f"interactive_p99={sc['sla']['interactive_p99_ms']:.0f}ms vs "
-        f"fifo {sc['fifo']['interactive_p99_ms']:.0f}ms "
-        f"(x{sc['interactive_p99_speedup']:.1f}),"
-        f"preemptions={sc['sla']['preemptions']},"
-        f"page_grows={sc['sla']['page_grows']}"))
+    if adversarial:
+        cfg, hcfg, params, head_state = _setup(c_values[0])
+        adv = _adversarial(cfg, hcfg, params, head_state, c_values[0], reg,
+                           n_requests=adv_requests)
+        report["adversarial"] = adv
+        sh, sp, sc = adv["sharing"], adv["spec"], adv["sched"]
+        csv_rows.append((
+            "engine/adversarial/sharing", 0.0,
+            f"concurrency=x{sh['concurrency_gain']:.1f} "
+            f"({sh['shared-cow']['max_concurrent']} vs "
+            f"{sh['fifo-noshare']['max_concurrent']} at "
+            f"{sh['shared-cow']['n_pages']} pages),"
+            f"hit_rate={sh['shared-cow']['share_hit_rate']:.2f},"
+            f"cow={sh['shared-cow']['cow_copies']},"
+            f"tokens_saved={sh['shared-cow']['prefill_tokens_saved']}"))
+        csv_rows.append((
+            "engine/adversarial/spec", 0.0,
+            f"mean_accepted={sp['mean_accepted_warm']:.2f},"
+            f"accept_rate={sp['draft_accept_rate']:.2f},"
+            f"verify_steps={sp['verify_steps_warm']}"))
+        csv_rows.append((
+            "engine/adversarial/sched", 0.0,
+            f"interactive_p99={sc['sla']['interactive_p99_ms']:.0f}ms vs "
+            f"fifo {sc['fifo']['interactive_p99_ms']:.0f}ms "
+            f"(x{sc['interactive_p99_speedup']:.1f}),"
+            f"preemptions={sc['sla']['preemptions']},"
+            f"page_grows={sc['sla']['page_grows']}"))
+
+    # Degraded-mode serving under injected faults (DESIGN.md §13; like
+    # the adversarial section, independent of C).
+    if faults:
+        cfg, hcfg, params, head_state = _setup(c_values[0])
+        res = _resilience(cfg, hcfg, params, head_state, c_values[0], reg,
+                          n_requests=adv_requests)
+        report["resilience"] = res
+        st = res["degraded"]["statuses"]
+        csv_rows.append((
+            "engine/resilience", 0.0,
+            f"statuses=" + "/".join(
+                f"{k}:{st[k]}" for k in sorted(st)) + ","
+            f"shed_rate={res['shed_rate']:.2f},"
+            f"ok_p99_vs_baseline=x{res['ok_p99_vs_baseline']:.1f},"
+            f"no_leak={res['no_leak']}"))
 
     report["metrics"] = {**reg.snapshot(), **serve_metrics}
     if write_json and sweep:   # reduced/adversarial-only runs must not
@@ -522,27 +652,38 @@ def main():
                          "measures capacity, not the arrival cap)")
     ap.add_argument("--traffic", choices=["standard", "adversarial"],
                     default="standard",
-                    help="standard: full C sweep + adversarial section "
-                         "(the tracked artifact). adversarial: ONLY the "
-                         "multi-tenant adversarial section — fast "
-                         "iteration on sharing/speculation/scheduling; "
-                         "never writes BENCH_engine.json")
+                    help="standard: full C sweep + adversarial + "
+                         "resilience sections (the tracked artifact). "
+                         "adversarial: ONLY the multi-tenant adversarial "
+                         "section — fast iteration on sharing/"
+                         "speculation/scheduling; never writes "
+                         "BENCH_engine.json")
+    ap.add_argument("--faults", action="store_true",
+                    help="ONLY the resilience section (degraded-mode "
+                         "serving under an injected fault schedule, "
+                         "DESIGN.md §13) — fast iteration on shedding/"
+                         "deadline-abort/poison-isolation; never writes "
+                         "BENCH_engine.json")
     args = ap.parse_args()
     adversarial_only = args.traffic == "adversarial"
-    c_values = ((1024,) if adversarial_only
+    faults_only = args.faults
+    partial = adversarial_only or faults_only
+    c_values = ((1024,) if partial
                 else (1024, 4096) if args.quick
                 else (1024, 32768, 262144))
 
     rows: list = []
-    # --quick / --traffic adversarial are partial runs: never clobber the
-    # tracked full-sweep JSON.
+    # --quick / --traffic adversarial / --faults are partial runs: never
+    # clobber the tracked full-sweep JSON.
     report = run(rows, c_values=c_values, n_requests=args.n_requests,
-                 rate=args.rate, sweep=not adversarial_only,
-                 write_json=not (args.quick or adversarial_only))
+                 rate=args.rate, sweep=not partial,
+                 adversarial=not faults_only,
+                 faults=not adversarial_only,
+                 write_json=not (args.quick or partial))
     print("name,us_per_request,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
-    if not adversarial_only:
+    if not partial:
         top = report["sweep"][str(c_values[-1])]
         pvm = top["paged-vs-monolithic"]
         print(f"\nC={c_values[-1]}: engine-beam is "
@@ -556,14 +697,24 @@ def main():
               f"{pvm['monolithic']['max_concurrent']} peak concurrent "
               f"requests (x{pvm['concurrency_gain']:.1f}), "
               f"x{pvm['throughput_gain']:.2f} request throughput")
-    adv = report["adversarial"]
-    print(f"\nadversarial: COW sharing packs "
-          f"x{adv['sharing']['concurrency_gain']:.1f} the peak concurrent "
-          f"requests at equal device bytes (target >= 2x); warm "
-          f"speculative decode accepts "
-          f"{adv['spec']['mean_accepted_warm']:.2f} draft tokens/verify "
-          f"step (target > 1); SLA scheduling cuts interactive p99 to "
-          f"1/{adv['sched']['interactive_p99_speedup']:.1f} of FIFO's")
+    if not faults_only:
+        adv = report["adversarial"]
+        print(f"\nadversarial: COW sharing packs "
+              f"x{adv['sharing']['concurrency_gain']:.1f} the peak "
+              f"concurrent requests at equal device bytes (target >= 2x); "
+              f"warm speculative decode accepts "
+              f"{adv['spec']['mean_accepted_warm']:.2f} draft tokens/"
+              f"verify step (target > 1); SLA scheduling cuts interactive "
+              f"p99 to 1/{adv['sched']['interactive_p99_speedup']:.1f} "
+              f"of FIFO's")
+    if not adversarial_only:
+        res = report["resilience"]
+        st = res["degraded"]["statuses"]
+        print(f"\nresilience: under the injected fault schedule every "
+              f"request ended explicitly ("
+              + ", ".join(f"{st[k]} {k}" for k in sorted(st))
+              + f"), no_leak={res['no_leak']}; ok-class p99 "
+              f"x{res['ok_p99_vs_baseline']:.1f} the fault-free baseline")
 
 
 if __name__ == "__main__":

@@ -90,11 +90,25 @@ def smoke_engine():
         assert "interactive_p99_ms" in sched[side], sched
         assert "per_class" in sched[side], sched
     assert sched["sla"]["preemptions"] >= 0, sched
+    # Resilience section (DESIGN.md §13): graceful degradation under the
+    # injected fault schedule — explicit statuses, no resource leak, the
+    # poisoned prefill actually surfaced as status="error".
+    res = report["resilience"]
+    assert res["no_leak"], res
+    st = res["degraded"]["statuses"]
+    assert set(st) <= {"ok", "error", "deadline", "shed"}, st
+    assert sum(st.values()) == 8, st       # every request accounted for
+    assert st.get("error", 0) >= 1, st     # injected poison showed up
+    assert res["degraded"]["n_ok"] >= 1, res
+    assert 0.0 <= res["shed_rate"] <= 1.0, res
+    for side in ("baseline", "degraded"):
+        assert "latency_p99_ms" in res[side], res
+    assert isinstance(res["plan"], list) and res["plan"], res
     _check_metrics("bench_engine", report, "bench/engine/")
     # The merged serve/* view from the last driven engine rides along.
     assert report["metrics"]["serve/ttft_s"]["count"] > 0
     print(f"smoke: bench_engine OK ({len(report['sweep'])} C values "
-          f"+ adversarial)")
+          f"+ adversarial + resilience)")
 
 
 def smoke_tree_fit():

@@ -1,4 +1,5 @@
 from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
-                                         save_checkpoint)
+                                         save_checkpoint, verify_checkpoint)
 
-__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]
+__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint",
+           "verify_checkpoint"]

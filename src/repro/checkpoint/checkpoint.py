@@ -14,6 +14,12 @@ Design points for 1000+ nodes:
     written on mesh A restores onto mesh B of any shape — this is the
     elastic-rescale path (tested in tests/test_checkpoint.py).
   * Garbage collection: keep the newest ``keep`` checkpoints.
+  * Integrity (DESIGN.md §13): the manifest records a CRC32 per leaf;
+    :func:`verify_checkpoint` re-hashes the files, and both
+    :func:`latest_step` and :func:`restore_checkpoint` (``step=None``)
+    skip unverifiable entries — a corrupt or truncated newest checkpoint
+    degrades to the newest *verifiable* one instead of a crash or, worse,
+    a silent restore of bad bytes.
 """
 from __future__ import annotations
 
@@ -21,10 +27,13 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any, Optional, Tuple
+import zlib
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.resilience import faults
 
 MANIFEST = "manifest.json"
 LATEST = "LATEST"
@@ -77,14 +86,23 @@ def save_checkpoint(directory: str, step: int, tree: Any,
                             "dtype": str(np.asarray(a).dtype)}
                            for a in host_leaves]}
         for i, arr in enumerate(host_leaves):
-            np.save(os.path.join(tmp, f"arr_{i:05d}.npy"),
-                    _to_savable(np.asarray(arr)))
+            savable = _to_savable(np.asarray(arr))
+            meta["leaves"][i]["crc32"] = int(
+                zlib.crc32(np.ascontiguousarray(savable).tobytes()))
+            np.save(os.path.join(tmp, f"arr_{i:05d}.npy"), savable)
+        # Site "checkpoint/write": arrays are on disk but the manifest —
+        # the commit record — is not. A kill held here leaves an
+        # unverifiable tmp dir that restore must ignore.
+        faults.fire("checkpoint/write")
         with open(os.path.join(tmp, MANIFEST), "w") as f:
             json.dump(meta, f)
             f.flush()
             os.fsync(f.fileno())
         if os.path.exists(final):
             shutil.rmtree(final)
+        # Site "checkpoint/commit": the last instant at which a kill
+        # loses this checkpoint entirely (tmp never renamed).
+        faults.fire("checkpoint/commit")
         os.rename(tmp, final)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
@@ -109,16 +127,67 @@ def _gc(directory: str, keep: int):
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
-def latest_step(directory: str) -> Optional[int]:
+def verify_checkpoint(path: str) -> bool:
+    """True iff ``path`` is a complete, uncorrupted checkpoint dir: the
+    manifest parses, every leaf file exists with the recorded shape, and
+    (for manifests that carry them — older ones don't) every CRC32
+    matches. Never raises on damage; damage is the expected input."""
+    try:
+        with open(os.path.join(path, MANIFEST)) as f:
+            meta = json.load(f)
+        leaves = meta["leaves"]
+        if meta["n_leaves"] != len(leaves):
+            return False
+        for i, info in enumerate(leaves):
+            arr = np.load(os.path.join(path, f"arr_{i:05d}.npy"))
+            if list(arr.shape) != list(info["shape"]):
+                return False
+            crc = info.get("crc32")
+            if crc is not None and zlib.crc32(
+                    np.ascontiguousarray(arr).tobytes()) != crc:
+                return False
+        return True
+    except Exception:
+        return False
+
+
+def _step_dirs(directory: str, prefix: str = "step_") -> List[int]:
+    """All checkpoint steps present on disk (complete or not), descending."""
+    steps = []
+    if os.path.isdir(directory):
+        for name in os.listdir(directory):
+            if name.startswith(prefix):
+                try:
+                    steps.append(int(name[len(prefix):]))
+                except ValueError:
+                    continue
+    return sorted(steps, reverse=True)
+
+
+def latest_step(directory: str, verify: bool = True) -> Optional[int]:
+    """Newest restorable step. Prefers the LATEST pointer; if its target
+    is missing or unverifiable (or the pointer itself is gone), falls
+    back to the newest ``step_*`` dir that verifies — one bad artifact
+    degrades the restore point, it doesn't erase the history."""
+    candidates: List[int] = []
     ptr = os.path.join(directory, LATEST)
-    if not os.path.exists(ptr):
-        return None
-    with open(ptr) as f:
-        name = f.read().strip()
-    path = os.path.join(directory, name)
-    if not os.path.exists(os.path.join(path, MANIFEST)):
-        return None
-    return int(name.split("_")[1])
+    if os.path.exists(ptr):
+        with open(ptr) as f:
+            name = f.read().strip()
+        try:
+            candidates.append(int(name.split("_")[1]))
+        except (IndexError, ValueError):
+            pass
+    for s in _step_dirs(directory):
+        if s not in candidates:
+            candidates.append(s)
+    for s in candidates:
+        path = os.path.join(directory, f"step_{s:08d}")
+        if not os.path.exists(os.path.join(path, MANIFEST)):
+            continue
+        if not verify or verify_checkpoint(path):
+            return s
+    return None
 
 
 def restore_checkpoint(directory: str, tree_like: Any,
@@ -128,12 +197,19 @@ def restore_checkpoint(directory: str, tree_like: Any,
     """Restore into the structure of `tree_like`. If `shardings` (a pytree
     of jax.sharding.Sharding matching tree_like) is given, leaves are
     device_put with those shardings — this is how a checkpoint moves onto a
-    *different* mesh (elastic restart)."""
+    *different* mesh (elastic restart).
+
+    With ``step=None`` the restore point is the newest *verifiable*
+    checkpoint (corrupt/truncated entries are skipped); an explicit
+    ``step`` that fails verification raises rather than returning bad
+    bytes."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
     path = os.path.join(directory, f"{prefix}{step:08d}")
+    if not verify_checkpoint(path):
+        raise IOError(f"checkpoint {path} failed integrity verification")
     with open(os.path.join(path, MANIFEST)) as f:
         meta = json.load(f)
     leaves_like, treedef = jax.tree.flatten(tree_like)

@@ -5,6 +5,14 @@ global batch from (num_hosts, host_id) — no cross-host coordination, fully
 deterministic from (seed, step), so checkpoint/restart only needs the step
 counter (the loader itself is stateless). A small background-thread prefetch
 queue overlaps host-side generation with device compute.
+
+Failure semantics (DESIGN.md §13): the producer thread never dies
+silently. An exception in ``make_batch`` is captured and re-raised in the
+*consumer* at the next ``__iter__`` pull — the training loop sees the
+real error instead of hanging forever on an empty queue. ``close()``
+reports whether the producer actually exited: if the join times out, the
+loader is marked ``failed`` and keeps the thread reference (a leaked
+thread you can see beats one that silently vanished).
 """
 from __future__ import annotations
 
@@ -13,6 +21,12 @@ import threading
 from typing import Callable, Iterator, Optional
 
 import numpy as np
+
+from repro.resilience import faults
+
+
+class ProducerError(RuntimeError):
+    """The prefetch producer died; ``__cause__`` is the original error."""
 
 
 class HostShardedLoader:
@@ -32,6 +46,10 @@ class HostShardedLoader:
         self._q: Optional[queue.Queue] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
+        # True when close() could not join the producer within its grace
+        # period — the loader refuses to restart until recreated.
+        self.failed = False
 
     # -- host slicing -----------------------------------------------------
     def _slice(self, batch: dict) -> dict:
@@ -43,32 +61,68 @@ class HostShardedLoader:
 
     def _produce(self):
         step = self._step
-        while not self._stop.is_set():
-            item = (step, self._slice(self._make(step)))
+        try:
             while not self._stop.is_set():
-                try:
-                    self._q.put(item, timeout=0.1)
-                    break
-                except queue.Full:
-                    continue
-            step += 1
+                faults.fire("data/produce")
+                item = (step, self._slice(self._make(step)))
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                step += 1
+        except BaseException as e:
+            # Park the error, then unblock a consumer waiting on get():
+            # the sentinel loses races against in-flight items but the
+            # consumer re-checks _error on every pull.
+            self._error = e
+            try:
+                self._q.put_nowait(None)
+            except queue.Full:
+                pass
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            self._stop.set()
+            raise ProducerError(
+                f"prefetch producer died: {err!r}") from err
 
     # -- iteration --------------------------------------------------------
     def __iter__(self) -> Iterator[tuple]:
         if self._prefetch > 0:
+            assert not self.failed, \
+                "loader previously failed to shut down; recreate it"
             self._q = queue.Queue(maxsize=self._prefetch)
             self._stop.clear()
+            self._error = None
             self._thread = threading.Thread(target=self._produce,
                                             daemon=True)
             self._thread.start()
             try:
                 while True:
-                    yield self._q.get()
+                    try:
+                        # Timed get: if the death sentinel lost its race
+                        # against a full queue, the next timeout notices
+                        # the parked error instead of blocking forever.
+                        item = self._q.get(timeout=0.5)
+                    except queue.Empty:
+                        self._raise_if_failed()
+                        continue
+                    if item is None:        # producer's death sentinel
+                        self._raise_if_failed()
+                        continue
+                    # Batches produced before the failure still flow —
+                    # the error surfaces once the queue runs dry, so a
+                    # crash at step N never swallows steps < N.
+                    yield item
             finally:
                 self.close()
         else:
             step = self._step
             while True:
+                faults.fire("data/produce")
                 yield step, self._slice(self._make(step))
                 step += 1
 
@@ -82,7 +136,12 @@ class HostShardedLoader:
                 pass
         if self._thread is not None:
             self._thread.join(timeout=2.0)
-            self._thread = None
+            if self._thread.is_alive():
+                # Producer wedged past the grace period: keep the handle
+                # and poison the loader instead of silently leaking.
+                self.failed = True
+            else:
+                self._thread = None
 
     def seek(self, step: int):
         """Restart-safe: position the stream at `step` (post-restore)."""

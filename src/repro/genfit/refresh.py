@@ -29,65 +29,120 @@ import time
 from typing import Any, Callable, Optional, Tuple
 
 from repro.obs import NULL_REGISTRY
+from repro.resilience import faults
 
 SNAP_PREFIX = "gensnap_"
 
 
+class RefreshTimeout(TimeoutError):
+    """The watchdog gave up on a hung background fit."""
+
+
+class _Job:
+    """One submission's private result slots. The worker writes only to
+    its own job, so a hung thread abandoned by the watchdog can never
+    clobber a *later* submission's state when it finally wakes up."""
+
+    __slots__ = ("result", "error", "done", "step", "thread", "wall_s")
+
+    def __init__(self, step: int):
+        self.result: Any = None
+        self.error: Optional[BaseException] = None
+        self.done = False
+        self.step = step
+        self.thread: Optional[threading.Thread] = None
+        self.wall_s: Optional[float] = None
+
+
 class AsyncRefresher:
-    """One-in-flight background fit with exception propagation.
+    """One-in-flight background fit with retries, a hang watchdog, and
+    exception propagation (DESIGN.md §13 genfit degradation ladder).
 
     ``submit(state, step)`` starts ``fit_fn(state)`` on a worker thread;
-    ``result()`` joins and returns (or re-raises the worker's exception at
-    the swap point, where the caller can actually handle it). jax arrays
-    are immutable, so the snapshot needs no copying; XLA releases the GIL
-    during execution, so training steps overlap the fit on CPU too.
+    the worker retries transient failures ``retries`` times with
+    exponential backoff (``backoff_s * 2**attempt``) before recording the
+    last error. ``result()`` joins — bounded by ``timeout_s`` when set —
+    and returns, or raises: the worker's final exception for a failed
+    fit, :class:`RefreshTimeout` for a hung one (the stuck daemon thread
+    is abandoned, not joined; per-job result slots keep it harmless).
+    The *caller* decides what failure means — the training loop keeps
+    the stale generator and re-arms the SNR trigger rather than dying.
+
+    jax arrays are immutable, so the snapshot needs no copying; XLA
+    releases the GIL during execution, so training steps overlap the fit
+    on CPU too.
     """
 
-    def __init__(self, fit_fn: Callable[[Any], Any]):
+    def __init__(self, fit_fn: Callable[[Any], Any], retries: int = 0,
+                 backoff_s: float = 0.05,
+                 timeout_s: Optional[float] = None):
         self._fit_fn = fit_fn
-        self._thread: Optional[threading.Thread] = None
-        self._result: Any = None
-        self._error: Optional[BaseException] = None
-        self._submit_step: Optional[int] = None
+        self._retries = retries
+        self._backoff_s = backoff_s
+        self._timeout_s = timeout_s
+        self._job: Optional[_Job] = None
+        self._last_step: Optional[int] = None
         # Wall time of the most recently *completed* fit (None until one
         # finishes) — the `fit_wall_s` field of the gen_swap event.
         self.last_fit_seconds: Optional[float] = None
 
     @property
     def in_flight(self) -> bool:
-        return self._thread is not None
+        return self._job is not None
 
     @property
     def submit_step(self) -> Optional[int]:
-        return self._submit_step
+        # Survives result()/failure so the failure handler can name the
+        # submission it is cleaning up after.
+        return self._job.step if self._job is not None else self._last_step
 
     def submit(self, state, step: int) -> None:
-        assert self._thread is None, "refresh already in flight"
-        self._result, self._error, self._submit_step = None, None, step
+        assert self._job is None, "refresh already in flight"
+        job = _Job(step)
 
         def work():
             t0 = time.perf_counter()
-            try:
-                self._result = self._fit_fn(state)
-                self.last_fit_seconds = time.perf_counter() - t0
-            except BaseException as e:        # re-raised at the swap
-                self._error = e
+            for attempt in range(self._retries + 1):
+                try:
+                    # Site "genfit/fit": one invocation per *attempt*, so
+                    # a scheduled transient raise is absorbed by a retry.
+                    faults.fire("genfit/fit")
+                    job.result = self._fit_fn(state)
+                    job.wall_s = time.perf_counter() - t0
+                    self.last_fit_seconds = job.wall_s
+                    job.error = None
+                    break
+                except BaseException as e:    # surfaced via result()
+                    job.error = e
+                    if attempt < self._retries:
+                        time.sleep(self._backoff_s * (2 ** attempt))
+            job.done = True
 
-        self._thread = threading.Thread(
+        job.thread = threading.Thread(
             target=work, name=f"gen-refresh@{step}", daemon=True)
-        self._thread.start()
+        self._job = job
+        self._last_step = step
+        job.thread.start()
 
     def ready(self) -> bool:
-        return self._thread is not None and not self._thread.is_alive()
+        return self._job is not None and self._job.done
 
     def result(self) -> Tuple[Any, int]:
         """Join the worker and return (head_state, submit_step)."""
-        assert self._thread is not None, "no refresh in flight"
-        self._thread.join()
-        self._thread = None
-        if self._error is not None:
-            raise self._error
-        return self._result, self._submit_step
+        job = self._job
+        assert job is not None, "no refresh in flight"
+        job.thread.join(self._timeout_s)
+        if not job.done and job.thread.is_alive():
+            # Hung fit: abandon the daemon thread (its writes land in
+            # its own job, now unreachable) and report the watchdog.
+            self._job = None
+            raise RefreshTimeout(
+                f"generator fit submitted at step {job.step} exceeded "
+                f"watchdog timeout {self._timeout_s}s")
+        self._job = None
+        if job.error is not None:
+            raise job.error
+        return job.result, job.step
 
 
 def refresh_on_snr(step: int, fit_step: int, snr_ewma: float,

@@ -118,15 +118,18 @@ def run_engine(args, cfg, mesh, params, head_state, hcfg):
         cache_dtype=jnp.bfloat16,
         prefix_sharing=args.prefix_sharing,
         spec_decode=args.spec_decode, max_draft=args.max_draft,
-        preemption=args.preemption, page_growth=args.page_growth),
+        preemption=args.preemption, page_growth=args.page_growth,
+        max_queue=args.max_queue,
+        enforce_deadlines=args.enforce_deadlines),
         exporter=exporter, metrics_interval=args.metrics_interval)
     metrics_server = None
     if args.metrics_port is not None:
         from repro.obs import start_metrics_server
         metrics_server = start_metrics_server(engine.registry,
-                                              args.metrics_port)
+                                              args.metrics_port,
+                                              health_fn=engine.health)
         print(f"metrics endpoint: http://0.0.0.0:{metrics_server.port}"
-              "/metrics")
+              "/metrics (+ /healthz, /readyz)")
     if args.profile_dir:
         engine.registry.annotate = True     # spans label the trace
     prompts = jax.random.randint(jax.random.PRNGKey(2),
@@ -235,6 +238,14 @@ def main():
                     help="KV page policy: worst-case reservation at "
                          "admission vs on-demand growth at page "
                          "boundaries")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="shed (reject with status='shed') submissions "
+                         "once this many requests are pending (0 = "
+                         "unbounded queue)")
+    ap.add_argument("--enforce-deadlines", action="store_true",
+                    help="abort queued/active requests whose deadline_s "
+                         "expired (status='deadline'), reclaiming their "
+                         "lanes and pages")
     args = ap.parse_args()
 
     from repro.launch.mesh import make_host_mesh

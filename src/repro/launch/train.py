@@ -104,6 +104,25 @@ def main():
                          "this path")
     ap.add_argument("--metrics-interval", type=int, default=1,
                     help="emit a 'step' JSONL event every N steps")
+    ap.add_argument("--nonfinite-policy", default="skip",
+                    choices=("skip", "raise"),
+                    help="on a non-finite loss: 'skip' drops the update "
+                         "in-graph and counts it (train/nonfinite_skipped"
+                         "), escalating to rollback-restore after "
+                         "--max-consecutive-nonfinite skips; 'raise' "
+                         "fails fast (DESIGN.md §13)")
+    ap.add_argument("--max-consecutive-nonfinite", type=int, default=3)
+    ap.add_argument("--max-rollbacks", type=int, default=2,
+                    help="rollback-restores allowed per run before the "
+                         "loop gives up with FloatingPointError")
+    ap.add_argument("--gen-fit-retries", type=int, default=2,
+                    help="transient generator-fit failures absorbed by "
+                         "retry (exponential backoff) before the loop "
+                         "keeps the stale generator")
+    ap.add_argument("--gen-fit-timeout", type=float, default=None,
+                    help="watchdog seconds for a background fit; a hung "
+                         "fit is abandoned and the stale generator kept "
+                         "(default: wait forever)")
     ap.add_argument("--profile-dir", default=None,
                     help="capture a jax.profiler trace of a few "
                          "steady-state steps into this directory (host "
@@ -148,10 +167,13 @@ def main():
               f"{args.sampler})")
 
     donate = (0,)
-    train_step = jax.jit(make_train_step(cfg, hcfg, opt,
-                                         head_update=args.head_update,
-                                         head_kernel=args.head_kernel,
-                                         mesh=mesh, sampler=sampler),
+    # skip_nonfinite puts the accept/reject select inside the jitted step
+    # (donation invalidates the old buffers, so the guard cannot live in
+    # Python) — the loop's degradation ladder builds on it.
+    train_step = jax.jit(make_train_step(
+        cfg, hcfg, opt, head_update=args.head_update,
+        head_kernel=args.head_kernel, mesh=mesh, sampler=sampler,
+        skip_nonfinite=(args.nonfinite_policy == "skip")),
                          in_shardings=(state_sh, batch_sh, None),
                          out_shardings=(state_sh, None),
                          donate_argnums=donate)
@@ -179,7 +201,13 @@ def main():
                       snr_patience=args.snr_patience,
                       metrics_jsonl=args.metrics_jsonl,
                       metrics_interval=args.metrics_interval,
-                      profile_dir=args.profile_dir)
+                      profile_dir=args.profile_dir,
+                      nonfinite_policy=args.nonfinite_policy,
+                      max_consecutive_nonfinite=(
+                          args.max_consecutive_nonfinite),
+                      max_rollbacks=args.max_rollbacks,
+                      gen_fit_retries=args.gen_fit_retries,
+                      gen_fit_timeout_s=args.gen_fit_timeout)
     from repro.obs import Registry, console_summary
     registry = (Registry() if (args.metrics_jsonl or args.profile_dir)
                 else None)

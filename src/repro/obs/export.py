@@ -21,8 +21,17 @@ Event types and required fields (``EVENT_SCHEMA``):
                    ``new_fit_step``, ``fit_wall_s``,
                    ``steps_stale_at_swap``).
 * ``request``    — one served request: queue wait, TTFT, total latency.
+                   Requests terminated by the resilience paths (deadline
+                   abort / poison isolation) carry ``status`` and null
+                   out whichever of the latency triple never happened.
 * ``serve_step`` — engine-iteration sample: queue depth, active lanes,
                    page occupancy.
+* ``nonfinite_skip`` / ``rollback_restore`` — train-loop degradation
+                   ladder (DESIGN.md §13): a skipped non-finite step;
+                   a rollback-restore to ``restored_step``.
+* ``gen_refresh_failed`` — a generator fit that exhausted its retries or
+                   hung past the watchdog; the loop kept the stale
+                   generator and re-armed the SNR trigger.
 * ``summary``    — final registry snapshot (one per run, last line).
 """
 from __future__ import annotations
@@ -38,7 +47,10 @@ EVENT_SCHEMA: Dict[str, tuple] = {
     "gen_submit": ("step",),
     "gen_swap": ("step", "old_fit_step", "new_fit_step", "fit_wall_s",
                  "steps_stale_at_swap"),
+    "gen_refresh_failed": ("step", "submit_step", "reason"),
     "snr_trigger": ("step",),
+    "nonfinite_skip": ("step", "streak"),
+    "rollback_restore": ("step", "restored_step"),
     "request": ("request_id", "tokens", "admission_wait_s", "ttft_s",
                 "latency_s"),
     "serve_step": ("engine_step", "queue_depth", "active",
@@ -152,10 +164,19 @@ class MetricsServer:
     Python counters, so a torn read costs at worst one stale sample,
     never a crash. ``port=0`` binds an ephemeral port (tests); the bound
     port is on ``.port``.
+
+    With ``health_fn`` (a zero-arg callable returning a JSON-able dict,
+    e.g. ``Engine.health``) the server also answers the standard probe
+    pair: ``/healthz`` — 200 with the snapshot whenever the process can
+    answer at all (liveness); ``/readyz`` — 200 iff the snapshot's
+    ``ready`` field is truthy, 503 otherwise (readiness: model compiled
+    and the queue below the shed threshold), so a load balancer stops
+    routing to a saturated or still-compiling engine without killing it.
+    Without ``health_fn`` both paths 404 as before.
     """
 
     def __init__(self, registry: Registry, port: int,
-                 host: str = "0.0.0.0"):
+                 host: str = "0.0.0.0", health_fn=None):
         import http.server
         import threading
 
@@ -163,13 +184,31 @@ class MetricsServer:
 
         class Handler(http.server.BaseHTTPRequestHandler):
             def do_GET(self):              # noqa: N802 (stdlib API name)
-                if self.path.split("?")[0] not in ("/", "/metrics"):
+                path = self.path.split("?")[0]
+                if health_fn is not None and path in ("/healthz",
+                                                      "/readyz"):
+                    try:
+                        snap = health_fn()
+                    except Exception as e:
+                        self._reply(500, json.dumps(
+                            {"error": repr(e)}).encode(),
+                            "application/json")
+                        return
+                    code = (200 if path == "/healthz"
+                            or snap.get("ready") else 503)
+                    self._reply(code, json.dumps(
+                        snap, sort_keys=True).encode(),
+                        "application/json")
+                    return
+                if path not in ("/", "/metrics"):
                     self.send_error(404)
                     return
-                body = prometheus_text(reg).encode()
-                self.send_response(200)
-                self.send_header("Content-Type",
-                                 "text/plain; version=0.0.4")
+                self._reply(200, prometheus_text(reg).encode(),
+                            "text/plain; version=0.0.4")
+
+            def _reply(self, code, body, ctype):
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
                 self.send_header("Content-Length", str(len(body)))
                 self.end_headers()
                 self.wfile.write(body)
@@ -196,11 +235,13 @@ class MetricsServer:
 
 
 def start_metrics_server(registry: Registry, port: int,
-                         host: str = "0.0.0.0") -> MetricsServer:
+                         host: str = "0.0.0.0",
+                         health_fn=None) -> MetricsServer:
     """Serve ``registry`` as Prometheus text on ``http://host:port/metrics``
     from a daemon thread. Returns the running server (``.port`` holds the
-    bound port; ``.close()`` stops it)."""
-    return MetricsServer(registry, port, host)
+    bound port; ``.close()`` stops it). With ``health_fn`` the server also
+    answers ``/healthz`` and ``/readyz`` (see :class:`MetricsServer`)."""
+    return MetricsServer(registry, port, host, health_fn=health_fn)
 
 
 def console_summary(registry: Registry, title: str = "metrics") -> str:

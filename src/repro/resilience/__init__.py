@@ -1,0 +1,17 @@
+"""repro.resilience — deterministic fault injection + degradation policies.
+
+``faults`` is the injection substrate (DESIGN.md §13): named sites,
+seeded (site, nth-call) → raise/hang/corrupt/delay schedules, context-
+manager scoped, null-cost when disabled. The graceful-degradation
+policies themselves live where the state lives — skip/rollback in
+``train.loop``, retry/keep-stale in ``genfit.refresh``, shed/deadline/
+poison-isolation in ``serve.engine``, verify-and-fall-back in
+``checkpoint`` — this package only provides the levers that let the
+chaos suite prove they work.
+"""
+from repro.resilience.faults import (Fault, FaultPlan, FaultRegistry,
+                                     InjectedFault, active, fire, inject,
+                                     install, poison, random_plan)
+
+__all__ = ["Fault", "FaultPlan", "FaultRegistry", "InjectedFault",
+           "active", "fire", "inject", "install", "poison", "random_plan"]

@@ -72,6 +72,7 @@ from repro.models.config import ModelConfig
 from repro.models import transformer
 from repro.obs import JsonlExporter, Registry
 from repro.obs.trace import span
+from repro.resilience import faults
 from repro.serve.cache_pool import PagedPool
 from repro.serve.candidate_cache import CandidateCache
 from repro.serve.prefix_index import PrefixIndex
@@ -160,6 +161,15 @@ class ServeConfig:
     #                               prompt-size pages, grow at page
     #                               boundaries (evict/preempt/spill-self
     #                               when the free list runs dry)
+    # -- resilience knobs (DESIGN.md §13). Both default OFF/legacy. --
+    max_queue: int = 0            # bounded admission queue: submit()
+    #                               beyond this depth returns a handle
+    #                               with status="shed" instead of
+    #                               enqueueing (0 = unbounded legacy)
+    enforce_deadlines: bool = False  # abort requests past deadline_s —
+    #                               queued ones are rejected, running
+    #                               ones reclaim their lane + pages
+    #                               mid-decode (legacy: advisory only)
 
 
 @dataclasses.dataclass
@@ -180,13 +190,22 @@ class Request:
 
 class ResultStream:
     """Streaming handle: ``tokens`` grows as the engine decodes; ``done``
-    flips on retirement. Timestamps are perf_counter seconds."""
+    flips on retirement. Timestamps are perf_counter seconds.
+
+    ``status`` reports how the request ended (DESIGN.md §13):
+    ``"ok"`` — completed normally; ``"shed"`` — rejected at submit by the
+    bounded admission queue; ``"deadline"`` — aborted past its
+    ``deadline_s`` (under ``enforce_deadlines``); ``"error"`` — its
+    prefill raised and the request was failed in isolation. Every
+    non-"ok" terminal sets ``done`` with whatever tokens were produced.
+    """
 
     def __init__(self, request: Request, request_id: int, now: float):
         self.request = request
         self.request_id = request_id
         self.tokens: List[int] = []
         self.done = False
+        self.status = "ok"
         self.submitted_at = now
         self.admitted_at: Optional[float] = None
         self.first_token_at: Optional[float] = None
@@ -315,6 +334,11 @@ class Engine:
         self.page_grows = 0
         self.deadline_misses = 0
         self._class_hists: Dict[int, Any] = {}
+        # resilience counters (DESIGN.md §13)
+        self.shed_count = 0          # submits rejected by the queue bound
+        self.deadline_aborts = 0     # requests aborted past deadline_s
+        self.poisoned_count = 0      # requests failed in isolation
+        self._compiled = False       # first launch done (readiness gate)
 
         # Per-priority FIFO queues (higher class admits first; a blocked
         # class blocks everything below it — no sneaking past a starved
@@ -414,6 +438,19 @@ class Engine:
         handle._eos = (request.eos_id if request.eos_id is not None
                        else self.scfg.eos_id)
         self._next_id += 1
+        if (self.scfg.max_queue
+                and self.num_pending >= self.scfg.max_queue):
+            # Bounded admission: shed with an explicit status instead of
+            # growing the queue without limit. The caller gets a DONE
+            # handle it can retry against a less-loaded replica; latency
+            # percentiles stay meaningful because the queue cannot hide
+            # unbounded wait behind them.
+            handle.status = "shed"
+            handle.done = True
+            handle.finished_at = handle.submitted_at
+            self.shed_count += 1
+            self.registry.counter("serve/shed").inc()
+            return handle
         self._queues.setdefault(handle.priority, deque()).append(handle)
         self._g_queue.set(self.num_pending)
         return handle
@@ -454,9 +491,20 @@ class Engine:
     def step(self) -> bool:
         """One admit → decode → select → retire iteration. Returns False
         when there was nothing to do (idle engine)."""
+        # Site "serve/step": a delay here models a straggling iteration
+        # (deadline pressure); a raise reaches the driver before any
+        # state mutates, so the engine stays consistent.
+        faults.fire("serve/step")
+        if self.scfg.enforce_deadlines:
+            self._abort_expired()
         self._admit()
         if not self._active:
-            return False
+            # Not necessarily idle: if every request admitted this round
+            # was terminated (poisoned prefill), the queue may still hold
+            # work — report it so run() keeps driving. With no active
+            # lanes all resources are free, so the next _admit always
+            # makes progress.
+            return self.num_pending > 0
         if self.scfg.spec_decode:
             self._spec_decode_and_retire()
         else:
@@ -503,6 +551,29 @@ class Engine:
                 np.full((r, pool.max_pages), pool.sink, np.int32))
             pool.swap_cache(new_cache)
         return len(shapes)
+
+    def health(self) -> dict:
+        """Cheap liveness/readiness snapshot (the /healthz payload and
+        ``stats()["health"]``). ``ready`` is the /readyz gate: the model
+        has compiled (first prefill/decode launch done — before that a
+        request would stall seconds on XLA) and the queue is below the
+        shed threshold (an engine that would shed the next submit is not
+        ready for more traffic)."""
+        qd = self.num_pending
+        return {
+            "compiled": self._compiled,
+            "queue_depth": qd,
+            "active": len(self._active),
+            "pages_free": self.pool.num_free_pages,
+            "lanes_free": self.pool.num_free_lanes,
+            "shed": self.shed_count,
+            "poisoned": self.poisoned_count,
+            "deadline_aborts": self.deadline_aborts,
+            "deadline_misses": self.deadline_misses,
+            "ready": bool(self._compiled
+                          and (not self.scfg.max_queue
+                               or qd < self.scfg.max_queue)),
+        }
 
     def stats(self) -> dict:
         """Engine snapshot: the pre-obs keys (unchanged, for compat) plus
@@ -603,6 +674,7 @@ class Engine:
                     "hits": store.hits, "misses": store.misses,
                     "entries": len(store._map)}
             self.registry.gauge("serve/spec_mean_accepted").set(mean_acc)
+        out["health"] = self.health()
         out["sched"] = {
             "preemptions": self.preemptions,
             "restores": self.restores,
@@ -627,6 +699,71 @@ class Engine:
         return out
 
     # -- scheduler internals --------------------------------------------
+
+    def _terminate(self, h: ResultStream, status: str, now: float) -> None:
+        """Terminal non-"ok" path shared by deadline aborts and poison
+        isolation: reclaim the lane + pages if held, mark the handle
+        done, keep the audit counters honest. Refcounted shared pages
+        drop through ``pool.release`` exactly as a normal retirement
+        would, so an abort can never strand a page (the chaos suite's
+        no-leak invariant)."""
+        if h.slot is not None:
+            self._active.pop(h.slot, None)
+            self.pool.release(h.slot)
+            h.slot = None
+        h._spill = None
+        h.status = status
+        h.done = True
+        h.finished_at = now
+        if status == "deadline":
+            self.deadline_aborts += 1
+            self.deadline_misses += 1
+            self.registry.counter("serve/deadline_aborts").inc()
+        elif status == "error":
+            self.poisoned_count += 1
+            self.registry.counter("serve/poisoned").inc()
+        self.completed.append(h)
+        if self.exporter is not None:
+            self.exporter.emit({
+                "event": "request", "request_id": h.request_id,
+                "tokens": len(h.tokens), "priority": h.priority,
+                "status": status,
+                "admission_wait_s": (h.admitted_at - h.submitted_at
+                                     if h.admitted_at is not None
+                                     else None),
+                "ttft_s": (h.first_token_at - h.submitted_at
+                           if h.first_token_at is not None else None),
+                "latency_s": h.finished_at - h.submitted_at})
+
+    def _abort_expired(self) -> None:
+        """Wall-clock deadline enforcement (``enforce_deadlines``):
+        queued requests past ``deadline_s`` are rejected before wasting
+        a prefill; running lanes past theirs are aborted mid-decode,
+        reclaiming lane + pages for requests that can still make their
+        SLA. Requests without a deadline are untouched."""
+        now = time.perf_counter()
+
+        def expired(h: ResultStream) -> bool:
+            return (h.request.deadline_s is not None
+                    and now - h.submitted_at > h.request.deadline_s)
+
+        for pri in list(self._queues):
+            q = self._queues[pri]
+            kept: "deque[ResultStream]" = deque()
+            while q:
+                h = q.popleft()
+                if expired(h):
+                    self._terminate(h, "deadline", now)
+                else:
+                    kept.append(h)
+            if kept:
+                self._queues[pri] = kept
+            else:
+                del self._queues[pri]
+        for slot in list(self._active):
+            st = self._active[slot]
+            if expired(st):
+                self._terminate(st, "deadline", now)
 
     def _admit(self) -> None:
         """Class-ordered admission: scan SLA classes high→low, FIFO within
@@ -765,6 +902,8 @@ class Engine:
         whose KV bytes are already valid."""
         now = time.perf_counter()
         for h in admitted:
+            if h.done:
+                continue        # failed in isolation during its prefill
             if h.admitted_at is None:       # first admission only
                 h.admitted_at = now
                 self._h_admission.observe(now - h.submitted_at)
@@ -874,7 +1013,40 @@ class Engine:
         # Admission bookkeeping (SUBMISSION order, independent of flush
         # grouping) happens in _finish_admission after every launch.
 
+    def _screen_poison(self, handles: List[ResultStream]
+                       ) -> List[ResultStream]:
+        """Site "serve/prefill": one invocation per request entering a
+        prefill launch, so an injected raise fails exactly one request —
+        the handle is terminated with status="error", its lane + pages
+        reclaimed, and the rest of the batch proceeds."""
+        if faults.active() is None:
+            return handles
+        ok = []
+        for h in handles:
+            try:
+                faults.fire("serve/prefill")
+                ok.append(h)
+            except Exception:
+                self._terminate(h, "error", time.perf_counter())
+        return ok
+
     def _flush_prefill(self, handles: List[ResultStream]) -> None:
+        handles = self._screen_poison(handles)
+        if not handles:
+            return
+        try:
+            self._launch_prefill(handles)
+        except Exception:
+            if len(handles) == 1:
+                self._terminate(handles[0], "error", time.perf_counter())
+                return
+            # Poison isolation: the batched launch raised — re-run one
+            # request per launch so only the raiser fails and the rest
+            # of the batch prefills normally.
+            for h in handles:
+                self._flush_prefill([h])
+
+    def _launch_prefill(self, handles: List[ResultStream]) -> None:
         pool = self.pool
         n_rows, s_pad = self._prefill_shape(
             len(handles), max(h.request.prompt.size for h in handles))
@@ -895,6 +1067,7 @@ class Engine:
             #           matching the lock-step path token-for-token
             pool.swap_cache(new_cache)
         self.prefill_calls += 1
+        self._compiled = True
 
     def _flush_suffix_prefill(self, handles: List[ResultStream]) -> None:
         """Sharing-path prefill: each admitted prompt runs only its
@@ -905,11 +1078,23 @@ class Engine:
         Rows and lengths pad to powers of two; padded rows carry an
         all-sink page table and zero length (writes routed to the sink).
         """
+        handles = self._screen_poison(handles)
         pool = self.pool
         jobs = [h for h in handles
                 if h._suffix_start < h.request.prompt.size]
         if not jobs:
             return                  # fully-matched prompts: nothing to run
+        try:
+            self._launch_suffix_prefill(jobs)
+        except Exception:
+            if len(jobs) == 1:
+                self._terminate(jobs[0], "error", time.perf_counter())
+                return
+            for h in jobs:          # poison isolation, as in the full path
+                self._flush_suffix_prefill([h])
+
+    def _launch_suffix_prefill(self, jobs: List[ResultStream]) -> None:
+        pool = self.pool
         n_rows = self._bucket(len(jobs))
         s_pad = self._bucket(max(h.request.prompt.size - h._suffix_start
                                  for h in jobs))
@@ -929,6 +1114,7 @@ class Engine:
             del hid   # first output token comes from the decode step
             pool.swap_cache(new_cache)
         self.prefill_calls += 1
+        self._compiled = True
 
     def _decode_and_retire(self) -> None:
         n = self.scfg.n_slots
@@ -941,6 +1127,7 @@ class Engine:
             h, new_cache = self._decode(self.params, token, self.pool.cache,
                                         pos, self.pool.page_table)
             self.pool.swap_cache(new_cache)
+        self._compiled = True
         self.decode_steps += 1
         self._occupancy_sum += len(self._active)
         self._page_occupancy_sum += self.pool.num_mapped_pages

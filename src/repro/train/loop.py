@@ -26,6 +26,13 @@ Production behaviours, all exercised by tests:
     DESIGN.md §9). The trigger reads only checkpointed state, so resume
     replays the same trigger steps; the data-dependent submit step is
     recovered from the gensnap artifact on resume.
+  * graceful degradation (DESIGN.md §13): non-finite steps are skipped
+    (``nonfinite_policy="skip"`` + the in-graph ``skip_nonfinite`` guard)
+    and, past ``max_consecutive_nonfinite``, answered with a rollback-
+    restore from the newest verifiable checkpoint and a deterministic
+    replay; a failed or hung generator fit (retries + watchdog in
+    ``AsyncRefresher``) keeps the stale generator and re-arms the SNR
+    trigger instead of killing the run.
 """
 from __future__ import annotations
 
@@ -46,8 +53,21 @@ from repro.genfit.refresh import (AsyncRefresher, drop_snapshot,
 from repro.obs import NULL_REGISTRY, JsonlExporter, ProfileWindow, Registry
 from repro.obs.trace import span
 from repro.optim import head_state_bytes
+from repro.resilience import faults
 from repro.train.state import TrainState, snr_reset_pair
 from repro.train.step import publish_step_metrics
+
+
+def _fit_with_retries(fit_fn, state, retries: int, backoff_s: float):
+    """Blocking-fit twin of the AsyncRefresher worker's retry policy."""
+    for attempt in range(retries + 1):
+        try:
+            faults.fire("genfit/fit")
+            return fit_fn(state)
+        except Exception:
+            if attempt >= retries:
+                raise
+            time.sleep(backoff_s * (2 ** attempt))
 
 
 def _fit_snapshot(state: TrainState) -> TrainState:
@@ -94,6 +114,20 @@ class LoopConfig:
     metrics_interval: int = 1       # emit a "step" event every N steps
     profile_dir: Optional[str] = None     # jax.profiler capture dir
     profile_steps: int = 5          # steady-state steps in the capture
+    # -- resilience (DESIGN.md §13) --
+    # "skip": a non-finite step is dropped (requires the jitted step's
+    # skip_nonfinite guard for the state to survive it) and counted;
+    # after max_consecutive_nonfinite skips in a row — or immediately,
+    # when the step has no in-graph guard and the state is already
+    # poisoned — the loop rolls back to the newest verifiable
+    # checkpoint and replays. "raise" restores the legacy
+    # FloatingPointError crash.
+    nonfinite_policy: str = "skip"
+    max_consecutive_nonfinite: int = 3
+    max_rollbacks: int = 2          # rollback-restores before giving up
+    gen_fit_retries: int = 2        # transient-failure retries per fit
+    gen_fit_backoff_s: float = 0.05  # exponential backoff base
+    gen_fit_timeout_s: Optional[float] = None  # hang watchdog (None = off)
 
     def gen_due(self, step: int) -> bool:
         return (step == self.gen_warmup_steps
@@ -216,12 +250,20 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
             start_step = int(jax.device_get(state.step))
 
     # ---- re-establish an async refresh that was in flight ---------------
-    refresher: Optional[AsyncRefresher] = None
-    pending_swap: Optional[int] = None
     use_async = (gen_fit_fn is not None and cfg.gen_async
                  and cfg.gen_swap_delay > 0)
-    if use_async:
-        refresher = AsyncRefresher(gen_fit_fn)
+
+    def establish_refresh(state: TrainState, start_step: int):
+        """(Re)build the refresher + pending swap for a run (re)starting
+        at ``start_step``. Called at startup and again after a
+        rollback-restore — a rollback is a resume that never left the
+        process, so it replays the same in-flight-fit recovery."""
+        if not use_async:
+            return None, None
+        refresher = AsyncRefresher(
+            gen_fit_fn, retries=cfg.gen_fit_retries,
+            backoff_s=cfg.gen_fit_backoff_s,
+            timeout_s=cfg.gen_fit_timeout_s)
         if snr_mode:
             # SNR-triggered submits are data-dependent, so the submit step
             # cannot be recomputed from the config — recover it from the
@@ -251,9 +293,12 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
             else:
                 snap_state = _fit_snapshot(state)
             refresher.submit(snap_state, s_sub)
-            pending_swap = s_sub + cfg.gen_swap_delay
             registry.counter("genfit/submits").inc()
             emit({"event": "gen_submit", "step": s_sub, "resumed": True})
+            return refresher, s_sub + cfg.gen_swap_delay
+        return refresher, None
+
+    refresher, pending_swap = establish_refresh(state, start_step)
 
     # Head param + optimizer-state footprint (DESIGN.md §11): a static
     # function of shapes/dtypes, computed once and republished as a gauge
@@ -283,7 +328,14 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                     drop_snapshot(cfg.checkpoint_dir, s_sub)
                     snaps_to_drop.remove((s_sub, s_swap))
 
-    for step in range(start_step, cfg.total_steps):
+    # Resilience counters (DESIGN.md §13): consecutive non-finite steps
+    # and rollback-restores consumed so far.
+    nonfinite_streak = 0
+    rollbacks = 0
+    first_executed = True
+
+    step = start_step
+    while step < cfg.total_steps:
         # -- generator warmup / refresh (the paper's Step 1) --
         if gen_fit_fn is not None:
             if pending_swap is not None and step == pending_swap:
@@ -291,21 +343,40 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                 # only if the fit is still running — by construction the
                 # step is config-determined, never timing-determined).
                 old_fit = int(jax.device_get(state.gen_fit_step))
-                head, s_sub = refresher.result()
-                # Fresh generator: restart the SNR proxy EWMA and disarm
-                # the reference (re-armed snr_patience steps after the
-                # install).
-                ewma0, ref0 = snr_reset_pair()
-                state = state._replace(
-                    head_state=head,
-                    gen_fit_step=jnp.asarray(s_sub, jnp.int32),
-                    snr_ewma=ewma0, snr_ref=ref0)
-                pending_swap = None
-                history.setdefault("gen_swap_steps", []).append(step)
-                emit(swap_event(step, old_fit, s_sub,
-                                refresher.last_fit_seconds, registry))
-                if cfg.checkpoint_dir:
-                    snaps_to_drop.append((s_sub, step))
+                s_sub_val = refresher.submit_step
+                try:
+                    head, s_sub = refresher.result()
+                except Exception as e:
+                    # Degradation ladder: the fit failed (retries
+                    # exhausted) or hung (watchdog). Keep serving the
+                    # stale generator; clearing pending_swap drops the
+                    # busy latch, so the SNR trigger — whose EWMA is
+                    # still degraded against the OLD install's reference
+                    # — re-arms and fires a fresh submit on a later
+                    # step instead of the run dying at the swap.
+                    registry.counter("genfit/refresh_failed").inc()
+                    history.setdefault("gen_refresh_failed_steps",
+                                       []).append(step)
+                    emit({"event": "gen_refresh_failed", "step": step,
+                          "submit_step": s_sub_val, "reason": repr(e)})
+                    if cfg.checkpoint_dir:
+                        snaps_to_drop.append((s_sub_val, step))
+                    pending_swap = None
+                else:
+                    # Fresh generator: restart the SNR proxy EWMA and
+                    # disarm the reference (re-armed snr_patience steps
+                    # after the install).
+                    ewma0, ref0 = snr_reset_pair()
+                    state = state._replace(
+                        head_state=head,
+                        gen_fit_step=jnp.asarray(s_sub, jnp.int32),
+                        snr_ewma=ewma0, snr_ref=ref0)
+                    pending_swap = None
+                    history.setdefault("gen_swap_steps", []).append(step)
+                    emit(swap_event(step, old_fit, s_sub,
+                                    refresher.last_fit_seconds, registry))
+                    if cfg.checkpoint_dir:
+                        snaps_to_drop.append((s_sub, step))
             if snr_mode:
                 # Warmup fit is scheduled; every later refresh is
                 # triggered by the online SNR proxy degrading (the state
@@ -358,16 +429,30 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                 else:
                     old_fit = int(jax.device_get(state.gen_fit_step))
                     t_fit = time.perf_counter()
-                    new_head = gen_fit_fn(state)
-                    fit_s = time.perf_counter() - t_fit
-                    ewma0, ref0 = snr_reset_pair()
-                    state = state._replace(
-                        head_state=new_head,
-                        gen_fit_step=jnp.asarray(step, jnp.int32),
-                        snr_ewma=ewma0, snr_ref=ref0)
-                    history.setdefault("gen_swap_steps", []).append(step)
-                    registry.counter("genfit/submits").inc()
-                    emit(swap_event(step, old_fit, step, fit_s, registry))
+                    try:
+                        new_head = _fit_with_retries(
+                            gen_fit_fn, state, cfg.gen_fit_retries,
+                            cfg.gen_fit_backoff_s)
+                    except Exception as e:
+                        # Same ladder as the async swap: keep the stale
+                        # generator, record the failure, train on.
+                        registry.counter("genfit/refresh_failed").inc()
+                        history.setdefault("gen_refresh_failed_steps",
+                                           []).append(step)
+                        emit({"event": "gen_refresh_failed", "step": step,
+                              "submit_step": step, "reason": repr(e)})
+                    else:
+                        fit_s = time.perf_counter() - t_fit
+                        ewma0, ref0 = snr_reset_pair()
+                        state = state._replace(
+                            head_state=new_head,
+                            gen_fit_step=jnp.asarray(step, jnp.int32),
+                            snr_ewma=ewma0, snr_ref=ref0)
+                        history.setdefault("gen_swap_steps",
+                                           []).append(step)
+                        registry.counter("genfit/submits").inc()
+                        emit(swap_event(step, old_fit, step, fit_s,
+                                        registry))
 
         # The first executed step of THIS process pays XLA compilation —
         # a different quantity from the steady-state step time, recorded
@@ -375,12 +460,17 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
         # EWMA, and the train/step_time_s histogram (benchmarks no
         # longer hand-trim step 0). Profiling likewise starts only once
         # compilation is out of the way.
-        is_compile = step == start_step
+        is_compile = first_executed
+        first_executed = False
         if not is_compile:
             profiler.tick(step)
         t0 = time.perf_counter()
         with span("train/phase/data", registry):
             batch = batch_fn(step)
+        # Site "train/batch": a corrupt action NaN-poisons the batch so
+        # the non-finite path is exercised end to end *inside* the jitted
+        # step, not via a synthetic host-side flag.
+        batch = faults.inject("train/batch", batch)
         # Step-indexed rng (not sequential splitting): restart from a
         # checkpoint replays the exact rng stream — bit-exact recovery.
         sub = jax.random.fold_in(rng, step)
@@ -390,7 +480,16 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
         dt = time.perf_counter() - t0
 
         loss = float(jax.device_get(metrics["loss"]))
-        if not np.isfinite(loss):
+        # "nonfinite" is the in-graph skip guard's report (train/step.py
+        # skip_nonfinite): when present and set, the step already
+        # selected its pre-step state and the host sees a clean skip.
+        # A non-finite loss WITHOUT the guard means the optimizer
+        # applied poisoned gradients — only rollback can recover.
+        guarded = "nonfinite" in metrics
+        skipped = guarded and float(
+            jax.device_get(metrics["nonfinite"])) > 0
+        bad = skipped or not np.isfinite(loss)
+        if bad and cfg.nonfinite_policy != "skip":
             raise FloatingPointError(f"non-finite loss at step {step}")
         slow = False
         if is_compile:
@@ -431,6 +530,44 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
                 on_step(step, {**host_m, "step_time": dt,
                                "straggler": slow})
 
+        if bad:
+            nonfinite_streak += 1
+            registry.counter("train/nonfinite_skipped").inc()
+            history.setdefault("nonfinite_steps", []).append(step)
+            emit({"event": "nonfinite_skip", "step": step,
+                  "streak": nonfinite_streak})
+            if not guarded or nonfinite_streak >= cfg.max_consecutive_nonfinite:
+                # Rollback-restore: rewind to the newest verifiable
+                # checkpoint and replay. The data/rng streams are
+                # step-indexed, so the replay is deterministic; a
+                # persistent cause re-fires and the rollback budget
+                # converts it into the legacy crash.
+                rollbacks += 1
+                ck = (latest_step(cfg.checkpoint_dir)
+                      if cfg.checkpoint_dir else None)
+                if ck is None or rollbacks > cfg.max_rollbacks:
+                    raise FloatingPointError(
+                        f"non-finite loss at step {step} ("
+                        + ("no verifiable checkpoint to roll back to"
+                           if ck is None else
+                           f"rollback budget {cfg.max_rollbacks} "
+                           f"exhausted") + ")")
+                restored, _ = restore_checkpoint(
+                    cfg.checkpoint_dir, state.as_pytree(), step=ck)
+                state = TrainState(**restored)
+                registry.counter("train/rollbacks").inc()
+                history.setdefault("rollback_steps", []).append([step, ck])
+                emit({"event": "rollback_restore", "step": step,
+                      "restored_step": ck})
+                nonfinite_streak = 0
+                refresher, pending_swap = establish_refresh(state, ck)
+                step = ck
+                continue
+            # Clean skip (in-graph guard kept the state): fall through —
+            # checkpointing and preemption still see a valid state.
+        else:
+            nonfinite_streak = 0
+
         if snr_mode and gen_fit_fn is not None:
             # Arm the reference snr_patience steps after the install:
             # freeze the EWMA as the "healthy" level the trigger compares
@@ -457,6 +594,7 @@ def run_loop(state: TrainState, train_step: Callable, batch_fn: Callable,
             maybe_checkpoint(step + 1, force=True)
             history["preempted_at"] = step + 1
             break
+        step += 1
 
     history["stragglers"] = monitor.flagged
     profiler.stop()

@@ -46,7 +46,8 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
                     opt_cfg: OptimizerConfig, head_update: str = "auto",
                     head_kernel: bool = False, mesh=None,
                     sampler=None, snr_alpha: float = 0.1,
-                    embed_update: str = "auto"):
+                    embed_update: str = "auto",
+                    skip_nonfinite: bool = False):
     """Returns train_step(state, batch, rng) -> (state, metrics).
 
     ``head_update`` picks the head-gradient path (DESIGN.md §8):
@@ -74,6 +75,16 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
     ``head_state`` every call). ``snr_alpha`` is the EWMA weight of the
     online SNR proxy tracked in ``TrainState.snr_ewma`` for the
     SNR-driven refresh trigger (DESIGN.md §9).
+
+    ``skip_nonfinite`` arms the DESIGN.md §13 skip-step guard *inside*
+    the jitted step: when the loss (or grad norm) is non-finite, every
+    params/opt/EWMA leaf selects its pre-step value, so a poisoned batch
+    costs one wasted step instead of corrupting the run. The select must
+    live in-graph because the loop donates the input state — by the time
+    the host sees the metrics, the pre-step buffers are gone. The step
+    counter still advances (data/rng streams are step-indexed and must
+    not replay the bad batch) and ``metrics["nonfinite"]`` reports the
+    skip for the loop's counter / consecutive-skip limit.
 
     ``embed_update`` extends the sparse treatment to the *input* embedding
     (DESIGN.md §11): the token gather runs outside the trunk vjp, its
@@ -187,6 +198,15 @@ def make_train_step(cfg: ModelConfig, hcfg: HeadConfig,
                 state.snr_ewma < 0, p,
                 (1.0 - snr_alpha) * state.snr_ewma + snr_alpha * p)
             metrics["snr_ewma"] = snr_ewma
+        if skip_nonfinite:
+            ok = jnp.isfinite(metrics["loss"])
+            if "grad_norm" in metrics:
+                ok = ok & jnp.isfinite(metrics["grad_norm"])
+            sel = lambda n, o: jnp.where(ok, n, o)  # noqa: E731
+            new_params = jax.tree.map(sel, new_params, state.params)
+            new_opt = jax.tree.map(sel, new_opt, state.opt_state)
+            snr_ewma = jnp.where(ok, snr_ewma, state.snr_ewma)
+            metrics["nonfinite"] = (~ok).astype(jnp.float32)
         return TrainState(step=state.step + 1, params=new_params,
                           opt_state=new_opt,
                           head_state=state.head_state,
